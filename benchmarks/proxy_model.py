@@ -1,0 +1,78 @@
+"""Proxy accuracy substrate for the Table I-IV benchmarks.
+
+ImageNet and pretrained EfficientViT weights are unavailable offline, so
+quantization-accuracy *numbers* can't be reproduced verbatim; the *trends*
+can.  We train a reduced EfficientViT on the synthetic vision task
+(data.pipeline.SyntheticVision), cache it under results/, and measure PTQ
+accuracy deltas of each scheme on it — the orderings the paper reports
+(Table I: PoT << APoT < APoT&Uniform ~ Uniform; Table II: >=4-bit is
+accuracy-free for DWConv) are asserted by tests/test_benchmarks.py.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import REDUCED
+from repro.data.pipeline import SyntheticVision
+from repro.models import get_model
+from repro.optim.adamw import AdamW, cosine_schedule
+
+CACHE = pathlib.Path(__file__).resolve().parent.parent / "results" / \
+    "proxy_efficientvit.npz"
+
+CFG = REDUCED["efficientvit-b1-r224"]
+_STEPS = 300
+_BATCH = 32
+
+
+def _data():
+    return SyntheticVision(CFG.n_classes, CFG.img_res, noise=0.7)
+
+
+def train_proxy(force: bool = False):
+    model = get_model(CFG)
+    params = model.init(CFG, jax.random.PRNGKey(0))
+    if CACHE.exists() and not force:
+        data = np.load(CACHE)
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        return jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(flat))])
+    ds = _data()
+    opt = AdamW(lr=cosine_schedule(2e-3, 10, _STEPS))
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        def loss_fn(p):
+            lg = model.forward(CFG, p, x).astype(jnp.float32)
+            return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(x.shape[0]), y])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    for s in range(_STEPS):
+        x, y = ds.batch(s, _BATCH)
+        params, opt_state, loss = step(params, opt_state,
+                                       jnp.asarray(x), jnp.asarray(y))
+    CACHE.parent.mkdir(parents=True, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten(params)
+    np.savez(CACHE, **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(flat)})
+    return params
+
+
+def accuracy(params, n_batches: int = 8, seed0: int = 10_000) -> float:
+    model = get_model(CFG)
+    ds = _data()
+    fwd = jax.jit(lambda p, x: model.forward(CFG, p, x))
+    correct = total = 0
+    for b in range(n_batches):
+        x, y = ds.batch(seed0 + b, _BATCH)
+        pred = np.asarray(jnp.argmax(fwd(params, jnp.asarray(x)), -1))
+        correct += int((pred == y).sum())
+        total += len(y)
+    return correct / total

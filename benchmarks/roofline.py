@@ -1,0 +1,190 @@
+"""Roofline analysis from the multi-pod dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Per (arch x shape x mesh) cell, three terms in seconds (TPU v5e):
+  compute   = HLO dot-FLOPs / peak  (bf16 197 TF/s; int8 dots at 2x = 394)
+  memory    = HLO bytes / 819 GB/s  (argument + output + 2*temp per device)
+  collective= HLO collective bytes / 50 GB/s per ICI link
+All inputs are PER DEVICE (the SPMD HLO module is per-partition; the
+loop-aware analyzer in launch.hlo_analysis recovers scan trip counts).
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (inference) —
+the useful-matmul yardstick; ratio = MODEL_FLOPS / (HLO_FLOPs * chips)
+catches remat/replication waste.  roofline_fraction = ideal-compute-time /
+dominant-term = the score we hillclimb in §Perf.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, Optional
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12   # int8 MXU rate (the M2Q uniform-half advantage)
+PEAK_F32 = 49e12     # f32 dots don't hit the MXU's bf16 path
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def default_baseline_path():
+    v2 = ROOT / "results" / "dryrun_v2.jsonl"
+    return v2 if v2.exists() else ROOT / "results" / "dryrun.jsonl"
+
+
+def load_cells(path=None) -> Dict[tuple, dict]:
+    path = path or default_baseline_path()
+    cells: Dict[tuple, dict] = {}
+    if not pathlib.Path(path).exists():
+        return cells
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+        # last record wins (re-runs after fixes supersede failures)
+        if r.get("status") == "ok" or key not in cells:
+            cells[key] = r
+    return cells
+
+
+_CACHE_BYTES: Dict[tuple, int] = {}
+
+
+def _cache_bytes(arch: str, shape_name: str) -> int:
+    """Global KV/state cache bytes for a serve cell (eval_shape, no alloc)."""
+    key = (arch, shape_name)
+    if key not in _CACHE_BYTES:
+        import numpy as np
+        from repro.configs.registry import ARCHS
+        from repro.launch.specs import SHAPES, decode_inputs
+        cfg = ARCHS[arch]
+        sh = SHAPES[shape_name]
+        cache, _ = decode_inputs(cfg, sh.batch, sh.seq)
+        import jax
+        _CACHE_BYTES[key] = int(sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(cache)))
+    return _CACHE_BYTES[key]
+
+
+def _min_bytes(rec: dict) -> float:
+    """Workload-inherent HBM traffic floor (global bytes/step)."""
+    if rec["kind"] == "train":
+        # f32 params+adam m/v: read p,m,v + write p,m,v = 24 B/param, plus
+        # one activation write+read per token per layer floor (bf16)
+        return 24.0 * rec.get("n_params", 0)
+    base = rec.get("serving_weight_bytes", 8 * rec.get("n_params", 0) // 8)
+    if rec["kind"] in ("decode", "prefill"):
+        base += rec.get("cache_bytes") or _cache_bytes(rec["arch"],
+                                                       rec["shape"])
+    return float(base)
+
+
+def terms_for(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec.get("hlo", {})
+    by_dt = hlo.get("dot_flops_by_dtype", {})
+    f_int = sum(v for k, v in by_dt.items() if k in ("s8", "u8", "s4", "u4"))
+    f_f32 = sum(v for k, v in by_dt.items() if k in ("f32", "f64"))
+    f_bf16 = hlo.get("dot_flops", 0.0) - f_int - f_f32
+    t_compute = f_bf16 / PEAK_BF16 + f_f32 / PEAK_F32 + f_int / PEAK_INT8
+    ma = rec.get("memory_analysis", {})
+    bytes_dev = (ma.get("argument_size_in_bytes", 0)
+                 + ma.get("output_size_in_bytes", 0)
+                 + 2 * ma.get("temp_size_in_bytes", 0))
+    t_memory = bytes_dev / HBM_BW
+    coll = hlo.get("collective_total_bytes", 0.0)
+    t_coll = coll / LINK_BW
+    chips = 512 if rec["mesh"] == "multi" else 256
+    tokens = rec["batch"] * (rec["seq"] if rec["kind"] in ("train", "prefill")
+                             else 1)
+    n_act = rec.get("n_active_params", 0)
+    model_flops = (6 if rec["kind"] == "train" else 2) * n_act * tokens
+    hlo_total = hlo.get("dot_flops", 0.0) * chips
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))
+    # workload-inherent ideal: perfectly sharded compute AND the minimal HBM
+    # traffic (weights+cache for serving; params+optimizer for training)
+    ideal_c = model_flops / (chips * PEAK_BF16)
+    ideal_m = _min_bytes(rec) / (chips * HBM_BW)
+    ideal = max(ideal_c, ideal_m)
+    return {
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant[1], "dominant_s": dominant[0],
+        "model_flops": model_flops,
+        "ideal_s": ideal, "ideal_bound": "compute" if ideal_c >= ideal_m
+        else "memory",
+        "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": ideal / dominant[0] if dominant[0] else 0.0,
+        "bytes_per_device": bytes_dev,
+        "hbm_fit": bytes_dev - ma.get("temp_size_in_bytes", 0) <= 16e9,
+    }
+
+
+_SUGGEST = {
+    "memory": "cut bytes: shard KV/cache over model axis, lower-bit weights,"
+              " smaller remat footprint",
+    "compute": "cut replicated FLOPs: shard attention heads/d_head, move more"
+               " dots to int8 (2x MXU rate)",
+    "collective": "reduce resharding: align layer in/out shardings, compress"
+                  " gradients, overlap collectives with compute",
+}
+
+
+def build_table(path=None):
+    cells = load_cells(path)
+    rows = []
+    for (arch, shape, mesh), rec in sorted(cells.items()):
+        if rec.get("status") == "skipped":
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": "skipped", "reason": rec.get("reason", "")})
+            continue
+        t = terms_for(rec)
+        if t is None:
+            rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                         "status": rec.get("status", "?")})
+            continue
+        rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                     "status": "ok", **t,
+                     "suggest": _SUGGEST[t["dominant"]]})
+    return rows
+
+
+def write_reports(path=None, out_csv=None, out_md=None):
+    """Writes the baseline roofline table; if the optimized sweep exists,
+    each row also carries the optimized fraction + speedup."""
+    rows = build_table(path)
+    opt_path = ROOT / "results" / "dryrun_opt.jsonl"
+    if opt_path.exists():
+        opt = {(r["arch"], r["shape"], r["mesh"]): r
+               for r in build_table(opt_path) if r.get("status") == "ok"}
+        for r in rows:
+            o = opt.get((r["arch"], r["shape"], r["mesh"]))
+            if o and r.get("status") == "ok":
+                r["opt_fraction"] = o["roofline_fraction"]
+                r["opt_dominant"] = o["dominant"]
+                r["speedup"] = (o["roofline_fraction"]
+                                / max(r["roofline_fraction"], 1e-12))
+    out_csv = out_csv or ROOT / "results" / "roofline.csv"
+    out_md = out_md or ROOT / "results" / "roofline.md"
+    cols = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_ratio", "roofline_fraction",
+            "opt_fraction", "opt_dominant", "speedup"]
+    with open(out_csv, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(
+                f"{r.get(c):.4g}" if isinstance(r.get(c), float)
+                else str(r.get(c, "")) for c in cols) + "\n")
+    md = ["| " + " | ".join(cols) + " |",
+          "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in rows:
+        md.append("| " + " | ".join(
+            f"{r.get(c):.3g}" if isinstance(r.get(c), float)
+            else str(r.get(c, "")) for c in cols) + " |")
+    pathlib.Path(out_md).write_text("\n".join(md) + "\n")
+    return rows

@@ -1,0 +1,36 @@
+"""Benchmark orchestrator: one function per paper table + the roofline
+report.  Prints ``name,value,derived`` CSV rows (kernel micro-latencies are
+not meaningful on the CPU interpret path; the accelerator simulator and the
+dry-run artifacts carry the performance content)."""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from . import accel_sim, roofline, tables
+
+    accel_sim.set_calibration()
+    print("name,value,derived")
+    t0 = time.time()
+    for fn in (tables.table1_schemes, tables.table2_bits,
+               tables.table3_energy, tables.table4_ablation,
+               tables.table5_accel, tables.table6_units):
+        for name, value, derived in fn():
+            print(f"{name},{value},{derived}")
+    rows = roofline.write_reports()
+    n_ok = sum(1 for r in rows if r.get("status") == "ok")
+    n_skip = sum(1 for r in rows if r.get("status") == "skipped")
+    for r in rows:
+        if r.get("status") == "ok":
+            opt = r.get("opt_fraction")
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                  f"{r['roofline_fraction']:.4f},"
+                  f"{r['dominant']}"
+                  + (f" opt={opt:.4f} ({r['speedup']:.1f}x)" if opt else ""))
+    print(f"summary/roofline_cells,{n_ok},{n_skip} skipped")
+    print(f"summary/total_seconds,{time.time() - t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

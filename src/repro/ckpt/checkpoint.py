@@ -1,0 +1,158 @@
+"""Fault-tolerant checkpointing.
+
+* Atomic publish: write to ``step_XXXXXXXX.tmp``, fsync, rename.  A crash
+  mid-save never corrupts the latest checkpoint.
+* Integrity: per-leaf SHA256 in the manifest, verified on restore.
+* Async: ``save_async`` snapshots to host memory synchronously (cheap) and
+  writes in a background thread so the train loop keeps stepping.
+* Elastic: leaves are saved *unsharded* (device_get gathers); restore takes
+  any target sharding/mesh — a job restarted on a different device count
+  just pjits the restored tree with its own specs.
+* QTensor-aware: pytrees flatten through registered nodes, so quantized
+  serving params checkpoint transparently; structure comes from a template
+  tree on load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def save(ckpt_dir, step: int, tree, extra: Optional[dict] = None) -> Path:
+    """Synchronous atomic save. Returns the published directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves = _leaf_paths(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    arrays = {}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"leaf_{i:05d}"
+        arrays[name] = arr
+        manifest["leaves"].append({
+            "key": key, "name": name, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "sha256": _sha256(arr)})
+    np.savez(tmp / "arrays.npz", **arrays)
+    with open(tmp / _MANIFEST, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot on the caller thread, write in the background; at most one
+    in-flight save (a newer request waits for the previous to land)."""
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree, extra: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            save(self.ckpt_dir, step, host_tree, extra)
+            self.last_saved = step
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(list_steps(self.ckpt_dir))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(Path(self.ckpt_dir) / f"step_{s:08d}",
+                          ignore_errors=True)
+
+
+def list_steps(ckpt_dir) -> list:
+    p = Path(ckpt_dir)
+    if not p.exists():
+        return []
+    out = []
+    for d in p.iterdir():
+        m = re.fullmatch(r"step_(\d{8})", d.name)
+        if m and (d / _MANIFEST).exists():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, template, shardings=None, verify: bool = True):
+    """Restore into the structure of ``template`` (shapes/dtypes checked).
+
+    ``shardings``: optional matching tree of NamedShardings — leaves are
+    device_put with them (elastic restore onto any mesh).
+    Returns (tree, extra).
+    """
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+    data = np.load(d / "arrays.npz")
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    tpl_leaves = _leaf_paths(template)
+    flat_shardings = None
+    if shardings is not None:
+        flat_shardings = [s for _, s in _leaf_paths(shardings)]
+    out = []
+    for i, (key, tpl) in enumerate(tpl_leaves):
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = by_key[key]
+        arr = data[rec["name"]]
+        if verify and _sha256(arr) != rec["sha256"]:
+            raise IOError(f"checksum mismatch for {key!r}")
+        if tuple(arr.shape) != tuple(tpl.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs template "
+                f"{tpl.shape}")
+        if flat_shardings is not None:
+            arr = jax.device_put(arr, flat_shardings[i])
+        out.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

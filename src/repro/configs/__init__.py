@@ -1,0 +1,1 @@
+from .registry import ARCHS, REDUCED, get_config, get_reduced, list_archs

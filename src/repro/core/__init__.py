@@ -1,0 +1,44 @@
+# The paper's primary contribution: two-level mixed quantization (M2Q).
+#   quant         — uniform (Eq.1-2) / PoT (Eq.3) / APoT (Eq.5) quantizers
+#   scheme_select — per-filter MSE scheme assignment (Eq.6) + 1:1 ratio
+#   policy        — operational-intensity layer classification
+#   packing       — int4 nibble packing + APoT byte codes
+#   qtensor       — quantized-weight pytree leaves + XLA execution paths
+#   calibrate     — PTQ activation calibration (observer wrapping)
+#   apply         — quantize_model: float params -> QTensor params
+from .quant import (
+    act_scale_from_stats,
+    apot_codebook,
+    apot_dequantize,
+    apot_quantize,
+    fake_quant_act,
+    fake_quant_apot,
+    fake_quant_pot,
+    fake_quant_uniform,
+    filterwise_mse,
+    pot_dequantize,
+    pot_quantize,
+    quantize_act,
+    uniform_dequantize,
+    uniform_quantize,
+)
+from .scheme_select import SchemeAssignment, select_schemes
+from .policy import (
+    KIND_DENSE,
+    KIND_DWCONV,
+    KIND_EMBEDDING,
+    KIND_EXPERT,
+    KIND_HEAD,
+    KIND_SKIP,
+    DECISION_LOWBIT,
+    DECISION_MIXED,
+    DECISION_SKIP,
+    M2QPolicy,
+    ShapeCtx,
+    decide,
+    dense_intensity,
+    dwconv_intensity,
+)
+from .qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform, is_qtensor, qmatmul, weight_bits
+from .calibrate import CalibTensor, run_calibration, wrap_for_calibration
+from .apply import LayerReport, fake_quant_model, quantize_model

@@ -1,0 +1,399 @@
+"""quantize_model: rewrite a float param tree into M2Q QTensors.
+
+Models declare *which* weights are quantizable and *what kind* they are via
+QUANT_RULES — an ordered list of ``(regex, kind)`` matched against the
+canonical tree path (first match wins; see core.policy for kinds).  The
+policy + deployment ShapeCtx then decide mixed-scheme vs low-bit per weight,
+and the MSE scheme selector (Eq. 6) splits mixed layers' filters between
+uniform-8bit and APoT.
+
+Returns (qparams, report) where report is a per-layer record used by the
+benchmarks and the accelerator simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import policy as pol
+from .calibrate import path_str
+from .qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform, weight_bits
+from .scheme_select import select_schemes
+from .quant import (act_scale_from_stats, fake_quant_pot, fake_quant_apot,
+                    fake_quant_uniform)
+
+Rule = Tuple[str, str]  # (path regex, layer kind)
+
+
+@dataclasses.dataclass
+class LayerReport:
+    path: str
+    kind: str
+    decision: str
+    shape: tuple
+    bits: float  # average stored bits/weight
+    n_apot: int = 0
+    n_uniform: int = 0
+    mse: float = 0.0
+
+
+def match_kind(rules: Sequence[Rule], path: str) -> Optional[str]:
+    for pattern, kind in rules:
+        if re.search(pattern, path):
+            return kind
+    return None
+
+
+def _batched_m2q(w, ratio) -> QExpertM2Q:
+    """Per-slice Eq. 6 selection over the leading axis (layers or experts);
+    the fixed 1:1 ratio keeps the two halves stackable."""
+    apot_idx, uni_idx = [], []
+    for e in range(w.shape[0]):
+        asn = select_schemes(w[e], ratio=ratio if ratio is not None else 0.5)
+        apot_idx.append(asn.apot_idx)
+        uni_idx.append(asn.uniform_idx)
+    return QExpertM2Q.quantize(w, np.stack(apot_idx), np.stack(uni_idx))
+
+
+def _quantize_leaf(w, kind: str, decision: str, p: pol.M2QPolicy,
+                   act_max_abs):
+    """w is (K, N) dense / (V, D) embedding / (B, K, N) stacked-or-expert /
+    (L, E, K, N) stacked expert / (kh, kw, 1, C) depthwise."""
+    ams = None
+    if p.quantize_activations and act_max_abs is not None:
+        ams = jnp.asarray(act_max_abs, jnp.float32)
+    batched = (kind in (pol.KIND_DENSE, pol.KIND_HEAD, pol.KIND_EXPERT)
+               and w.ndim >= 3)
+    if decision == pol.DECISION_LOWBIT:
+        if kind == pol.KIND_EMBEDDING:
+            return QUniform.quantize(w, bits=p.memory_bits, axis=0)
+        ra = (w.ndim - 2,) if batched else None
+        return QUniform.quantize(w, bits=p.memory_bits, axis=-1, reduce_axes=ra)
+    # compute-intensive
+    ra = (w.ndim - 2,) if batched else None
+    if p.compute_scheme == "uniform8":
+        return QUniform.quantize(w, bits=8, axis=-1, act_max_abs=ams,
+                                 reduce_axes=ra)
+    if p.compute_scheme == "apot":
+        return QAPoT.quantize(w, act_max_abs=ams, reduce_axes=ra)
+    if p.compute_scheme == "m2q":
+        if w.ndim == 2:
+            asn = select_schemes(w, ratio=p.apot_ratio)
+            return QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx,
+                                 act_max_abs=ams)
+        if w.ndim == 3:
+            qt = _batched_m2q(w, p.apot_ratio)
+        else:  # (L, E, K, N): per-layer batched trees, stacked
+            per_layer = [_batched_m2q(w[i], p.apot_ratio)
+                         for i in range(w.shape[0])]
+            qt = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        if ams is not None:
+            qt.uniform.act_scale = act_scale_from_stats(ams)
+            qt.apot.act_scale = act_scale_from_stats(ams)
+        return qt
+    raise ValueError(f"unknown compute scheme {p.compute_scheme}")
+
+
+def _joint_group_quantize(w_up, w_gate, w_down, ratio):
+    """Perm-folded mixed-scheme quantization of an FFN filter group.
+
+    The paper's 'filter' for an FFN hidden channel spans w_up[:, f]
+    (+ w_gate[:, f]) and w_down[f, :]; selecting the scheme *jointly* and
+    reordering w_down's rows offline removes the runtime inverse
+    permutation — which on a TP-sharded hidden axis otherwise lowers to a
+    cross-shard all-gather of the full hidden activation (365 GB/step on
+    qwen3-14b prefill; EXPERIMENTS §Perf).  Weights may be stacked (L,K,N).
+    """
+    stacked = w_up.ndim == 3
+    ups, gates, downs = [], [], []
+    slices = range(w_up.shape[0]) if stacked else [None]
+    for i in slices:
+        u = w_up[i] if stacked else w_up
+        g = None if w_gate is None else (w_gate[i] if stacked else w_gate)
+        d = w_down[i] if stacked else w_down
+        sel_src = u if g is None else jnp.concatenate([u, g], axis=0)
+        asn = select_schemes(sel_src, ratio=ratio if ratio is not None else 0.5)
+        nu = len(asn.uniform_idx)
+        perm = np.concatenate([asn.uniform_idx, asn.apot_idx])
+        qu = QM2Q(uniform=QUniform.quantize(u[:, perm[:nu]], bits=8),
+                  apot=QAPoT.quantize(u[:, perm[nu:]]),
+                  inv_perm=None)
+        ups.append(qu)
+        if g is not None:
+            gates.append(QM2Q(
+                uniform=QUniform.quantize(g[:, perm[:nu]], bits=8),
+                apot=QAPoT.quantize(g[:, perm[nu:]]),
+                inv_perm=None))
+        downs.append(jnp.take(d, jnp.asarray(perm), axis=0))
+    if not stacked:
+        return ups[0], (gates[0] if gates else None), downs[0]
+    q_up = jax.tree.map(lambda *xs: jnp.stack(xs), *ups)
+    q_gate = jax.tree.map(lambda *xs: jnp.stack(xs), *gates) if gates else None
+    return q_up, q_gate, jnp.stack(downs)
+
+
+def quantize_model(
+    params,
+    rules: Sequence[Rule],
+    shape_ctx: pol.ShapeCtx,
+    m2q_policy: Optional[pol.M2QPolicy] = None,
+    act_stats: Optional[Dict[str, float]] = None,
+    ffn_groups: Optional[Sequence[tuple]] = None,
+):
+    """Apply M2Q to ``params``. Non-matching leaves pass through unchanged.
+
+    ``ffn_groups``: (up_re, gate_re_or_None, down_re) path-regex triples for
+    perm-folded FFN quantization (see _joint_group_quantize)."""
+    p = m2q_policy or pol.M2QPolicy()
+    act_stats = act_stats or {}
+    report: List[LayerReport] = []
+
+    # --- perm-folded FFN groups (pre-pass) ---------------------------------
+    pre: Dict[str, object] = {}
+    permuted_down: Dict[str, object] = {}
+    if ffn_groups and p.compute_scheme == "m2q":
+        flat = {path_str(path): leaf for path, leaf in
+                jax.tree_util.tree_flatten_with_path(params)[0]}
+
+        def find(rx):
+            if rx is None:
+                return None
+            hits = [k for k in flat if re.search(rx, k)]
+            return hits[0] if len(hits) == 1 else None
+
+        for up_re, gate_re, down_re in ffn_groups:
+            ku, kg, kd = find(up_re), find(gate_re), find(down_re)
+            if ku is None or kd is None or (gate_re and kg is None):
+                continue
+            if ku in pre or kd in permuted_down:
+                continue  # already folded by an earlier (gated) group
+            w_up = jnp.asarray(flat[ku], jnp.float32)
+            if pol.decide(pol.KIND_DENSE, tuple(w_up.shape[-2:]), shape_ctx,
+                          p) != pol.DECISION_MIXED:
+                continue
+            q_up, q_gate, w_down = _joint_group_quantize(
+                w_up,
+                None if kg is None else jnp.asarray(flat[kg], jnp.float32),
+                jnp.asarray(flat[kd], jnp.float32), p.apot_ratio)
+            pre[ku] = q_up
+            if kg is not None:
+                pre[kg] = q_gate
+            permuted_down[kd] = w_down  # re-enters the normal visit below
+
+    def visit(path, leaf):
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            return leaf
+        key = path_str(path)
+        if key in pre:
+            qt = pre[key]
+            report.append(LayerReport(path=key, kind=pol.KIND_DENSE,
+                                      decision="mixed(perm-folded)",
+                                      shape=tuple(leaf.shape),
+                                      bits=weight_bits(qt),
+                                      n_apot=qt.apot.shape[-1],
+                                      n_uniform=qt.uniform.shape[-1]))
+            return qt
+        if key in permuted_down:
+            leaf = permuted_down[key]
+        kind = match_kind(rules, key)
+        if kind is None or kind == pol.KIND_SKIP or leaf.ndim < 2:
+            return leaf
+        # classify on the per-unit shape (strip stacked layer / expert axes)
+        if kind == pol.KIND_EXPERT and leaf.ndim >= 3:
+            dec_shape = tuple(leaf.shape[-2:])
+        elif kind in (pol.KIND_DENSE, pol.KIND_HEAD) and leaf.ndim == 3:
+            dec_shape = tuple(leaf.shape[1:])
+        else:
+            dec_shape = tuple(leaf.shape)
+        decision = pol.decide(kind, dec_shape, shape_ctx, p)
+        if decision == pol.DECISION_SKIP:
+            return leaf
+        # activation stats: plain key, or per-layer '@i' keys for stacked
+        ams = act_stats.get(key)
+        if ams is None and leaf.ndim >= 3:
+            per = [act_stats.get(f"{key}@{i}") for i in range(leaf.shape[0])]
+            if all(v is not None for v in per):
+                ams = np.asarray(per, np.float32).reshape(leaf.shape[0], 1, 1)
+        qt = _quantize_leaf(jnp.asarray(leaf, jnp.float32), kind, decision, p,
+                            ams)
+        rep = LayerReport(path=key, kind=kind, decision=decision,
+                          shape=tuple(leaf.shape), bits=weight_bits(qt))
+        if isinstance(qt, (QM2Q, QExpertM2Q)):
+            rep.n_apot = qt.apot.shape[-1]
+            rep.n_uniform = qt.uniform.shape[-1]
+        w_hat = qt.dequant()
+        rep.mse = float(jnp.mean((jnp.asarray(leaf, jnp.float32).reshape(w_hat.shape)
+                                  - w_hat) ** 2))
+        report.append(rep)
+        return qt
+
+    qparams = jax.tree_util.tree_map_with_path(visit, params)
+    return qparams, report
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _keepdims(shape, reduce_axes):
+    return tuple(1 if i in reduce_axes else d for i, d in enumerate(shape))
+
+
+def abstract_quantize_model(
+    params_abs,
+    rules: Sequence[Rule],
+    shape_ctx: pol.ShapeCtx,
+    m2q_policy: Optional[pol.M2QPolicy] = None,
+    with_act_scales: bool = True,
+    ffn_groups: Optional[Sequence[tuple]] = None,
+):
+    """Shape-only twin of quantize_model for the multi-pod dry-run: takes a
+    ShapeDtypeStruct param tree (jax.eval_shape of init) and returns QTensor
+    leaves whose payloads are ShapeDtypeStructs — the exact serving pytree,
+    no data, no allocation.  Decisions depend only on shapes, so this agrees
+    with the concrete path by construction (tested in test_quant.py)."""
+    from .quant import _reduction_axes  # shared stats-axis resolution
+    p = m2q_policy or pol.M2QPolicy()
+    fold_res = []
+    if ffn_groups and p.compute_scheme == "m2q":
+        for up_re, gate_re, _ in ffn_groups:
+            fold_res.append(up_re)
+            if gate_re:
+                fold_res.append(gate_re)
+
+    def _act_shape(shape, stacked):
+        # stacked (scanned-over) leaves need a per-layer leading axis so the
+        # act_scale leaf slices under lax.scan; others are scalar.
+        return (shape[0],) + (1,) * (len(shape) - 1) if stacked else ()
+
+    def q_uniform(shape, bits, axis, reduce_axes=None, act=False,
+                  stacked=False):
+        red = _reduction_axes(len(shape), axis, reduce_axes)
+        ks = _keepdims(shape, red)
+        payload_shape = list(shape)
+        if bits == 4:
+            payload_shape[-1] //= 2
+        dtype = jnp.int8 if bits == 8 else jnp.uint8
+        return QUniform(
+            payload=_sds(payload_shape, dtype), scale=_sds(ks, jnp.float32),
+            zero_point=_sds(ks, jnp.float32),
+            act_scale=_sds(_act_shape(shape, stacked), jnp.float32) if act else None,
+            bits=bits, axis=axis % len(shape), shape=tuple(shape))
+
+    def q_apot(shape, reduce_axes=None, act=False, stacked=False):
+        red = _reduction_axes(len(shape), -1, reduce_axes)
+        ks = _keepdims(shape, red)
+        return QAPoT(codes=_sds(shape, jnp.uint8), scale=_sds(ks, jnp.float32),
+                     act_scale=_sds(_act_shape(shape, stacked), jnp.float32)
+                     if act else None,
+                     shape=tuple(shape))
+
+    def visit(path, leaf):
+        if not hasattr(leaf, "shape"):
+            return leaf
+        key = path_str(path)
+        kind = match_kind(rules, key)
+        if kind is None or kind == pol.KIND_SKIP or len(leaf.shape) < 2:
+            return leaf
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        if kind == pol.KIND_EXPERT and ndim >= 3:
+            dec_shape = shape[-2:]
+        elif kind in (pol.KIND_DENSE, pol.KIND_HEAD) and ndim == 3:
+            dec_shape = shape[1:]
+        else:
+            dec_shape = shape
+        decision = pol.decide(kind, dec_shape, shape_ctx, p)
+        batched = (kind in (pol.KIND_DENSE, pol.KIND_HEAD, pol.KIND_EXPERT)
+                   and ndim >= 3)
+        act = with_act_scales and p.quantize_activations
+        if decision == pol.DECISION_MIXED and p.compute_scheme == "m2q" and \
+                any(re.search(rx, key) for rx in fold_res):
+            # perm-folded group member: halves without inv_perm, no act scale
+            n = shape[-1]
+            ra2 = (ndim - 2,) if ndim >= 3 else None
+            return QM2Q(
+                uniform=q_uniform(shape[:-1] + (n - n // 2,), 8, -1, ra2),
+                apot=q_apot(shape[:-1] + (n // 2,), ra2),
+                inv_perm=None)
+        if decision == pol.DECISION_LOWBIT:
+            if kind == pol.KIND_EMBEDDING:
+                return q_uniform(shape, p.memory_bits, 0)
+            ra = (ndim - 2,) if batched else None
+            return q_uniform(shape, p.memory_bits, -1, ra)
+        # 'stacked' = carries a scanned leading layer axis (dense 3-D or
+        # expert 4-D); bare 3-D experts are vmapped over E, not scanned.
+        stacked = (kind in (pol.KIND_DENSE, pol.KIND_HEAD) and ndim == 3) or \
+            (kind == pol.KIND_EXPERT and ndim == 4)
+        ra = (ndim - 2,) if batched else None
+        if p.compute_scheme == "uniform8":
+            return q_uniform(shape, 8, -1, ra, act=act, stacked=stacked)
+        if p.compute_scheme == "apot":
+            return q_apot(shape, ra, act=act, stacked=stacked)
+        # m2q: 1:1 split of the filter axis
+        n = shape[-1]
+        nu = n - n // 2
+        na = n // 2
+        half_u = shape[:-1] + (nu,)
+        half_a = shape[:-1] + (na,)
+        if ndim == 2:
+            return QM2Q(uniform=q_uniform(half_u, 8, -1, None, act=act),
+                        apot=q_apot(half_a, None, act=act),
+                        inv_perm=_sds((n,), jnp.int32))
+        ra = (ndim - 2,)
+        perm_shape = shape[:-2] + (n,)
+        return QExpertM2Q(
+            uniform=q_uniform(half_u, 8, -1, ra, act=act, stacked=stacked),
+            apot=q_apot(half_a, ra, act=act, stacked=stacked),
+            inv_perm=_sds(perm_shape, jnp.int32))
+
+    return jax.tree_util.tree_map_with_path(visit, params_abs)
+
+
+def fake_quant_model(params, rules: Sequence[Rule], scheme: str = "uniform8",
+                     bits: int = 8, kinds: Optional[set] = None,
+                     path_filter: Optional[str] = None):
+    """Whole-tree fake quantization with a single scheme — used by the
+    Table I / Table II benchmark sweeps (accuracy under each scheme).
+    ``kinds``: restrict to these layer kinds (e.g. {KIND_DWCONV} for the
+    Table II sweep); ``path_filter``: additional path regex (Table IV
+    per-group ablations)."""
+
+    def visit(path, leaf):
+        if not isinstance(leaf, (jax.Array, np.ndarray)) or leaf.ndim < 2:
+            return leaf
+        key = path_str(path)
+        kind = match_kind(rules, key)
+        if kind is None or kind == pol.KIND_SKIP:
+            return leaf
+        if kinds is not None and kind not in kinds:
+            return leaf
+        if path_filter is not None and not re.search(path_filter, key):
+            return leaf
+        w = jnp.asarray(leaf, jnp.float32)
+        axis = 0 if kind == pol.KIND_EMBEDDING else -1
+        if scheme == "uniform":
+            return fake_quant_uniform(w, bits=bits, axis=axis)
+        if scheme == "pot":
+            return fake_quant_pot(w, bits=3, axis=axis)  # 3-bit exponent field
+        if scheme == "apot":
+            return fake_quant_apot(w, axis=axis)
+        if scheme in ("m2q", "pot_mix"):
+            # pot_mix = Auto-ViT-Acc analogue: PoT (single-shift) half
+            w2 = w.reshape(-1, w.shape[-1])
+            asn = select_schemes(w2, ratio=0.5)
+            out = jnp.asarray(w2)
+            out = out.at[:, asn.uniform_idx].set(
+                fake_quant_uniform(w2[:, asn.uniform_idx], bits=8, axis=-1))
+            alt = (fake_quant_apot if scheme == "m2q"
+                   else lambda v, axis: fake_quant_pot(v, bits=3, axis=axis))
+            out = out.at[:, asn.apot_idx].set(alt(w2[:, asn.apot_idx], axis=-1))
+            return out.reshape(w.shape)
+        raise ValueError(scheme)
+
+    return jax.tree_util.tree_map_with_path(visit, params)

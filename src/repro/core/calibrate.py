@@ -1,0 +1,115 @@
+"""PTQ activation calibration (paper Sec. V-A: 1024 calibration samples).
+
+Mechanism: quantizable weight leaves are wrapped in :class:`CalibTensor`; the
+model is then run *unjitted* on calibration batches.  ``nn.dense`` (and the
+conv/gather helpers) recognize the wrapper, record the running max-abs of the
+incoming activation under the weight's tree path, and compute the normal
+float op.  No name plumbing is needed inside model code.
+
+The collected stats feed ``core.apply.quantize_model``, which bakes per-layer
+activation scales into the QTensors (8-bit symmetric, layer-wise — Eq. 1-2
+applied tensor-wise as in FQ-ViT).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CalibTensor:
+    """Float weight + observer hook.  NOT a pytree leaf — calibration runs
+    outside jit by construction (PTQ is offline)."""
+
+    __slots__ = ("w", "key", "store")
+
+    def __init__(self, w: jax.Array, key: str, store: Dict[str, float]):
+        self.w = w
+        self.key = key
+        self.store = store
+
+    # duck-typed accessors so layer code can be agnostic
+    @property
+    def shape(self):
+        return self.w.shape
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+    def __getitem__(self, i):
+        """Slicing a stacked (per-layer) weight keeps per-slice stats keys
+        ('path@i') — used by the unrolled calibration forward pass."""
+        return CalibTensor(self.w[i], f"{self.key}@{i}", self.store)
+
+    def record(self, x: jax.Array) -> None:
+        if isinstance(jnp.asarray(x), jax.core.Tracer):
+            raise RuntimeError(
+                "Calibration must run unjitted (CalibTensor saw a tracer). "
+                "Call the model apply function directly for PTQ calibration.")
+        m = float(jnp.max(jnp.abs(x)))
+        self.store[self.key] = max(self.store.get(self.key, 0.0), m)
+
+
+def path_str(path) -> str:
+    """Canonical '/'-joined string for a jax tree path."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def wrap_for_calibration(
+    params, match: Callable[[str, jax.Array], bool]
+) -> Tuple[object, Dict[str, float]]:
+    """Replace every leaf with ``match(path, leaf)`` by a CalibTensor.
+
+    Returns (wrapped_params, stats_store); the store fills in as the model is
+    applied to calibration batches.
+    """
+    store: Dict[str, float] = {}
+
+    def wrap(path, leaf):
+        key = path_str(path)
+        if isinstance(leaf, jax.Array) and match(key, leaf):
+            return CalibTensor(leaf, key, store)
+        return leaf
+
+    wrapped = jax.tree_util.tree_map_with_path(wrap, params)
+    return wrapped, store
+
+
+def rule_matcher(rules):
+    """Build a wrap_for_calibration ``match`` from a model's QUANT_RULES:
+    wrap exactly the leaves quantize_model would touch."""
+    from .apply import match_kind  # local import to avoid a cycle
+    from . import policy as pol
+
+    def match(key: str, leaf) -> bool:
+        kind = match_kind(rules, key)
+        return kind is not None and kind != pol.KIND_SKIP and leaf.ndim >= 2
+
+    return match
+
+
+def run_calibration(
+    apply_fn: Callable,
+    wrapped_params,
+    batches: Iterable,
+) -> None:
+    """Drive the model over calibration batches (any extra structure in each
+    batch is splatted into apply_fn)."""
+    for batch in batches:
+        if isinstance(batch, dict):
+            apply_fn(wrapped_params, **batch)
+        elif isinstance(batch, (tuple, list)):
+            apply_fn(wrapped_params, *batch)
+        else:
+            apply_fn(wrapped_params, batch)

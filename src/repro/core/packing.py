@@ -1,0 +1,97 @@
+"""Bit-packing for the M2Q storage formats.
+
+* int4: two 4-bit unsigned codes per uint8 (low nibble = even index).  This is
+  the storage layout of the 4-bit weight buffers in the paper's accelerator
+  (Table VI: "Buffer (4bit)") and the HBM layout our Pallas kernels unpack in
+  VMEM.
+* APoT codes: one byte per weight — bit7 = zero flag, bit6 = sign (1 =
+  negative), bits5..3 = e1, bits2..0 = e2 (e = -p, 3-bit exponents, see
+  quant.APOT_EMAX).  Matches the paper's "Buffer (APoT)" 7-bit payload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quant import APoTQ, UniformQ
+
+# ---------------------------------------------------------------------------
+# int4 packing (packs along the LAST axis; callers reshape as needed)
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack unsigned 4-bit codes (values 0..15) pairwise along the last axis.
+
+    Last dim must be even; output last dim is halved, dtype uint8.
+    """
+    if q.shape[-1] % 2:
+        raise ValueError(f"last dim must be even to pack int4, got {q.shape}")
+    q = q.astype(jnp.uint8)
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`; returns uint8 values in 0..15."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# APoT code bytes
+# ---------------------------------------------------------------------------
+
+_ZERO_BIT = jnp.uint8(0x80)
+_SIGN_BIT = jnp.uint8(0x40)
+
+
+def apot_encode(t: APoTQ) -> jax.Array:
+    """Encode an APoTQ into one byte per weight (see module docstring)."""
+    e1 = t.e1.astype(jnp.uint8) & jnp.uint8(0x07)
+    e2 = t.e2.astype(jnp.uint8) & jnp.uint8(0x07)
+    neg = (t.sign < 0).astype(jnp.uint8) * _SIGN_BIT
+    zero = t.is_zero.astype(jnp.uint8) * _ZERO_BIT
+    return (zero | neg | (e1 << 3) | e2).astype(jnp.uint8)
+
+
+def apot_decode_values(codes: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Decode code bytes to *unscaled* values s*(2^-e1 + 2^-e2) (zero-aware).
+
+    The per-channel scale is applied by the caller (it folds into the matmul
+    epilogue).  This is the reference decode; the Pallas kernels perform the
+    same bit arithmetic in VMEM.
+    """
+    e1 = ((codes >> 3) & jnp.uint8(0x07)).astype(jnp.float32)
+    e2 = (codes & jnp.uint8(0x07)).astype(jnp.float32)
+    mag = jnp.exp2(-e1) + jnp.exp2(-e2)
+    sign = jnp.where((codes & _SIGN_BIT) != 0, -1.0, 1.0)
+    val = jnp.where((codes & _ZERO_BIT) != 0, 0.0, sign * mag)
+    return val.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Uniform payload storage helpers
+# ---------------------------------------------------------------------------
+
+
+def store_uniform(u: UniformQ) -> jax.Array:
+    """Materialize the integer payload at its storage width.
+
+    8-bit -> uint8 (one byte per weight); 4-bit -> packed uint8 (two per
+    byte, last axis).  Other widths (the Table II sweep: 3..8) are stored at
+    uint8 for simplicity; their *modelled* bandwidth in the accelerator
+    simulator still uses the true bit width.
+    """
+    if u.bits == 4:
+        return pack_int4(u.q)
+    return u.q.astype(jnp.uint8)
+
+
+def load_uniform(payload: jax.Array, bits: int) -> jax.Array:
+    if bits == 4:
+        return unpack_int4(payload).astype(jnp.int32)
+    return payload.astype(jnp.int32)

@@ -1,0 +1,96 @@
+"""Operational-intensity layer classification -> M2Q policy.
+
+The paper splits EfficientViT's layers into *computation-intensive*
+(PWConv/MatMul -> mixed-scheme 8-bit uniform / APoT) and *memory-intensive*
+(DWConv -> 4-bit uniform), justified by operation intensity (its ref. [12] is
+the roofline paper).  We make that classification explicit and shape-aware so
+it generalizes to the assigned LM/MoE/SSM architectures: a layer's intensity
+is computed under the *deployment shape* (train / prefill / decode tokens per
+step), which reproduces the paper's assignment on EfficientViT and gives
+sensible assignments elsewhere (e.g. every matmul is memory-bound at
+batch-1 decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# Layer kinds understood by the classifier.  Models tag their weights with
+# these via their QUANT_RULES (see core.apply).
+KIND_DENSE = "dense"          # generic matmul / PWConv (1x1 conv)
+KIND_DWCONV = "dwconv"        # depthwise conv (paper's memory-intensive case)
+KIND_EMBEDDING = "embedding"  # gather-dominated
+KIND_HEAD = "head"            # vocab projection (dense, but huge N)
+KIND_EXPERT = "expert"        # MoE expert matmul (reuse scaled by routing)
+KIND_SKIP = "skip"            # norms, routers, gates: left unquantized
+
+DECISION_MIXED = "mixed"    # mixed-scheme uniform8/APoT (compute-intensive)
+DECISION_LOWBIT = "lowbit"  # low-bit uniform (memory-intensive)
+DECISION_SKIP = "skip"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCtx:
+    """Deployment shape: how many tokens flow through a weight per step."""
+
+    tokens_per_step: int            # batch * seq (train/prefill) or batch (decode)
+    moe_top_k: int = 1
+    moe_num_experts: int = 1
+
+    @property
+    def tokens_per_expert(self) -> float:
+        return self.tokens_per_step * self.moe_top_k / max(self.moe_num_experts, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class M2QPolicy:
+    """The two-level mixed quantization policy (paper Sec. III-B)."""
+
+    compute_scheme: str = "m2q"   # "m2q" | "uniform8" | "apot" | "pot"
+    memory_bits: int = 4          # paper Table II -> 4-bit
+    apot_ratio: Optional[float] = 0.5  # 1:1 APoT:Uniform; None = Eq.6 argmin
+    act_bits: int = 8
+    quantize_activations: bool = True  # enable the W8A8 integer path
+    # FLOPs/byte boundary between memory- and compute-intensive.  The v5e
+    # bf16 ridge is 197e12/819e9 ~= 240; layers well under it gain more from
+    # bandwidth (low-bit) than from int8 MXU rate.  Default matches the
+    # paper's split on EfficientViT (DWConv ~ O(10) FLOPs/byte; PWConv >>).
+    intensity_threshold: float = 64.0
+
+
+def dense_intensity(k: int, n: int, tokens: float, weight_bits: int = 8,
+                    act_bytes: int = 2) -> float:
+    """FLOPs/byte of y[T,N] = x[T,K] @ w[K,N]."""
+    flops = 2.0 * tokens * k * n
+    bytes_moved = (weight_bits / 8.0) * k * n + act_bytes * tokens * (k + n)
+    return flops / max(bytes_moved, 1.0)
+
+
+def dwconv_intensity(kh: int, kw: int, channels: int, tokens: float,
+                     weight_bits: int = 8, act_bytes: int = 2) -> float:
+    """Depthwise conv: each output pixel-channel does kh*kw MACs."""
+    flops = 2.0 * tokens * channels * kh * kw
+    bytes_moved = (weight_bits / 8.0) * kh * kw * channels + act_bytes * 2 * tokens * channels
+    return flops / max(bytes_moved, 1.0)
+
+
+def decide(kind: str, shape: tuple, ctx: ShapeCtx, policy: M2QPolicy) -> str:
+    """Classify one weight -> DECISION_*."""
+    if kind == KIND_SKIP:
+        return DECISION_SKIP
+    if kind == KIND_EMBEDDING:
+        # Gather: one row touched per token; zero reuse -> memory-intensive.
+        return DECISION_LOWBIT
+    if kind == KIND_DWCONV:
+        kh, kw = shape[0], shape[1]
+        c = shape[-1]
+        inten = dwconv_intensity(kh, kw, c, ctx.tokens_per_step)
+        return DECISION_LOWBIT if inten < policy.intensity_threshold else DECISION_MIXED
+    if kind in (KIND_DENSE, KIND_HEAD, KIND_EXPERT):
+        k = int(math.prod(shape[:-1]))
+        n = int(shape[-1])
+        toks = ctx.tokens_per_expert if kind == KIND_EXPERT else ctx.tokens_per_step
+        inten = dense_intensity(k, n, toks)
+        return DECISION_MIXED if inten >= policy.intensity_threshold else DECISION_LOWBIT
+    raise ValueError(f"unknown layer kind: {kind}")

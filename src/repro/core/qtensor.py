@@ -1,0 +1,344 @@
+"""QTensor: quantized-weight pytree leaves + their XLA execution paths.
+
+Three leaf kinds mirror the three operation classes the paper's accelerator
+serves (Sec. IV):
+
+* :class:`QUniform`  — b-bit uniform weights (b=8 for compute-intensive
+  filters on the MPMA merged mode; b=4 for memory-intensive layers on the
+  MPMA single mode; 4-bit payloads are nibble-packed).
+* :class:`QAPoT`     — APoT-coded weights (the SAT engine), one byte/weight.
+* :class:`QM2Q`      — a mixed-scheme layer: the filter set split 1:1 into a
+  uniform half and an APoT half (paper Sec. III-B-1), plus the inverse
+  permutation restoring filter order.  This is the fused MPMA+SAT execution.
+
+Each kind implements ``dequant()`` (reference f32 weights) and ``matmul(x)``
+(the XLA serving path).  The Pallas kernels in :mod:`repro.kernels` implement
+the same contracts with explicit VMEM tiling; ``repro.kernels.ops`` dispatches
+on these classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .quant import (
+    APoTQ,
+    UniformQ,
+    act_scale_from_stats,
+    apot_quantize,
+    quantize_act,
+    uniform_quantize,
+)
+
+# int8 storage offset for 8-bit asymmetric payloads: q in [0,255] is stored as
+# int8 (q-128) so the TPU MXU int8xint8 path applies; the zero point absorbs
+# the offset.
+_I8_OFFSET = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QUniform:
+    """Uniform-quantized weight.
+
+    payload: int8 (8-bit, offset by 128) or nibble-packed uint8 (4-bit,
+    packed along the last axis).  scale/zero_point are stored in keepdims
+    broadcast shape (e.g. (1, N) for a (K, N) dense weight with axis=-1,
+    (V, 1) for a per-row-quantized (V, D) embedding with axis=0).
+    ``act_scale``: optional scalar f32 enabling the W8A8 integer path.
+    """
+
+    payload: jax.Array
+    scale: jax.Array
+    zero_point: jax.Array  # in the *stored* domain (offset folded for 8-bit)
+    act_scale: Optional[jax.Array]
+    bits: int
+    axis: int  # output-channel axis of the original weight
+    shape: tuple  # original float weight shape
+
+    def tree_flatten(self):
+        return (self.payload, self.scale, self.zero_point, self.act_scale), (
+            self.bits, self.axis, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, bits=aux[0], axis=aux[1], shape=aux[2])
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def quantize(cls, w: jax.Array, bits: int = 8, axis: int = -1,
+                 act_max_abs: Optional[jax.Array] = None,
+                 reduce_axes: Optional[tuple] = None) -> "QUniform":
+        u: UniformQ = uniform_quantize(w, bits=bits, axis=axis,
+                                       reduce_axes=reduce_axes)
+        zp = u.zero_point
+        if bits == 8:
+            payload = (u.q - _I8_OFFSET).astype(jnp.int8)
+            zp = zp - _I8_OFFSET
+        elif bits == 4:
+            payload = packing.pack_int4(u.q)
+        else:  # 3,5,6,7-bit sweep configs: byte storage, true-width modelling
+            payload = u.q.astype(jnp.uint8)
+        act_scale = None if act_max_abs is None else act_scale_from_stats(act_max_abs)
+        return cls(payload, u.scale, zp, act_scale, bits, axis % w.ndim,
+                   tuple(w.shape))
+
+    # -- reference dequant ---------------------------------------------------
+    def _int_payload(self) -> jax.Array:
+        if self.bits == 4:
+            return packing.unpack_int4(self.payload).astype(jnp.int32)
+        return self.payload.astype(jnp.int32)
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        # NOTE: shape falls out of the payload (unpacking restores the last
+        # axis), so this also works on scan-sliced stacked leaves whose
+        # leading layer axis has been stripped.
+        q = self._int_payload().astype(jnp.float32)
+        w = (q - self.zero_point) * self.scale
+        return w.astype(dtype)
+
+    # -- serving paths -------------------------------------------------------
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """y = x @ W for W of shape (K, N); x (..., K); out-channels last."""
+        if self.bits == 8 and self.act_scale is not None:
+            # True integer path (MPMA merged mode analogue): int8 x int8 ->
+            # int32, zero-point folded via the row-sum identity:
+            #   x @ ((q - zp) s) = s sa (xq @ q - sum_k(xq) * zp)
+            xq = quantize_act(x, self.act_scale)
+            acc = jax.lax.dot_general(
+                xq, self.payload, (((xq.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+            y = (acc.astype(jnp.float32)
+                 - xsum.astype(jnp.float32) * self.zero_point)
+            return (y * (self.act_scale * self.scale)).astype(x.dtype)
+        # weights-only path: dequantize; bf16 compute on the MXU.
+        return x @ self.dequant(x.dtype)
+
+    def take(self, ids: jax.Array, dtype=jnp.float32) -> jax.Array:
+        """Quantized embedding gather (axis=0 per-row quantization).
+
+        Gathers the *integer* rows (4-bit rows stay packed through the gather
+        -> the HBM traffic win the paper targets for memory-intensive layers)
+        and dequantizes only the gathered slice.
+        """
+        assert self.axis == 0, "take() path needs per-row quantization (axis=0)"
+        rows = jnp.take(self.payload, ids, axis=0)
+        if self.bits == 4:
+            q = packing.unpack_int4(rows).astype(jnp.float32)
+        else:
+            q = rows.astype(jnp.float32)
+        scale = jnp.take(self.scale, ids, axis=0)
+        zp = jnp.take(self.zero_point, ids, axis=0)
+        return ((q - zp) * scale).astype(dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QAPoT:
+    """APoT-coded weight (one uint8 code per weight; see packing.apot_encode).
+
+    Only used for compute-intensive dense weights -> axis is always -1.
+    """
+
+    codes: jax.Array
+    scale: jax.Array  # (1, ..., N) f32 keepdims
+    act_scale: Optional[jax.Array]
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.codes, self.scale, self.act_scale), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0])
+
+    @classmethod
+    def quantize(cls, w: jax.Array,
+                 act_max_abs: Optional[jax.Array] = None,
+                 reduce_axes: Optional[tuple] = None) -> "QAPoT":
+        t: APoTQ = apot_quantize(w, axis=-1, reduce_axes=reduce_axes)
+        codes = packing.apot_encode(t)
+        act_scale = None if act_max_abs is None else act_scale_from_stats(act_max_abs)
+        return cls(codes, t.scale, act_scale, tuple(w.shape))
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        vals = packing.apot_decode_values(self.codes) * self.scale
+        return vals.astype(dtype)
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        # SAT-engine analogue: decode (exponent arithmetic) + dot.  The scale
+        # folds into the epilogue so the decoded operand stays unscaled (the
+        # Pallas kernel keeps it in VMEM only).  Activations are 8-bit
+        # uniform everywhere in M2Q -> fake-quantize when calibrated, which
+        # keeps this path bit-identical to the fused m2q kernel.
+        if self.act_scale is not None:
+            from .quant import fake_quant_act
+            x = fake_quant_act(x, self.act_scale.astype(x.dtype))
+        vals = packing.apot_decode_values(self.codes, dtype=x.dtype)
+        y = x @ vals
+        return y * self.scale.reshape(-1).astype(x.dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QM2Q:
+    """Mixed-scheme layer: uniform half + APoT half + inverse filter perm."""
+
+    uniform: QUniform
+    apot: QAPoT
+    inv_perm: jax.Array  # (N,) int32
+
+    def tree_flatten(self):
+        return (self.uniform, self.apot, self.inv_perm), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def quantize(cls, w: jax.Array, apot_idx, uniform_idx,
+                 act_max_abs: Optional[jax.Array] = None) -> "QM2Q":
+        w2 = w.reshape(-1, w.shape[-1])
+        wu = w2[:, jnp.asarray(uniform_idx)]
+        wa = w2[:, jnp.asarray(apot_idx)]
+        perm = jnp.concatenate(
+            [jnp.asarray(uniform_idx, jnp.int32), jnp.asarray(apot_idx, jnp.int32)])
+        inv_perm = jnp.argsort(perm).astype(jnp.int32)
+        return cls(
+            uniform=QUniform.quantize(wu, bits=8, act_max_abs=act_max_abs),
+            apot=QAPoT.quantize(wa, act_max_abs=act_max_abs),
+            inv_perm=inv_perm)
+
+    @property
+    def shape(self):
+        return (self.uniform.shape[0], self.uniform.shape[1] + self.apot.shape[1])
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        w = jnp.concatenate(
+            [self.uniform.dequant(dtype), self.apot.dequant(dtype)], axis=-1)
+        if self.inv_perm is None:  # perm folded into the consumer's rows
+            return w
+        return jnp.take(w, self.inv_perm, axis=-1)
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        # Paper Sec. IV "Execution Flow": SAT (APoT half) runs in parallel
+        # with MPMA (uniform half); on TPU both halves stream the same
+        # activation tile — repro.kernels.m2q_matmul fuses them in one pass.
+        yu = self.uniform.matmul(x)
+        ya = self.apot.matmul(x)
+        y = jnp.concatenate([yu, ya], axis=-1)
+        if self.inv_perm is None:
+            return y
+        return jnp.take(y, self.inv_perm, axis=-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QExpertM2Q:
+    """Mixed-scheme quantization of a stacked MoE expert weight (E, K, N).
+
+    Scales are per-(expert, filter): reduce_axes=(1,).  Each expert gets its
+    own MSE scheme split (Eq. 6 applied per expert), but the 1:1 ratio makes
+    the two halves stackable: uniform payload (E, K, N/2), APoT codes
+    (E, K, N/2), inverse perms (E, N).
+    """
+
+    uniform: QUniform   # payload (E, K, Nu)
+    apot: QAPoT         # codes (E, K, Na)
+    inv_perm: jax.Array  # (E, N) int32
+
+    def tree_flatten(self):
+        return (self.uniform, self.apot, self.inv_perm), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def quantize(cls, w: jax.Array, apot_idx: jax.Array, uniform_idx: jax.Array,
+                 act_max_abs: Optional[jax.Array] = None) -> "QExpertM2Q":
+        """apot_idx/uniform_idx: (E, Na) / (E, Nu) per-expert filter indices."""
+        e = w.shape[0]
+        wu = jnp.take_along_axis(w, jnp.asarray(uniform_idx)[:, None, :], axis=-1)
+        wa = jnp.take_along_axis(w, jnp.asarray(apot_idx)[:, None, :], axis=-1)
+        perm = jnp.concatenate([jnp.asarray(uniform_idx, jnp.int32),
+                                jnp.asarray(apot_idx, jnp.int32)], axis=-1)
+        inv_perm = jnp.argsort(perm, axis=-1).astype(jnp.int32)
+        return cls(
+            uniform=QUniform.quantize(wu, bits=8, act_max_abs=act_max_abs,
+                                      reduce_axes=(1,)),
+            apot=QAPoT.quantize(wa, act_max_abs=act_max_abs, reduce_axes=(1,)),
+            inv_perm=inv_perm)
+
+    @property
+    def shape(self):
+        e, k, nu = self.uniform.shape
+        return (e, k, nu + self.apot.shape[-1])
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        w = jnp.concatenate(
+            [self.uniform.dequant(dtype), self.apot.dequant(dtype)], axis=-1)
+        if self.inv_perm is None:
+            return w
+        return jnp.take_along_axis(w, self.inv_perm[..., None, :], axis=-1)
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """Dense matmul for a scan-sliced stacked leaf (payloads are 2-D
+        inside the layer scan); identical contract to QM2Q.matmul."""
+        yu = self.uniform.matmul(x)
+        ya = self.apot.matmul(x)
+        y = jnp.concatenate([yu, ya], axis=-1)
+        if self.inv_perm is None:
+            return y
+        return jnp.take(y, self.inv_perm, axis=-1)
+
+    def expert_matmul(self, xe: jax.Array) -> jax.Array:
+        """y[E,C,N] = xe[E,C,K] @ w[E,K,N] with the mixed-scheme halves."""
+        u = self.uniform
+        if u.act_scale is not None:
+            xq = quantize_act(xe, u.act_scale)
+            acc = jax.lax.dot_general(
+                xq, u.payload, (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.int32)
+            xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+            yu = (acc.astype(jnp.float32)
+                  - xsum.astype(jnp.float32) * u.zero_point)
+            yu = (yu * (u.act_scale * u.scale)).astype(xe.dtype)
+        else:
+            yu = jnp.einsum("eck,ekn->ecn", xe, u.dequant(xe.dtype))
+        vals = packing.apot_decode_values(self.apot.codes, dtype=xe.dtype)
+        ya = jnp.einsum("eck,ekn->ecn", xe, vals) * self.apot.scale.astype(xe.dtype)
+        y = jnp.concatenate([yu, ya], axis=-1)
+        if self.inv_perm is None:
+            return y
+        return jnp.take_along_axis(y, self.inv_perm[..., None, :], axis=-1)
+
+
+QLeaf = (QUniform, QAPoT, QM2Q, QExpertM2Q)
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, QLeaf)
+
+
+def qmatmul(x: jax.Array, w) -> jax.Array:
+    """Uniform entry point used by nn.dense."""
+    return w.matmul(x)
+
+
+def weight_bits(qt) -> float:
+    """Average stored bits/weight (drives bandwidth modelling + reporting)."""
+    if isinstance(qt, QUniform):
+        return float(qt.bits)
+    if isinstance(qt, QAPoT):
+        return 8.0  # one byte per code (7 useful bits)
+    if isinstance(qt, (QM2Q, QExpertM2Q)):
+        n_u = qt.uniform.shape[-1]
+        n_a = qt.apot.shape[-1]
+        return (weight_bits(qt.uniform) * n_u + weight_bits(qt.apot) * n_a) / (n_u + n_a)
+    raise TypeError(type(qt))

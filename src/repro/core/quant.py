@@ -1,0 +1,244 @@
+"""M2Q quantizers: uniform (Eq. 1-2), PoT (Eq. 3), APoT (Eq. 5).
+
+All quantizers are weight-side (the paper applies M2Q exclusively to weights;
+activations use standard 8-bit uniform, layer-wise).  Weight quantization is
+*filter-wise*: one scale per output channel (the paper's "filter").
+
+Conventions
+-----------
+* ``axis`` is the OUTPUT-channel axis of the weight tensor.  For a dense
+  weight of shape (in, out) that is axis=-1; for a conv filter (kh, kw, cin,
+  cout) it is axis=-1; for depthwise (kh, kw, 1, c) also axis=-1.
+* Quantizers return small dataclasses holding integer payloads + scales.
+  ``dequant`` reconstructs f32.  Packing to int4 / APoT codes lives in
+  :mod:`repro.core.packing`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Uniform quantization (paper Eq. 1-2): asymmetric, unsigned b-bit.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UniformQ:
+    """Asymmetric uniform-quantized tensor (pre-packing)."""
+
+    q: jax.Array  # integer payload in [0, 2^bits - 1], stored as int32/uint8
+    scale: jax.Array  # per-channel (broadcastable) f32
+    zero_point: jax.Array  # per-channel (broadcastable) f32 (integer-valued)
+    bits: int
+    axis: int
+
+
+def _reduction_axes(ndim: int, axis: Optional[int],
+                    reduce_axes: Optional[tuple]) -> Optional[tuple]:
+    """Resolve which axes the quantization statistics reduce over.
+
+    ``reduce_axes`` wins if given (e.g. (1,) for per-(expert, filter) scales
+    on an (E, K, N) MoE weight); otherwise all axes except ``axis`` (the
+    paper's filter-wise scheme); ``axis=None`` -> tensor-wise.
+    """
+    if reduce_axes is not None:
+        return tuple(a % ndim for a in reduce_axes)
+    if axis is None:
+        return None
+    axis = axis % ndim
+    return tuple(i for i in range(ndim) if i != axis)
+
+
+def _moveaxis_stats(x: jax.Array, axis: Optional[int],
+                    reduce_axes: Optional[tuple] = None):
+    """Return (min, max) with keepdims over the resolved reduction axes."""
+    red = _reduction_axes(x.ndim, axis, reduce_axes)
+    if red is None:
+        return jnp.min(x), jnp.max(x)
+    return jnp.min(x, axis=red, keepdims=True), jnp.max(x, axis=red, keepdims=True)
+
+
+def uniform_quantize(
+    w: jax.Array, bits: int = 8, axis: Optional[int] = -1, eps: float = 1e-8,
+    reduce_axes: Optional[tuple] = None,
+) -> UniformQ:
+    """Paper Eq. (1)-(2).
+
+    ``axis=None`` -> tensor-wise (used for activations, layer-wise);
+    otherwise filter-wise along ``axis``; ``reduce_axes`` overrides (stats
+    reduce over exactly those axes).
+    """
+    lo, hi = _moveaxis_stats(w, axis, reduce_axes)
+    lo = jnp.minimum(lo, 0.0)  # zero always representable (no zp clipping)
+    hi = jnp.maximum(hi, 0.0)
+    qmax = float(2**bits - 1)
+    scale = jnp.maximum((hi - lo) / qmax, eps)
+    zp = jnp.clip(jnp.round(-lo / scale), 0.0, qmax)
+    q = jnp.clip(jnp.round(w / scale) + zp, 0.0, qmax)
+    return UniformQ(q=q.astype(jnp.int32), scale=scale, zero_point=zp, bits=bits,
+                    axis=(axis if axis is None else axis % w.ndim))
+
+
+def uniform_dequantize(u: UniformQ) -> jax.Array:
+    return (u.q.astype(jnp.float32) - u.zero_point) * u.scale
+
+
+def fake_quant_uniform(w: jax.Array, bits: int = 8, axis: Optional[int] = -1) -> jax.Array:
+    return uniform_dequantize(uniform_quantize(w, bits=bits, axis=axis))
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization: 8-bit symmetric (scale-only) layer-wise.
+#
+# We use the symmetric signed variant for the *runtime int8 path* because it
+# keeps the integer matmul zero-point-free on the activation side; the
+# asymmetric weight zero-point is folded analytically (see nn.qforward).
+# ---------------------------------------------------------------------------
+
+
+def act_scale_from_stats(max_abs: jax.Array, bits: int = 8) -> jax.Array:
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.maximum(max_abs / qmax, 1e-8)
+
+
+def quantize_act(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    qmax = float(2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+
+
+def fake_quant_act(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    return quantize_act(x, scale, bits).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# PoT quantization (paper Eq. 3).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PoTQ:
+    sign: jax.Array  # {-1, +1} int8
+    p: jax.Array  # exponent, integer-valued (<= 0), int8
+    is_zero: jax.Array  # bool mask of exact zeros
+    scale: jax.Array  # per-channel f32 (S = max - min)
+    bits: int
+    axis: int
+
+
+def pot_quantize(w: jax.Array, bits: int = 8, axis: int = -1, eps: float = 1e-8,
+                 reduce_axes=None) -> PoTQ:
+    lo, hi = _moveaxis_stats(w, axis, reduce_axes)
+    scale = jnp.maximum(hi - lo, eps)  # paper: S = max(W) - min(W)
+    a = jnp.abs(w) / scale
+    pmin = -(2**bits) + 1  # paper clip range [-2^b + 1, 0]
+    # log2 of 0 -> -inf; handle via is_zero mask.
+    is_zero = a < 2.0 ** (pmin - 1)
+    safe = jnp.where(is_zero, 1.0, a)
+    p = jnp.clip(jnp.round(jnp.log2(safe)), pmin, 0)
+    return PoTQ(sign=jnp.sign(w).astype(jnp.int8), p=p.astype(jnp.int8),
+                is_zero=is_zero, scale=scale, bits=bits,
+                axis=(axis if axis is None else axis % w.ndim))
+
+
+def pot_dequantize(t: PoTQ) -> jax.Array:
+    mag = jnp.exp2(t.p.astype(jnp.float32))
+    val = t.sign.astype(jnp.float32) * mag * t.scale
+    return jnp.where(t.is_zero, 0.0, val)
+
+
+def fake_quant_pot(w: jax.Array, bits: int = 8, axis: int = -1) -> jax.Array:
+    return pot_dequantize(pot_quantize(w, bits=bits, axis=axis))
+
+
+# ---------------------------------------------------------------------------
+# APoT quantization (paper Eq. 5): w_q = s * (2^p1 + 2^p2) * S.
+#
+# We use the hardware code layout of the M2-ViT SAT engine: each APoT weight
+# is (sign, e1, e2) with e = -p in [0, EMAX]; EMAX=7 gives 3-bit exponents ->
+# a 7-bit code (1+3+3), stored in one byte (packing.apot_encode).  The decode
+# is exactly two shifts + one add on the paper's SAT; on TPU it is two
+# exponent constructions + add, fused into the matmul kernel.
+# ---------------------------------------------------------------------------
+
+APOT_EMAX = 7  # 3-bit exponent field per component
+
+
+def apot_codebook(emax: int = APOT_EMAX) -> np.ndarray:
+    """All representable magnitudes (2^-a + 2^-b), a<=b in [0, emax]; plus 0.
+
+    Returned sorted ascending, as float32.  Size is emax*(emax+1)/2 + emax+1
+    (+1 for zero) = 37 for emax=7.
+    """
+    vals = {0.0}
+    for a in range(emax + 1):
+        for b in range(a, emax + 1):
+            vals.add(2.0**-a + 2.0**-b)
+    return np.array(sorted(vals), dtype=np.float32)
+
+
+def _apot_code_pairs(emax: int = APOT_EMAX):
+    """Parallel arrays: magnitude -> (e1, e2). Zero maps to (emax, emax) w/ flag."""
+    pairs = {}
+    for a in range(emax + 1):
+        for b in range(a, emax + 1):
+            pairs.setdefault(2.0**-a + 2.0**-b, (a, b))
+    mags = sorted(pairs)
+    e1 = np.array([pairs[m][0] for m in mags], dtype=np.int8)
+    e2 = np.array([pairs[m][1] for m in mags], dtype=np.int8)
+    return np.array(mags, dtype=np.float32), e1, e2
+
+
+@dataclasses.dataclass
+class APoTQ:
+    sign: jax.Array  # {-1,+1} int8
+    e1: jax.Array  # int8 in [0, emax]
+    e2: jax.Array  # int8 in [0, emax]
+    is_zero: jax.Array  # bool
+    scale: jax.Array  # per-channel f32
+    emax: int
+    axis: int
+
+
+def apot_quantize(w: jax.Array, axis: int = -1, emax: int = APOT_EMAX,
+                  eps: float = 1e-8, reduce_axes=None) -> APoTQ:
+    lo, hi = _moveaxis_stats(w, axis, reduce_axes)
+    scale = jnp.maximum(hi - lo, eps)  # paper's S, rescales |w| into [0, ~1]
+    a = jnp.abs(w) / scale
+    mags, ce1, ce2 = _apot_code_pairs(emax)
+    mags_j = jnp.asarray(mags)
+    # nearest codebook entry (incl. zero at index 0)
+    idx = jnp.argmin(jnp.abs(a[..., None] - mags_j), axis=-1)
+    is_zero = idx == 0
+    # shift so index 0 (zero) picks harmless exponents
+    e1 = jnp.asarray(np.concatenate([[emax], np.asarray(ce1)]))[idx]
+    e2 = jnp.asarray(np.concatenate([[emax], np.asarray(ce2)]))[idx]
+    return APoTQ(sign=jnp.where(w < 0, -1, 1).astype(jnp.int8),
+                 e1=e1.astype(jnp.int8), e2=e2.astype(jnp.int8),
+                 is_zero=is_zero, scale=scale, emax=emax, axis=axis % w.ndim)
+
+
+def apot_dequantize(t: APoTQ) -> jax.Array:
+    mag = jnp.exp2(-t.e1.astype(jnp.float32)) + jnp.exp2(-t.e2.astype(jnp.float32))
+    val = t.sign.astype(jnp.float32) * mag * t.scale
+    return jnp.where(t.is_zero, 0.0, val)
+
+
+def fake_quant_apot(w: jax.Array, axis: int = -1, emax: int = APOT_EMAX) -> jax.Array:
+    return apot_dequantize(apot_quantize(w, axis=axis, emax=emax))
+
+
+# ---------------------------------------------------------------------------
+# Per-filter quantization error (drives the MSE scheme selection, Eq. 6).
+# ---------------------------------------------------------------------------
+
+
+def filterwise_mse(w: jax.Array, w_hat: jax.Array, axis: int = -1) -> jax.Array:
+    axis = axis % w.ndim
+    red = tuple(i for i in range(w.ndim) if i != axis)
+    return jnp.mean((w - w_hat) ** 2, axis=red)

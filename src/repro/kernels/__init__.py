@@ -1,0 +1,15 @@
+# Pallas TPU kernels for the compute classes the paper's accelerator serves:
+#   int8_matmul — MPMA merged mode (W8A8, zero-point folded epilogue)
+#   int4_matmul — MPMA single-mode bandwidth path (nibble-packed weights)
+#   apot_matmul — SAT engine (APoT byte codes decoded in VMEM)
+#   m2q_matmul  — fused MPMA+SAT (the two-level mixed layer, 1:1 split)
+#   dwconv_w4   — 4-bit depthwise conv (the paper's memory-intensive case)
+# ops.py: jit'd wrappers (padding/dispatch); ref.py: pure-jnp oracles.
+from .ops import (
+    apot_matmul_op,
+    dwconv_w4_op,
+    int4_matmul_op,
+    int8_matmul_op,
+    m2q_matmul_op,
+    qtensor_matmul,
+)

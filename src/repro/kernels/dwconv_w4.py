@@ -1,0 +1,63 @@
+"""4-bit depthwise 3x3 conv kernel (the MPMA *single mode*, paper Sec. IV-1a).
+
+DWConv is the paper's memory-intensive class: one weight channel per filter,
+no cross-filter input reuse — so the win is bandwidth, exactly what 4-bit
+weights buy (Table II shows 4-bit is accuracy-free).  The packed nibbles
+(9, C/2) stay packed across HBM; decode happens once per channel tile in
+VMEM; the 9-tap accumulation mirrors the paper's output-parallel dataflow
+(partial sums accumulate across taps in registers, never leaving VMEM).
+
+Grid: (B, C/bc) — channels are the parallel dim (the paper's "blocks within
+a PE tile compute different channels").  H/W stay whole per block (edge
+models are 224x224; H-tiling is a recorded follow-up for larger maps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, H: int, W: int):
+    lo = (wp_ref[...] & 0x0F).astype(jnp.float32)
+    hi = ((wp_ref[...] >> 4) & 0x0F).astype(jnp.float32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(9, -1)  # (9, bc)
+    w = (q - zp_ref[...]) * scale_ref[...]  # decode once per channel tile
+    x = x_ref[0].astype(jnp.float32)  # (H+2, W+2, bc)
+    acc = jnp.zeros((H, W, x.shape[-1]), jnp.float32)
+    for i in range(3):
+        for j in range(3):
+            acc = acc + x[i:i + H, j:j + W] * w[3 * i + j]
+    o_ref[0] = acc
+
+
+def dwconv_w4(x: jax.Array, packed: jax.Array, scale: jax.Array,
+              zero_point: jax.Array, *, bc: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """x (B,H,W,C) (unpadded); packed (9, C/2) uint8; scale/zp (C,) f32.
+
+    Returns (B,H,W,C) f32 — depthwise 3x3, stride 1, SAME.
+    """
+    B, H, W, C = x.shape
+    bc = min(bc, C)
+    assert C % bc == 0 and bc % 2 == 0
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    grid = (B, C // bc)
+    return pl.pallas_call(
+        functools.partial(_kernel, H=H, W=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H + 2, W + 2, bc), lambda b, c: (b, 0, 0, c)),
+            pl.BlockSpec((9, bc // 2), lambda b, c: (0, c)),
+            pl.BlockSpec((1, bc), lambda b, c: (0, c)),
+            pl.BlockSpec((1, bc), lambda b, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, H, W, bc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, C), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xp, packed, scale.reshape(1, -1), zero_point.reshape(1, -1))

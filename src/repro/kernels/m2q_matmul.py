@@ -1,0 +1,100 @@
+"""Fused two-level mixed-quantization matmul — the flagship M2-ViT kernel.
+
+The paper pipelines its two engines (MPMA for the uniform filter half, SAT
+for the APoT half) over the same activation stream (Sec. IV "Execution
+Flow").  The TPU equivalent: ONE kernel invocation whose grid walks the
+activation tile once; per (m, k) step it feeds the int8 MXU dot for the
+uniform half AND the decode+dot for the APoT half from the *same* x tile in
+VMEM.  The 1:1 APoT:Uniform ratio (paper Sec. V-A) is what makes the two
+half-width outputs the same shape — the ratio literally aligns with the
+N-tiling here, mirroring the paper's ratio<->parallelism alignment.
+
+Inputs arrive pre-quantized (xq int8 + act_scale), since activations are
+8-bit uniform everywhere in M2Q.  The inverse filter permutation is applied
+by the caller (cheap gather epilogue in XLA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .apot_matmul import decode_apot_tile
+
+
+def _kernel(xq_ref, up_ref, uscale_ref, uzp_ref, ac_ref, ascale_s_ref,
+            act_scale_ref, yu_ref, ya_ref, uacc_ref, xsum_ref, aacc_ref,
+            *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        uacc_ref[...] = jnp.zeros_like(uacc_ref)
+        xsum_ref[...] = jnp.zeros_like(xsum_ref)
+        aacc_ref[...] = jnp.zeros_like(aacc_ref)
+
+    xq = xq_ref[...]
+    # uniform half: int8 x int8 -> int32 (MPMA merged mode; 2x MXU rate)
+    uacc_ref[...] += jax.lax.dot_general(
+        xq, up_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    xsum_ref[...] += jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+    # APoT half: decode codes in VMEM, f32 dot (SAT engine) — same x tile
+    w = decode_apot_tile(ac_ref[...])
+    aacc_ref[...] += jnp.dot(xq.astype(jnp.float32), w,
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        sa = act_scale_ref[0, 0]
+        u = uacc_ref[...].astype(jnp.float32)
+        corr = xsum_ref[...].astype(jnp.float32) * uzp_ref[...]
+        yu_ref[...] = (u - corr) * (sa * uscale_ref[...])
+        # APoT half consumed xq directly -> fold act_scale into epilogue
+        ya_ref[...] = aacc_ref[...] * (sa * ascale_s_ref[...])
+
+
+def m2q_matmul(xq: jax.Array, act_scale: jax.Array,
+               u_payload: jax.Array, u_scale: jax.Array, u_zp: jax.Array,
+               a_codes: jax.Array, a_scale: jax.Array,
+               *, bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool = False):
+    """xq (M,K) int8; uniform payload (K,Nu) int8; APoT codes (K,Na) uint8;
+    Nu == Na (1:1 ratio, ops.py pads). Returns (yu (M,Nu), ya (M,Na)) f32."""
+    M, K = xq.shape
+    Nu = u_payload.shape[1]
+    Na = a_codes.shape[1]
+    assert Nu == Na, "1:1 ratio keeps both halves tile-aligned"
+    nk = K // bk
+    grid = (M // bm, Nu // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, Nu), jnp.float32),
+            jax.ShapeDtypeStruct((M, Na), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xq, u_payload, u_scale.reshape(1, -1), u_zp.reshape(1, -1),
+      a_codes, a_scale.reshape(1, -1), act_scale.reshape(1, 1))

@@ -1,0 +1,167 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Handles: padding to MXU-aligned block multiples, interpret-mode fallback on
+CPU (the container has no TPU; interpret=True executes the kernel body in
+Python — correctness validation per the task spec), leading-batch-dim
+flattening, and QTensor-level entry points mirroring core.qtensor methods.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qtensor import QAPoT, QM2Q, QUniform
+from ..core.quant import quantize_act
+from . import ref
+from .apot_matmul import apot_matmul
+from .dwconv_w4 import dwconv_w4
+from .int4_matmul import int4_matmul
+from .int8_matmul import int8_matmul
+from .m2q_matmul import m2q_matmul
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, m0, m1, value=0):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+    return x
+
+
+def _pad1(x, m, value=0):
+    p = (-x.shape[0]) % m
+    if p:
+        x = jnp.pad(x, ((0, p),), constant_values=value)
+    return x
+
+
+def _block(m, cap=128):
+    """Largest power-of-two block <= cap that keeps tiny shapes legal."""
+    b = 8
+    while b * 2 <= min(m, cap):
+        b *= 2
+    return b
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def int8_matmul_op(xq, wq, act_scale, scale, zero_point,
+                   interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = xq.shape
+    N = wq.shape[1]
+    bm, bn, bk = _block(M), _block(N), _block(K)
+    xp = _pad2(xq, bm, bk)
+    wp = _pad2(wq, bk, bn)
+    y = int8_matmul(xp, wp, act_scale, _pad1(scale, bn), _pad1(zero_point, bn),
+                    bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def int4_matmul_op(x, packed, scale, zero_point,
+                   interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = x.shape
+    N = packed.shape[1] * 2
+    bm, bn, bk = _block(M), _block(N), _block(K)
+    xp = _pad2(x, bm, bk)
+    pp = _pad2(packed, bk, bn // 2)
+    y = int4_matmul(xp, pp, _pad1(scale, bn), _pad1(zero_point, bn),
+                    bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def apot_matmul_op(x, codes, scale, interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = x.shape
+    N = codes.shape[1]
+    bm, bn, bk = _block(M), _block(N), _block(K)
+    xp = _pad2(x, bm, bk)
+    # pad codes with the zero-flag byte so padded weights decode to 0
+    cp = _pad2(codes, bk, bn, value=0x80)
+    y = apot_matmul(xp, cp, _pad1(scale, bn), bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
+    return y[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def m2q_matmul_op(xq, act_scale, u_payload, u_scale, u_zp, a_codes, a_scale,
+                  interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    M, K = xq.shape
+    Nu, Na = u_payload.shape[1], a_codes.shape[1]
+    Nh = max(Nu, Na)
+    bm, bn, bk = _block(M), _block(Nh), _block(K)
+    Nhp = Nh + ((-Nh) % bn)
+    xp = _pad2(xq, bm, bk)
+    up = _pad2(u_payload, bk, 1)
+    up = jnp.pad(up, ((0, 0), (0, Nhp - Nu)))
+    ap = jnp.pad(a_codes, ((0, (-K) % bk), (0, Nhp - Na)),
+                 constant_values=0x80)
+    us = jnp.pad(u_scale.reshape(-1), (0, Nhp - Nu))
+    uz = jnp.pad(u_zp.reshape(-1), (0, Nhp - Nu))
+    asc = jnp.pad(a_scale.reshape(-1), (0, Nhp - Na))
+    yu, ya = m2q_matmul(xp, act_scale, up, us, uz, ap, asc,
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return yu[:M, :Nu], ya[:M, :Na]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dwconv_w4_op(x, packed, scale, zero_point,
+                 interpret: Optional[bool] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    C = x.shape[-1]
+    bc = _block(C)
+    pc = (-C) % bc
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pc)))
+        packed = jnp.pad(packed, ((0, 0), (0, pc // 2)))
+        scale = jnp.pad(scale, (0, pc))
+        zero_point = jnp.pad(zero_point, (0, pc))
+    y = dwconv_w4(x, packed, scale, zero_point, bc=bc, interpret=interpret)
+    return y[..., :C]
+
+
+# ---------------------------------------------------------------------------
+# QTensor-level entry points (kernel-backed twins of core.qtensor methods)
+# ---------------------------------------------------------------------------
+
+
+def qtensor_matmul(x: jax.Array, qt, interpret: Optional[bool] = None):
+    """Kernel-backed y = x @ W for 2-D QTensor leaves; x (..., K)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if isinstance(qt, QM2Q):
+        u, a = qt.uniform, qt.apot
+        sa = u.act_scale if u.act_scale is not None else jnp.float32(
+            jnp.max(jnp.abs(x2)) / 127.0 + 1e-9)
+        xq = quantize_act(x2, sa)
+        yu, ya = m2q_matmul_op(xq, sa, u.payload, u.scale.reshape(-1),
+                               u.zero_point.reshape(-1), a.codes,
+                               a.scale.reshape(-1), interpret=interpret)
+        y = jnp.concatenate([yu, ya], axis=-1)
+        y = jnp.take(y, qt.inv_perm, axis=-1)
+    elif isinstance(qt, QUniform) and qt.bits == 8:
+        sa = qt.act_scale if qt.act_scale is not None else jnp.float32(
+            jnp.max(jnp.abs(x2)) / 127.0 + 1e-9)
+        xq = quantize_act(x2, sa)
+        y = int8_matmul_op(xq, qt.payload, sa, qt.scale.reshape(-1),
+                           qt.zero_point.reshape(-1), interpret=interpret)
+    elif isinstance(qt, QUniform) and qt.bits == 4:
+        y = int4_matmul_op(x2.astype(jnp.float32), qt.payload,
+                           qt.scale.reshape(-1), qt.zero_point.reshape(-1),
+                           interpret=interpret)
+    elif isinstance(qt, QAPoT):
+        y = apot_matmul_op(x2.astype(jnp.float32), qt.codes,
+                           qt.scale.reshape(-1), interpret=interpret)
+    else:
+        raise TypeError(type(qt))
+    return y.reshape(*lead, y.shape[-1]).astype(x.dtype)

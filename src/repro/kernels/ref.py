@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These mirror the QTensor XLA paths bit-for-bit (same zero-point folding,
+same APoT decode), so kernel tests triangulate kernel == ref == QTensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import packing
+
+
+def int8_matmul_ref(xq: jax.Array, wq: jax.Array, act_scale: jax.Array,
+                    scale: jax.Array, zero_point: jax.Array) -> jax.Array:
+    """xq (M,K) int8; wq (K,N) int8 (offset-folded); scale/zp (N,) f32.
+
+    y = (xq @ wq - rowsum(xq) * zp) * act_scale * scale
+    """
+    acc = jax.lax.dot_general(xq, wq, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+    y = acc.astype(jnp.float32) - xsum.astype(jnp.float32) * zero_point[None, :]
+    return y * (act_scale * scale[None, :])
+
+
+def int4_matmul_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                    zero_point: jax.Array) -> jax.Array:
+    """x (M,K) f32; packed (K,N/2) uint8 nibbles; scale/zp (N,) f32.
+
+    Weights-only 4-bit: y = x @ ((unpack(packed) - zp) * scale).
+    """
+    q = packing.unpack_int4(packed).astype(jnp.float32)
+    w = (q - zero_point[None, :]) * scale[None, :]
+    return x @ w
+
+
+def apot_matmul_ref(x: jax.Array, codes: jax.Array,
+                    scale: jax.Array) -> jax.Array:
+    """x (M,K) f32; codes (K,N) uint8 APoT bytes; scale (N,) f32.
+
+    y = (x @ decode(codes)) * scale   (decode = s*(2^-e1 + 2^-e2), 0-aware)
+    """
+    vals = packing.apot_decode_values(codes, dtype=jnp.float32)
+    return (x @ vals) * scale[None, :]
+
+
+def m2q_matmul_ref(xq: jax.Array, act_scale: jax.Array,
+                   u_payload: jax.Array, u_scale: jax.Array, u_zp: jax.Array,
+                   a_codes: jax.Array, a_scale: jax.Array):
+    """Fused mixed-scheme layer (1:1 split). Returns (yu (M,Nu), ya (M,Na)).
+
+    Both halves consume the SAME quantized activation tile (xq int8):
+      yu = int8 path;  ya = (xq * act_scale) @ decode(codes) * a_scale.
+    """
+    yu = int8_matmul_ref(xq, u_payload, act_scale, u_scale, u_zp)
+    xf = xq.astype(jnp.float32) * act_scale
+    ya = apot_matmul_ref(xf, a_codes, a_scale)
+    return yu, ya
+
+
+def dwconv_w4_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                  zero_point: jax.Array) -> jax.Array:
+    """Depthwise 3x3, stride 1, SAME. x (B,H,W,C); packed (3,3,C/2) uint8;
+    scale/zp (C,) f32 (per-filter = per-channel for DWConv)."""
+    q = packing.unpack_int4(packed.reshape(9, -1)).astype(jnp.float32)
+    w = ((q - zero_point[None, :]) * scale[None, :]).reshape(3, 3, -1)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    H, W = x.shape[1], x.shape[2]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(3):
+        for j in range(3):
+            out = out + xp[:, i:i + H, j:j + W].astype(jnp.float32) * w[i, j]
+    return out

@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (EXPERIMENTS.md §Perf): compile ONE dry-run cell
+with a set of optimization knobs and print its roofline terms next to the
+recorded baseline — the measure step of the hypothesis->change->measure
+loop.
+
+  PYTHONPATH=src python -m repro.launch.perf_cell --arch qwen3-14b \
+      --shape train_4k --mesh single --set attn_bf16_mm=1 --set causal_skip=1 \
+      --tag bf16mm+triangle
+
+Knobs: any ArchConfig field via --set k=v (ints/bools/floats inferred),
+--cache-shard (model-axis cache sharding), --microbatches, --no-fsdp.
+Records land in results/perf.jsonl with the tag.
+"""
+import argparse
+import json
+
+from .dryrun import run_cell
+
+
+def _parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override k=v (repeatable)")
+    ap.add_argument("--cache-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="perf")
+    ap.add_argument("--out", default="results/perf.jsonl")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_val(v)
+        if k in ("attn_bf16_mm", "causal_skip"):
+            overrides[k] = bool(_parse_val(v))
+
+    rec = run_cell(args.arch, args.shape, args.mesh, out_path=args.out,
+                   fsdp=not args.no_fsdp, microbatches=args.microbatches,
+                   cache_shard_model=args.cache_shard,
+                   cfg_overrides=overrides or None, tag=args.tag,
+                   save_hlo_dir=args.save_hlo)
+
+    # print roofline terms for this record vs the recorded baseline
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks.roofline import load_cells, terms_for
+    t_new = terms_for(rec)
+    base = load_cells().get((args.arch, args.shape, args.mesh))
+    print("\n=== perf cell summary ===")
+    if base is not None and base.get("status") == "ok":
+        t_old = terms_for(base)
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "roofline_fraction"):
+            delta = (t_new[k] / t_old[k] - 1) * 100 if t_old[k] else 0.0
+            print(f"{k:20s} baseline={t_old[k]:.4g}  now={t_new[k]:.4g} "
+                  f"({delta:+.1f}%)")
+        print(f"dominant: {t_old['dominant']} -> {t_new['dominant']}")
+    else:
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "roofline_fraction", "dominant"):
+            print(f"{k:20s} {t_new[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Canonical input/cache spec builders for every (arch x shape) cell.
+
+Used concretely by the smoke tests and abstractly (ShapeDtypeStruct via
+jax.eval_shape — no allocation) by the multi-pod dry-run.
+
+Assigned LM shapes:
+  train_4k     seq 4096,  global_batch 256   -> train_step
+  prefill_32k  seq 32768, global_batch 32    -> prefill (inference)
+  decode_32k   seq 32768, global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1    -> serve_step, sub-quadratic only
+
+Modality frontends are stubs per the task spec: whisper gets precomputed
+frame embeddings (B, n_audio_ctx, D); internvl2 gets projected patch
+embeddings (B, n_patches, D).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+from ..models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_is_skipped(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    """Returns a reason string if this (arch x shape) cell is skipped."""
+    from ..configs.registry import SUBQUADRATIC
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC \
+            and cfg.name.split("-reduced")[0] not in SUBQUADRATIC:
+        return ("pure full-attention arch: 524k dense-KV decode is the "
+                "quadratic regime the paper's efficient-ViT focus avoids")
+    return None
+
+
+def _rng_tokens(shape, vocab, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, vocab, size=shape, dtype=np.int32))
+
+
+def train_inputs(cfg: ArchConfig, batch: int, seq: int, concrete: bool = False):
+    """Inputs for train_step / forward: {tokens, labels, [frames]}."""
+    mk_tok = (lambda s: _rng_tokens(s, cfg.vocab_size)) if concrete else (
+        lambda s: jax.ShapeDtypeStruct(s, jnp.int32))
+    mk_f32 = (lambda s: jnp.zeros(s, jnp.bfloat16)) if concrete else (
+        lambda s: jax.ShapeDtypeStruct(s, jnp.bfloat16))
+    out = {}
+    if cfg.family == "whisper":
+        out["frames"] = mk_f32((batch, cfg.n_audio_ctx, cfg.d_model))
+        out["tokens"] = mk_tok((batch, seq))
+        out["labels"] = mk_tok((batch, seq))
+    elif cfg.n_patches:
+        text_len = max(seq - cfg.n_patches, 1)
+        out["prefix_embeds"] = mk_f32((batch, cfg.n_patches, cfg.d_model))
+        out["tokens"] = mk_tok((batch, text_len))
+        out["labels"] = mk_tok((batch, text_len))
+    else:
+        out["tokens"] = mk_tok((batch, seq))
+        out["labels"] = mk_tok((batch, seq))
+    return out
+
+
+def prefill_inputs(cfg: ArchConfig, batch: int, seq: int, concrete: bool = False,
+                   cache_dtype=jnp.bfloat16):
+    model = get_model(cfg)
+    inp = train_inputs(cfg, batch, seq, concrete=concrete)
+    inp.pop("labels")
+    if concrete:
+        cache = model.init_cache(cfg, batch, seq, dtype=cache_dtype)
+    else:
+        cache = jax.eval_shape(
+            lambda: model.init_cache(cfg, batch, seq, dtype=cache_dtype))
+    return inp, cache
+
+
+def decode_inputs(cfg: ArchConfig, batch: int, seq: int, concrete: bool = False,
+                  cache_dtype=jnp.bfloat16):
+    """serve_step inputs: one new token against a cache of length seq."""
+    model = get_model(cfg)
+    if concrete:
+        cache = model.init_cache(cfg, batch, seq, dtype=cache_dtype)
+        cache["lengths"] = jnp.full((batch,), seq - 1, jnp.int32)
+        tokens = _rng_tokens((batch, 1), cfg.vocab_size)
+    else:
+        cache = jax.eval_shape(
+            lambda: model.init_cache(cfg, batch, seq, dtype=cache_dtype))
+        tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return cache, tokens

@@ -1,0 +1,48 @@
+"""Training driver CLI.
+
+Reduced configs run end-to-end on CPU; full configs are for real clusters
+(the multi-pod dry-run proves their distribution).  Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
+      --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs.registry import ARCHS, REDUCED
+from ..train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--metrics", default=None)
+    args = ap.parse_args()
+
+    cfg = (REDUCED if args.reduced else ARCHS)[args.arch]
+    tc = TrainConfig(steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq, lr=args.lr,
+                     microbatches=args.microbatches,
+                     grad_compression=args.grad_compression,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     metrics_path=args.metrics)
+    _, _, info = train(cfg, tc)
+    if info["losses"]:
+        print(f"[train] arch={cfg.name} steps={info['last_step'] + 1} "
+              f"first_loss={info['losses'][0]:.4f} "
+              f"last_loss={info['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

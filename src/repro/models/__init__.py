@@ -1,0 +1,18 @@
+# Model zoo: the paper's EfficientViT + the 10 assigned architectures.
+from . import dense_lm, efficientvit, recurrentgemma, rwkv, whisper
+from .config import ArchConfig
+
+# family -> model module (moe_lm shares the dense_lm implementation; the
+# internvl2 VLM is dense_lm + a stub patch-embedding prefix)
+FAMILIES = {
+    "dense_lm": dense_lm,
+    "moe_lm": dense_lm,
+    "rwkv": rwkv,
+    "recurrentgemma": recurrentgemma,
+    "whisper": whisper,
+    "efficientvit": efficientvit,
+}
+
+
+def get_model(cfg: ArchConfig):
+    return FAMILIES[cfg.family]

@@ -1,0 +1,79 @@
+"""Unified architecture config for the assigned pool + the paper's models."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense_lm | moe_lm | rwkv | recurrentgemma | whisper | efficientvit
+    n_layers: int
+    d_model: int
+    vocab_size: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 128
+    d_ff: int = 0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    ffn: str = "swiglu"  # swiglu | relu2 | gelu (classic 2-matrix MLP)
+    rope_theta: float = 10000.0
+    norm: str = "rms"  # rms | layer
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_shared_expert: bool = False
+    moe_capacity_factor: float = 1.25
+    # hybrid / local attention
+    window: Optional[int] = None
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0
+    conv1d_width: int = 4
+    # rwkv
+    rwkv_head_dim: int = 64
+    # encoder-decoder (whisper): n_layers = decoder layers
+    n_enc_layers: int = 0
+    n_audio_ctx: int = 1500
+    # vlm stub frontend
+    n_patches: int = 0
+    # efficientvit (vision)
+    widths: Tuple[int, ...] = ()
+    depths: Tuple[int, ...] = ()
+    img_res: int = 224
+    n_classes: int = 1000
+    dim_per_head: int = 16  # EfficientViT MSA head dim
+    # perf knobs (EXPERIMENTS.md §Perf; defaults = recorded baseline)
+    attn_bf16_mm: bool = False   # MXU-native bf16 attention dots, f32 accum
+    causal_skip: bool = False    # triangular chunk scan (skip masked pairs)
+    act_sharding: str = ""       # ""|"data"|"pod+data": pin activation batch
+                                 # sharding at block boundaries (anti-reshard)
+    remat_policy: str = "full"   # full|dots: checkpoint policy for the
+                                 # layer scan (dots = keep MXU outputs)
+    kv_cache_dtype: str = "bf16"  # bf16|int8: int8 = M2Q applied to the KV
+                                  # cache (per-row scales, integer attention)
+    # numerics
+    dtype: str = "bfloat16"
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 128: TP-16 shardable and even per
+        shard (int4 nibble packing needs even filter counts)."""
+        return round_up(self.vocab_size, 128)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,339 @@
+"""Decoder-only transformer LM family.
+
+Covers qwen1.5-0.5b (QKV bias, MHA), qwen3-14b (qk_norm, GQA),
+granite-3-8b (GQA), minitron-4b (GQA, squared-ReLU FFN), internvl2-2b
+(InternLM2 backbone + stub patch-embedding prefix), and the MoE variants
+(llama4-scout, dbrx) via ``cfg.moe_experts > 0``.
+
+Layer parameters are *stacked* along a leading L axis and executed with
+``lax.scan`` (compact HLO — essential for compiling 40-layer full-size
+configs in the dry-run).  ``unroll=True`` runs a python loop instead, which
+is what PTQ calibration uses (CalibTensor observers are not traceable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec
+
+from .. import nn
+from ..core import policy as pol
+from .config import ArchConfig
+
+
+def _csc(x, cfg: ArchConfig):
+    """Pin the batch axis of an activation to the data axes (replicated on
+    model) — prevents XLA SPMD from replicating batch / sharding attention
+    contractions inside the chunk loops (EXPERIMENTS.md §Perf iter 1)."""
+    if not cfg.act_sharding:
+        return x
+    axes = tuple(cfg.act_sharding.split("+"))
+    spec = PartitionSpec(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+# perm-foldable FFN filter groups: (up, gate|None, down) path regexes
+FFN_FOLD_GROUPS = [
+    (r"layers/mlp/w1$", r"layers/mlp/w3$", r"layers/mlp/w2$"),   # swiglu
+    (r"layers/mlp/w1$", None, r"layers/mlp/w2$"),                # relu2
+    (r"layers/shared/w1$", r"layers/shared/w3$", r"layers/shared/w2$"),
+]
+
+# quantization rules: path regex -> layer kind (first match wins)
+QUANT_RULES = [
+    (r"embed", pol.KIND_EMBEDDING),
+    (r"lm_head", pol.KIND_HEAD),
+    (r"experts/", pol.KIND_EXPERT),
+    (r"router", pol.KIND_SKIP),
+    (r"(ln|norm|gamma|scale|bias|b_)", pol.KIND_SKIP),
+    (r"attn/w[qkvo]$", pol.KIND_DENSE),
+    (r"(mlp|shared)/w\d$", pol.KIND_DENSE),
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 12)
+    D, F = cfg.d_model, cfg.d_ff
+    p = {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "attn": {
+            "wq": nn.lecun_normal(ks[0], (D, cfg.q_dim)),
+            "wk": nn.lecun_normal(ks[1], (D, cfg.kv_dim)),
+            "wv": nn.lecun_normal(ks[2], (D, cfg.kv_dim)),
+            "wo": nn.lecun_normal(ks[3], (cfg.q_dim, D)),
+        },
+    }
+    if cfg.qkv_bias:
+        p["attn"]["bq"] = jnp.zeros((cfg.q_dim,), jnp.float32)
+        p["attn"]["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["attn"]["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    if cfg.qk_norm:
+        p["attn"]["q_gamma"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["attn"]["k_gamma"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    if cfg.moe_experts:
+        E, Fm = cfg.moe_experts, cfg.moe_d_ff or cfg.d_ff
+        p["moe"] = {
+            "router": nn.lecun_normal(ks[4], (D, E)),
+            "experts": {
+                "w1": nn.lecun_normal(ks[5], (E, D, Fm)),
+                "w3": nn.lecun_normal(ks[6], (E, D, Fm)),
+                "w2": nn.lecun_normal(ks[7], (E, Fm, D)),
+            },
+        }
+        if cfg.moe_shared_expert:
+            p["shared"] = {
+                "w1": nn.lecun_normal(ks[8], (D, Fm)),
+                "w3": nn.lecun_normal(ks[9], (D, Fm)),
+                "w2": nn.lecun_normal(ks[10], (Fm, D)),
+            }
+    else:
+        if cfg.ffn == "relu2":
+            p["mlp"] = {
+                "w1": nn.lecun_normal(ks[5], (D, F)),
+                "w2": nn.lecun_normal(ks[6], (F, D)),
+            }
+        else:  # swiglu
+            p["mlp"] = {
+                "w1": nn.lecun_normal(ks[5], (D, F)),
+                "w3": nn.lecun_normal(ks[6], (D, F)),
+                "w2": nn.lecun_normal(ks[7], (F, D)),
+            }
+    return p
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(cfg, k))(layer_keys)
+    return {
+        "embed": nn.trunc_normal(k_emb, (cfg.padded_vocab, cfg.d_model)),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": nn.lecun_normal(k_head, (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ArchConfig, lp, x, positions):
+    a = lp["attn"]
+    q = nn.dense(x, a["wq"], a.get("bq"))
+    k = nn.dense(x, a["wk"], a.get("bk"))
+    v = nn.dense(x, a["wv"], a.get("bv"))
+    B, S = x.shape[0], x.shape[1]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = nn.qk_rms_norm(q, a["q_gamma"])
+        k = nn.qk_rms_norm(k, a["k_gamma"])
+    q = nn.apply_rope(q, positions, cfg.rope_theta)
+    k = nn.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(cfg: ArchConfig, lp, x):
+    if cfg.moe_experts:
+        B, S, D = x.shape
+        y = nn.moe_ffn(
+            x.reshape(B * S, D), lp["moe"],
+            nn.MoEConfig(num_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+                         d_model=cfg.d_model, d_ff=cfg.moe_d_ff or cfg.d_ff,
+                         capacity_factor=cfg.moe_capacity_factor,
+                         constrain_ep=cfg.act_sharding),
+        ).reshape(B, S, D)
+        if cfg.moe_shared_expert:
+            s = lp["shared"]
+            y = y + nn.swiglu(x, s["w1"], s["w3"], s["w2"])
+        return y
+    m = lp["mlp"]
+    if cfg.ffn == "relu2":
+        return nn.dense(jnp.square(jax.nn.relu(nn.dense(x, m["w1"]))), m["w2"])
+    return nn.swiglu(x, m["w1"], m["w3"], m["w2"])
+
+
+def block(cfg: ArchConfig, lp, x, positions):
+    x = _csc(x, cfg)
+    h = nn.rms_norm(x, lp["ln1"])
+    q, k, v = _qkv(cfg, lp, h, positions)
+    q, k, v = _csc(q, cfg), _csc(k, cfg), _csc(v, cfg)
+    o = nn.flash_attention(q, k, v, causal=True, window=cfg.window,
+                           bf16_mm=cfg.attn_bf16_mm,
+                           causal_skip=cfg.causal_skip)
+    o = nn.dense(_csc(o, cfg).reshape(*x.shape[:2], cfg.q_dim),
+                 lp["attn"]["wo"])
+    x = x + _csc(o, cfg)
+    x = x + _csc(_ffn(cfg, lp, nn.rms_norm(x, lp["ln2"])), cfg)
+    return x
+
+
+def block_decode(cfg: ArchConfig, lp, x, kv, lengths):
+    """One-token decode; kv is the per-layer cache slice dict; returns
+    (x, new kv).  int8 caches use the fully-integer attention path."""
+    B = x.shape[0]
+    h = nn.rms_norm(x, lp["ln1"])
+    positions = (lengths - 1)[:, None]  # (B, 1) absolute position of new token
+    q, k, v = _qkv(cfg, lp, h, positions)
+    bidx = jnp.arange(B)
+    if cfg.kv_cache_dtype == "int8":
+        k8, ks = nn.quantize_kv_rows(k[:, 0])
+        v8, vs = nn.quantize_kv_rows(v[:, 0])
+        kv = dict(kv)
+        kv["k"] = kv["k"].at[bidx, lengths - 1].set(k8)
+        kv["v"] = kv["v"].at[bidx, lengths - 1].set(v8)
+        kv["k_scale"] = kv["k_scale"].at[bidx, lengths - 1].set(ks)
+        kv["v_scale"] = kv["v_scale"].at[bidx, lengths - 1].set(vs)
+        o = nn.decode_attention_int8(q, kv["k"], kv["v"], kv["k_scale"],
+                                     kv["v_scale"], lengths,
+                                     window=cfg.window)
+    else:
+        kv = dict(kv)
+        kv["k"] = kv["k"].at[bidx, lengths - 1].set(
+            k[:, 0].astype(kv["k"].dtype))
+        kv["v"] = kv["v"].at[bidx, lengths - 1].set(
+            v[:, 0].astype(kv["v"].dtype))
+        o = nn.decode_attention(q, kv["k"], kv["v"], lengths,
+                                window=cfg.window, bf16_mm=cfg.attn_bf16_mm)
+    o = nn.dense(o.reshape(B, 1, cfg.q_dim), lp["attn"]["wo"])
+    x = x + o
+    x = x + _ffn(cfg, lp, nn.rms_norm(x, lp["ln2"]))
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, tokens, prefix_embeds, dtype):
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    if prefix_embeds is not None:  # VLM stub frontend (internvl2)
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, tokens, prefix_embeds=None,
+            unroll: bool = False, remat: bool = True):
+    """tokens: (B, S) -> logits (B, S_total, padded_vocab)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds, dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        return block(cfg, lp, x, positions), None
+
+    if unroll:
+        L = cfg.n_layers
+        for i in range(L):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            x, _ = body(x, lp)
+    else:
+        if remat and cfg.remat_policy == "dots":
+            f = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif remat:
+            f = jax.checkpoint(body)
+        else:
+            f = body
+        x, _ = jax.lax.scan(f, x, params["layers"])
+    x = nn.rms_norm(x, params["final_norm"])
+    return nn.dense(x, params["lm_head"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1]
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.float32),
+            "v_scale": jnp.zeros(sshape, jnp.float32),
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    """tokens: (B, 1). Returns (logits (B, 1, V), new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    lengths = cache["lengths"] + 1  # include the new token
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    kv_layers = {k: v for k, v in cache.items() if k != "lengths"}
+
+    def body(x, xs):
+        lp, kv = xs
+        x, kv = block_decode(cfg, lp, x, kv, lengths)
+        return x, kv
+
+    x, kv_new = jax.lax.scan(body, x, (params["layers"], kv_layers))
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.dense(x, params["lm_head"])
+    return logits, {**kv_new, "lengths": lengths}
+
+
+def prefill(cfg: ArchConfig, params, cache, tokens, prefix_embeds=None):
+    """Fill the cache from a prompt; returns (last-token logits, cache).
+
+    Implemented as forward + cache writeback (the flash path computes k/v per
+    layer; for serving-scale prefill we re-project k/v into the cache via a
+    scan identical to forward's but emitting kv).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds, dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    T = cache["k"].shape[2]
+
+    kv_layers = {k: v for k, v in cache.items() if k != "lengths"}
+
+    def body(x, xs):
+        lp, kv = xs
+        h = nn.rms_norm(x, lp["ln1"])
+        q, k, v = _qkv(cfg, lp, h, positions)
+        kv = dict(kv)
+        if cfg.kv_cache_dtype == "int8":
+            k8, ks = nn.quantize_kv_rows(k)
+            v8, vs = nn.quantize_kv_rows(v)
+            kv["k"] = jax.lax.dynamic_update_slice(kv["k"], k8, (0, 0, 0, 0))
+            kv["v"] = jax.lax.dynamic_update_slice(kv["v"], v8, (0, 0, 0, 0))
+            kv["k_scale"] = jax.lax.dynamic_update_slice(
+                kv["k_scale"], ks, (0, 0, 0))
+            kv["v_scale"] = jax.lax.dynamic_update_slice(
+                kv["v_scale"], vs, (0, 0, 0))
+        else:
+            kv["k"] = jax.lax.dynamic_update_slice(
+                kv["k"], k.astype(kv["k"].dtype), (0, 0, 0, 0))
+            kv["v"] = jax.lax.dynamic_update_slice(
+                kv["v"], v.astype(kv["v"].dtype), (0, 0, 0, 0))
+        o = nn.flash_attention(q, k, v, causal=True, window=cfg.window,
+                               bf16_mm=cfg.attn_bf16_mm,
+                               causal_skip=cfg.causal_skip)
+        o = nn.dense(o.reshape(B, S, cfg.q_dim), lp["attn"]["wo"])
+        x = x + o
+        x = x + _ffn(cfg, lp, nn.rms_norm(x, lp["ln2"]))
+        return x, kv
+
+    x, kv_new = jax.lax.scan(body, x, (params["layers"], kv_layers))
+    x = nn.rms_norm(x[:, -1:], params["final_norm"])
+    logits = nn.dense(x, params["lm_head"])
+    new_cache = {**kv_new, "lengths": jnp.full((B,), S, jnp.int32)}
+    return logits, new_cache

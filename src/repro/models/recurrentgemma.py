@@ -1,0 +1,357 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention
+in a 1:2 (attn:recurrent) pattern — layer i is attention iff i % 3 == 2.
+
+The recurrent layers are scanned in (rec, rec, attn) groups; leftover
+recurrent layers (38 = 12*3 + 2) are unrolled at the tail.  Local attention
+uses a *ring-buffer* KV cache bounded by the window (2048), and the RG-LRU
+state is O(1) — together these make the ``long_500k`` decode cell run with a
+constant ~window-sized memory footprint.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..core import policy as pol
+from .config import ArchConfig
+
+FFN_FOLD_GROUPS = [
+    (r"rec/mlp/w1$", r"rec/mlp/w3$", r"rec/mlp/w2$"),
+    (r"attn/mlp/w1$", r"attn/mlp/w3$", r"attn/mlp/w2$"),
+]
+
+QUANT_RULES = [
+    (r"embed", pol.KIND_EMBEDDING),
+    (r"lm_head", pol.KIND_HEAD),
+    (r"(ln|norm|gamma|lam|conv_b|b_)", pol.KIND_SKIP),
+    (r"conv_w", pol.KIND_SKIP),  # (4, R) temporal conv: tiny, bf16
+    (r"(wa|wx|w_in1|w_in2|w_out)$", pol.KIND_DENSE),
+    (r"attn/w[qkvo]$", pol.KIND_DENSE),
+    (r"mlp/w\d$", pol.KIND_DENSE),
+]
+
+
+def n_attn_layers(cfg: ArchConfig) -> int:
+    return sum(1 for i in range(cfg.n_layers) if i % 3 == 2)
+
+
+def n_rec_layers(cfg: ArchConfig) -> int:
+    return cfg.n_layers - n_attn_layers(cfg)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_rec(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    D, R, F = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.d_ff
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "mix": {
+            "w_in1": nn.lecun_normal(ks[0], (D, R)),
+            "w_in2": nn.lecun_normal(ks[1], (D, R)),
+            "w_out": nn.lecun_normal(ks[2], (R, D)),
+            "conv_w": nn.trunc_normal(ks[3], (cfg.conv1d_width, R), std=0.1),
+            "conv_b": jnp.zeros((R,), jnp.float32),
+            "wa": nn.lecun_normal(ks[4], (R, R)),
+            "wx": nn.lecun_normal(ks[5], (R, R)),
+            "ba": jnp.zeros((R,), jnp.float32),
+            "bx": jnp.zeros((R,), jnp.float32),
+            # Λ init so a ~ U(0.9, 0.999) at r=1 (Griffin appendix)
+            "lam": jnp.linspace(0.5, 4.0, R, dtype=jnp.float32),
+        },
+        "mlp": _init_mlp(cfg, ks[6]),
+    }
+
+
+def _init_mlp(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w1": nn.lecun_normal(ks[0], (D, F)),
+        "w3": nn.lecun_normal(ks[1], (D, F)),
+        "w2": nn.lecun_normal(ks[2], (F, D)),
+    }
+
+
+def _init_attn(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    D = cfg.d_model
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "attn": {
+            "wq": nn.lecun_normal(ks[0], (D, cfg.q_dim)),
+            "wk": nn.lecun_normal(ks[1], (D, cfg.kv_dim)),
+            "wv": nn.lecun_normal(ks[2], (D, cfg.kv_dim)),
+            "wo": nn.lecun_normal(ks[3], (cfg.q_dim, D)),
+        },
+        "mlp": _init_mlp(cfg, ks[4]),
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    k_emb, k_rec, k_attn, k_head = jax.random.split(key, 4)
+    nr, na = n_rec_layers(cfg), n_attn_layers(cfg)
+    rec = jax.vmap(lambda k: _init_rec(cfg, k))(jax.random.split(k_rec, nr))
+    attn = jax.vmap(lambda k: _init_attn(cfg, k))(jax.random.split(k_attn, na))
+    return {
+        "embed": nn.trunc_normal(k_emb, (cfg.padded_vocab, cfg.d_model)),
+        "rec": rec,
+        "attn": attn,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": nn.lecun_normal(k_head, (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _rec_mix(cfg, mp, x, h0, conv0):
+    """Griffin recurrent mixer. x: (B,T,D). Returns (y, h_T, conv_state)."""
+    u = nn.dense(x, mp["w_in1"])
+    gate = nn.gelu(nn.dense(x, mp["w_in2"]))
+    u, conv_state = nn.temporal_conv1d(u, mp["conv_w"], mp["conv_b"], state=conv0)
+    h_final, h = nn.rg_lru(u, h0, mp)
+    y = nn.dense(h * gate, mp["w_out"])
+    return y, h_final, conv_state
+
+
+def _rec_layer(cfg, lp, x, h0, conv0):
+    y, h, cs = _rec_mix(cfg, lp["mix"], nn.rms_norm(x, lp["ln1"]), h0, conv0)
+    x = x + y
+    m = lp["mlp"]
+    x = x + nn.swiglu(nn.rms_norm(x, lp["ln2"]), m["w1"], m["w3"], m["w2"])
+    return x, h, cs
+
+
+def _attn_layer(cfg, lp, x, positions):
+    a = lp["attn"]
+    h = nn.rms_norm(x, lp["ln1"])
+    B, S = x.shape[0], x.shape[1]
+    q = nn.dense(h, a["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = nn.dense(h, a["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = nn.dense(h, a["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = nn.apply_rope(q, positions, cfg.rope_theta)
+    k = nn.apply_rope(k, positions, cfg.rope_theta)
+    o = nn.flash_attention(q, k, v, causal=True, window=cfg.window,
+                           bf16_mm=cfg.attn_bf16_mm,
+                           causal_skip=cfg.causal_skip)
+    x = x + nn.dense(o.reshape(B, S, cfg.q_dim), a["wo"])
+    m = lp["mlp"]
+    x = x + nn.swiglu(nn.rms_norm(x, lp["ln2"]), m["w1"], m["w3"], m["w2"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill shape)
+# ---------------------------------------------------------------------------
+
+
+def _group_counts(cfg) -> Tuple[int, int]:
+    g = cfg.n_layers // 3
+    extra = cfg.n_layers - 3 * g  # leftover recurrent layers (pattern rec,rec,attn)
+    return g, extra
+
+
+def forward(cfg: ArchConfig, params, tokens, prefix_embeds=None,
+            unroll: bool = False, remat: bool = True):
+    dtype = jnp.dtype(cfg.dtype)
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    R = cfg.lru_width or cfg.d_model
+    G, extra = _group_counts(cfg)
+
+    rec_groups = jax.tree.map(
+        lambda t: t[: 2 * G].reshape(G, 2, *t.shape[1:]), params["rec"])
+
+    def group_body(x, xs):
+        rec2, attn1 = xs
+        for j in range(2):
+            lp = jax.tree.map(lambda t: t[j], rec2)
+            h0 = jnp.zeros((B, R), jnp.float32)
+            c0 = jnp.zeros((B, cfg.conv1d_width - 1, R), dtype)
+            x, _, _ = _rec_layer(cfg, lp, x, h0, c0)
+        x = _attn_layer(cfg, attn1, x, positions)
+        return x, None
+
+    if unroll:
+        for g in range(G):
+            sl = jax.tree.map(lambda t: t[g], (rec_groups, params["attn"]))
+            x, _ = group_body(x, sl)
+    else:
+        body = jax.checkpoint(group_body) if remat else group_body
+        x, _ = jax.lax.scan(body, x, (rec_groups, params["attn"]))
+    for i in range(extra):
+        lp = jax.tree.map(lambda t: t[2 * G + i], params["rec"])
+        h0 = jnp.zeros((B, R), jnp.float32)
+        c0 = jnp.zeros((B, cfg.conv1d_width - 1, R), dtype)
+        x, _, _ = _rec_layer(cfg, lp, x, h0, c0)
+    x = nn.rms_norm(x, params["final_norm"])
+    return nn.dense(x, params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# decode (ring-buffer local attention + carried LRU/conv state)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    R = cfg.lru_width or cfg.d_model
+    W = min(cfg.window or max_len, max_len)
+    nr, na = n_rec_layers(cfg), n_attn_layers(cfg)
+    return {
+        "h": jnp.zeros((nr, batch, R), jnp.float32),
+        "conv": jnp.zeros((nr, batch, cfg.conv1d_width - 1, R), dtype),
+        "k": jnp.zeros((na, batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((na, batch, W, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _attn_decode(cfg, lp, x, kc, vc, lengths):
+    """Ring-buffer windowed decode. kc/vc: (B, W, Hkv, hd)."""
+    a = lp["attn"]
+    B = x.shape[0]
+    W = kc.shape[1]
+    h = nn.rms_norm(x, lp["ln1"])
+    pos = (lengths - 1)[:, None]
+    q = nn.dense(h, a["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = nn.dense(h, a["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = nn.dense(h, a["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = nn.apply_rope(q, pos, cfg.rope_theta)
+    k = nn.apply_rope(k, pos, cfg.rope_theta)  # rope at write time
+    slot = (lengths - 1) % W
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+    # ring semantics: valid slots = min(length, W); order irrelevant to softmax
+    o = nn.decode_attention(q, kc, vc, jnp.minimum(lengths, W),
+                            bf16_mm=cfg.attn_bf16_mm)
+    x = x + nn.dense(o.reshape(B, 1, cfg.q_dim), a["wo"])
+    m = lp["mlp"]
+    x = x + nn.swiglu(nn.rms_norm(x, lp["ln2"]), m["w1"], m["w3"], m["w2"])
+    return x, kc, vc
+
+
+def _rec_decode(cfg, lp, x, h0, conv0):
+    mp = lp["mix"]
+    hx = nn.rms_norm(x, lp["ln1"])
+    u = nn.dense(hx, mp["w_in1"])
+    gate = nn.gelu(nn.dense(hx, mp["w_in2"]))
+    u, conv_state = nn.temporal_conv1d(u, mp["conv_w"], mp["conv_b"], state=conv0)
+    h_new, y = nn.rg_lru_step(u[:, 0], h0, mp)
+    y = nn.dense(y[:, None] * gate, mp["w_out"])
+    x = x + y
+    m = lp["mlp"]
+    x = x + nn.swiglu(nn.rms_norm(x, lp["ln2"]), m["w1"], m["w3"], m["w2"])
+    return x, h_new, conv_state
+
+
+def _ring_fill(kc, k, S):
+    """Write the last min(S, W) of k (B,S,..) into ring slots (pos %% W)."""
+    W = kc.shape[1]
+    n = min(S, W)
+    take = max(S - W, 0) + jnp.arange(n)
+    slots = take % W
+    rows = jnp.take(k, take, axis=1).astype(kc.dtype)
+    return kc.at[:, slots].set(rows)
+
+
+def _attn_prefill(cfg, lp, x, kc, vc, positions):
+    a = lp["attn"]
+    B, S = x.shape[0], x.shape[1]
+    h = nn.rms_norm(x, lp["ln1"])
+    q = nn.dense(h, a["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = nn.dense(h, a["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = nn.dense(h, a["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = nn.apply_rope(q, positions, cfg.rope_theta)
+    k = nn.apply_rope(k, positions, cfg.rope_theta)
+    kc = _ring_fill(kc, k, S)
+    vc = _ring_fill(vc, v, S)
+    o = nn.flash_attention(q, k, v, causal=True, window=cfg.window,
+                           bf16_mm=cfg.attn_bf16_mm,
+                           causal_skip=cfg.causal_skip)
+    x = x + nn.dense(o.reshape(B, S, cfg.q_dim), a["wo"])
+    m = lp["mlp"]
+    x = x + nn.swiglu(nn.rms_norm(x, lp["ln2"]), m["w1"], m["w3"], m["w2"])
+    return x, kc, vc
+
+
+def prefill(cfg: ArchConfig, params, cache, tokens, prefix_embeds=None):
+    """Prompt pass carrying LRU/conv state + windowed ring KV caches out."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+
+    new_h, new_conv, new_k, new_v = [], [], [], []
+    ri, ai = 0, 0
+    for i in range(cfg.n_layers):
+        if i % 3 == 2:
+            lp = jax.tree.map(lambda t: t[ai], params["attn"])
+            x, kc, vc = _attn_prefill(cfg, lp, x, cache["k"][ai],
+                                      cache["v"][ai], positions)
+            new_k.append(kc)
+            new_v.append(vc)
+            ai += 1
+        else:
+            lp = jax.tree.map(lambda t: t[ri], params["rec"])
+            h = nn.rms_norm(x, lp["ln1"])
+            y, hf, cs = _rec_mix(cfg, lp["mix"], h, cache["h"][ri],
+                                 cache["conv"][ri])
+            x = x + y
+            m = lp["mlp"]
+            x = x + nn.swiglu(nn.rms_norm(x, lp["ln2"]), m["w1"], m["w3"],
+                              m["w2"])
+            new_h.append(hf)
+            new_conv.append(cs)
+            ri += 1
+    xl = nn.rms_norm(x[:, -1:], params["final_norm"])
+    logits = nn.dense(xl, params["lm_head"])
+    return logits, {
+        "h": jnp.stack(new_h), "conv": jnp.stack(new_conv),
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+        "lengths": cache["lengths"] + S,
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    lengths = cache["lengths"] + 1
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    G, extra = _group_counts(cfg)
+    nr = n_rec_layers(cfg)
+
+    h_all, conv_all = cache["h"], cache["conv"]
+    k_all, v_all = cache["k"], cache["v"]
+    new_h, new_conv, new_k, new_v = [], [], [], []
+    ri, ai = 0, 0
+    for i in range(cfg.n_layers):
+        if i % 3 == 2:
+            lp = jax.tree.map(lambda t: t[ai], params["attn"])
+            x, kc, vc = _attn_decode(cfg, lp, x, k_all[ai], v_all[ai], lengths)
+            new_k.append(kc)
+            new_v.append(vc)
+            ai += 1
+        else:
+            lp = jax.tree.map(lambda t: t[ri], params["rec"])
+            x, h, cs = _rec_decode(cfg, lp, x, h_all[ri], conv_all[ri])
+            new_h.append(h)
+            new_conv.append(cs)
+            ri += 1
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.dense(x, params["lm_head"])
+    return logits, {
+        "h": jnp.stack(new_h), "conv": jnp.stack(new_conv),
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v), "lengths": lengths,
+    }

@@ -1,0 +1,190 @@
+"""RWKV6 (Finch) — attention-free LM with data-dependent decay.
+
+M2Q applicability: all projection matmuls (time-mix r/k/v/g/o, channel-mix
+r/k/v) are quantizable weights; the recurrence itself is activation-side.
+The decode state is O(1) in sequence length, which is why this arch runs the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..core import policy as pol
+from .config import ArchConfig
+
+FFN_FOLD_GROUPS = [(r"cm/cw_k$", None, r"cm/cw_v$")]
+
+QUANT_RULES = [
+    (r"embed", pol.KIND_EMBEDDING),
+    (r"lm_head", pol.KIND_HEAD),
+    (r"(ln|norm|gamma|mu_|w0|w_lora|u$|gn)", pol.KIND_SKIP),
+    (r"tm/w[rkvgo]$", pol.KIND_DENSE),
+    (r"cm/cw_[rkv]$", pol.KIND_DENSE),
+]
+
+_LORA_DIM = 64
+
+
+def _init_layer(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 12)
+    D, F = cfg.d_model, cfg.d_ff
+    H = D // cfg.rwkv_head_dim
+    mu = lambda k: jax.random.uniform(k, (D,), jnp.float32, 0.0, 1.0)
+    return {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "tm": {
+            "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+            "mu_g": mu(ks[3]), "mu_w": mu(ks[4]),
+            "wr": nn.lecun_normal(ks[5], (D, D)),
+            "wk": nn.lecun_normal(ks[6], (D, D)),
+            "wv": nn.lecun_normal(ks[7], (D, D)),
+            "wg": nn.lecun_normal(ks[8], (D, D)),
+            "wo": nn.lecun_normal(ks[9], (D, D)),
+            "w_lora_a": nn.trunc_normal(ks[10], (D, _LORA_DIM), std=0.01),
+            "w_lora_b": nn.trunc_normal(ks[11], (_LORA_DIM, D), std=0.01),
+            "w0": jnp.full((D,), -3.0, jnp.float32),  # slow decay init
+            "u": nn.trunc_normal(ks[4], (H, cfg.rwkv_head_dim), std=0.02),
+            "gn": jnp.ones((D,), jnp.float32),
+        },
+        "cm": {
+            "mu_cr": mu(ks[0]), "mu_ck": mu(ks[1]),
+            "cw_r": nn.lecun_normal(ks[2], (D, D)),
+            "cw_k": nn.lecun_normal(ks[3], (D, F)),
+            "cw_v": nn.lecun_normal(ks[5], (F, D)),
+        },
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: _init_layer(cfg, k))(
+        jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": nn.trunc_normal(k_emb, (cfg.padded_vocab, cfg.d_model)),
+        "ln0": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": nn.lecun_normal(k_head, (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def _head_norm(out: jax.Array, gamma: jax.Array, n_heads: int) -> jax.Array:
+    """Per-head RMS group norm on the recurrence output (dtype-preserving)."""
+    dt = out.dtype
+    B, T = out.shape[0], out.shape[1]
+    D = gamma.shape[-1]
+    x = out.reshape(B, T, n_heads, D // n_heads).astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + 1e-6)
+    return (x.reshape(B, T, D) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def _timemix(cfg: ArchConfig, lp, x, prev, state, chunk: int = 128):
+    """x: (B,T,D); prev: (B,D) last token before this segment;
+    state: (B,H,d,d). Returns (y, new_prev, new_state)."""
+    H = cfg.d_model // cfg.rwkv_head_dim
+    xs = jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    r, k, v, g, w = nn.rwkv6_timemix_inputs(x, xs, lp, H)
+    state, out = nn.rwkv6_attend(state, r, k, v, w, lp["u"], chunk=chunk)
+    B, T = x.shape[0], x.shape[1]
+    out = _head_norm(out.reshape(B, T, cfg.d_model).astype(x.dtype), lp["gn"], H)
+    y = nn.dense(out * g, lp["wo"])
+    return y, x[:, -1], state
+
+
+def _channelmix(cfg: ArchConfig, lp, x, prev):
+    xs = jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    y = nn.rwkv6_channelmix(x, xs, lp)
+    return y, x[:, -1]
+
+
+def _layer(cfg, lp, x, tm_prev, cm_prev, state, chunk=128):
+    h = nn.rms_norm(x, lp["ln1"])
+    y, tm_prev, state = _timemix(cfg, lp["tm"], h, tm_prev, state, chunk)
+    x = x + y
+    h = nn.rms_norm(x, lp["ln2"])
+    y, cm_prev = _channelmix(cfg, lp["cm"], h, cm_prev)
+    x = x + y
+    return x, tm_prev, cm_prev, state
+
+
+def _zero_states(cfg: ArchConfig, batch: int):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    d = cfg.rwkv_head_dim
+    return {
+        "tm_prev": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "cm_prev": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "state": jnp.zeros((cfg.n_layers, batch, H, d, d), jnp.float32),
+    }
+
+
+def forward(cfg: ArchConfig, params, tokens, prefix_embeds=None,
+            unroll: bool = False, remat: bool = True):
+    dtype = jnp.dtype(cfg.dtype)
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    x = nn.rms_norm(x, params["ln0"])
+    B = x.shape[0]
+    st = _zero_states(cfg, B)
+
+    def body(x, xs):
+        lp, tm0, cm0, s0 = xs
+        x, _, _, _ = _layer(cfg, lp, x, tm0, cm0, s0)
+        return x, None
+
+    xs = (params["layers"], st["tm_prev"], st["cm_prev"], st["state"])
+    if unroll:
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda t: t[i], xs)
+            x, _ = body(x, sl)
+    else:
+        x, _ = jax.lax.scan(body, x, xs)
+    x = nn.rms_norm(x, params["final_norm"])
+    return nn.dense(x, params["lm_head"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    st = _zero_states(cfg, batch)
+    st["lengths"] = jnp.zeros((batch,), jnp.int32)
+    return st
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    """tokens (B,1) -> (logits (B,1,V), new cache). O(1) in history length."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    x = nn.rms_norm(x, params["ln0"])
+
+    def body(x, xs):
+        lp, tm0, cm0, s0 = xs
+        x, tm1, cm1, s1 = _layer(cfg, lp, x, tm0, cm0, s0, chunk=1)
+        return x, (tm1.astype(jnp.float32), cm1.astype(jnp.float32), s1)
+
+    xs = (params["layers"], cache["tm_prev"], cache["cm_prev"], cache["state"])
+    x, (tm, cm, st) = jax.lax.scan(body, x, xs)
+    x = nn.rms_norm(x, params["final_norm"])
+    logits = nn.dense(x, params["lm_head"])
+    return logits, {"tm_prev": tm, "cm_prev": cm, "state": st,
+                    "lengths": cache["lengths"] + 1}
+
+
+def prefill(cfg: ArchConfig, params, cache, tokens, prefix_embeds=None):
+    """Run the prompt through, carrying decode state out."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    x = nn.rms_norm(x, params["ln0"])
+    B, S = tokens.shape
+
+    def body(x, xs):
+        lp, tm0, cm0, s0 = xs
+        x, tm1, cm1, s1 = _layer(cfg, lp, x, tm0, cm0, s0)
+        return x, (tm1.astype(jnp.float32), cm1.astype(jnp.float32), s1)
+
+    xs = (params["layers"], cache["tm_prev"], cache["cm_prev"], cache["state"])
+    x, (tm, cm, st) = jax.lax.scan(body, x, xs)
+    x = nn.rms_norm(x[:, -1:], params["final_norm"])
+    logits = nn.dense(x, params["lm_head"])
+    return logits, {"tm_prev": tm, "cm_prev": cm, "state": st,
+                    "lengths": cache["lengths"] + S}

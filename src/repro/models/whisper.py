@@ -1,0 +1,275 @@
+"""Whisper-large-v3 backbone (encoder-decoder).
+
+The conv/mel frontend is a STUB per the task spec: ``input_specs()`` feeds
+precomputed frame embeddings (B, n_audio_ctx, D) — i.e. the output the two
+stride-2 convs would produce.  Everything after that (sinusoidal enc
+positions, 32 enc + 32 dec layers, cross attention, learned decoder
+positions) is implemented.  Decoder position table is extended beyond
+Whisper's 448 to cover the assigned 32k decode shapes (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .. import nn
+from ..core import policy as pol
+from .config import ArchConfig
+
+QUANT_RULES = [
+    (r"embed", pol.KIND_EMBEDDING),
+    (r"pos", pol.KIND_SKIP),
+    (r"lm_head", pol.KIND_HEAD),
+    (r"(ln|norm|gamma|b_|bias)", pol.KIND_SKIP),
+    (r"(self|cross)/w[qkvo]$", pol.KIND_DENSE),
+    (r"mlp/w\d$", pol.KIND_DENSE),
+]
+
+MAX_TARGET_POSITIONS = 32768  # extended from whisper's 448 for decode_32k
+
+
+def _sinusoid(n_pos: int, d: int) -> np.ndarray:
+    pos = np.arange(n_pos)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def _init_attn(cfg, key, cross=False):
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    return {
+        "wq": nn.lecun_normal(ks[0], (D, cfg.q_dim)),
+        "wk": nn.lecun_normal(ks[1], (D, cfg.kv_dim)),
+        "wv": nn.lecun_normal(ks[2], (D, cfg.kv_dim)),
+        "wo": nn.lecun_normal(ks[3], (cfg.q_dim, D)),
+        "b_q": jnp.zeros((cfg.q_dim,), jnp.float32),
+        "b_v": jnp.zeros((cfg.kv_dim,), jnp.float32),
+        "b_o": jnp.zeros((D,), jnp.float32),
+    }
+
+
+def _init_mlp(cfg, key):
+    ks = jax.random.split(key, 2)
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w1": nn.lecun_normal(ks[0], (D, F)),
+            "b_1": jnp.zeros((F,), jnp.float32),
+            "w2": nn.lecun_normal(ks[1], (F, D)),
+            "b_2": jnp.zeros((D,), jnp.float32)}
+
+
+def _init_enc_layer(cfg, key):
+    ks = jax.random.split(key, 2)
+    D = cfg.d_model
+    return {
+        "ln1_g": jnp.ones((D,), jnp.float32), "ln1_b": jnp.zeros((D,), jnp.float32),
+        "ln2_g": jnp.ones((D,), jnp.float32), "ln2_b": jnp.zeros((D,), jnp.float32),
+        "self": _init_attn(cfg, ks[0]),
+        "mlp": _init_mlp(cfg, ks[1]),
+    }
+
+
+def _init_dec_layer(cfg, key):
+    ks = jax.random.split(key, 3)
+    D = cfg.d_model
+    return {
+        "ln1_g": jnp.ones((D,), jnp.float32), "ln1_b": jnp.zeros((D,), jnp.float32),
+        "lnx_g": jnp.ones((D,), jnp.float32), "lnx_b": jnp.zeros((D,), jnp.float32),
+        "ln2_g": jnp.ones((D,), jnp.float32), "ln2_b": jnp.zeros((D,), jnp.float32),
+        "self": _init_attn(cfg, ks[0]),
+        "cross": _init_attn(cfg, ks[1]),
+        "mlp": _init_mlp(cfg, ks[2]),
+    }
+
+
+def init(cfg: ArchConfig, key) -> dict:
+    k_emb, k_enc, k_dec, k_pos = jax.random.split(key, 4)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    enc = jax.vmap(lambda k: _init_enc_layer(cfg, k))(
+        jax.random.split(k_enc, n_enc))
+    dec = jax.vmap(lambda k: _init_dec_layer(cfg, k))(
+        jax.random.split(k_dec, cfg.n_layers))
+    D = cfg.d_model
+    return {
+        "embed": nn.trunc_normal(k_emb, (cfg.padded_vocab, D)),
+        "pos_dec": nn.trunc_normal(k_pos, (MAX_TARGET_POSITIONS, D), std=0.01),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_ln_g": jnp.ones((D,), jnp.float32),
+        "enc_ln_b": jnp.zeros((D,), jnp.float32),
+        "dec_ln_g": jnp.ones((D,), jnp.float32),
+        "dec_ln_b": jnp.zeros((D,), jnp.float32),
+        # whisper ties lm_head to embed; we keep it tied via reuse in forward
+    }
+
+
+def _mha(cfg, ap, xq, xkv, causal, kv=None):
+    """Returns attention output; kv overrides (precomputed cross kv)."""
+    B, S = xq.shape[0], xq.shape[1]
+    q = nn.dense(xq, ap["wq"], ap["b_q"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if kv is None:
+        T = xkv.shape[1]
+        k = nn.dense(xkv, ap["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = nn.dense(xkv, ap["wv"], ap["b_v"]).reshape(B, T, cfg.n_kv_heads,
+                                                       cfg.head_dim)
+    else:
+        k, v = kv
+    o = nn.flash_attention(q, k, v, causal=causal, bf16_mm=cfg.attn_bf16_mm,
+                           causal_skip=cfg.causal_skip and causal)
+    return nn.dense(o.reshape(B, S, cfg.q_dim), ap["wo"], ap["b_o"])
+
+
+def _mlp(lp, x):
+    return nn.dense(nn.gelu(nn.dense(x, lp["w1"], lp["b_1"])), lp["w2"], lp["b_2"])
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """frames: (B, n_audio_ctx, D) stub frontend output -> encoder memory."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype) + jnp.asarray(
+        _sinusoid(frames.shape[1], cfg.d_model), dtype)[None]
+
+    def body(x, lp):
+        h = nn.layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        x = x + _mha(cfg, lp["self"], h, h, causal=False)
+        h = nn.layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(lp["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return nn.layer_norm(x, params["enc_ln_g"], params["enc_ln_b"])
+
+
+def forward(cfg: ArchConfig, params, tokens, frames=None, memory=None,
+            unroll: bool = False, remat: bool = True):
+    """Teacher-forced decode over the full target sequence (train shape)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if memory is None:
+        memory = encode(cfg, params, frames)
+    B, S = tokens.shape
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    x = x + params["pos_dec"][:S].astype(dtype)[None]
+
+    def body(x, lp):
+        h = nn.layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        x = x + _mha(cfg, lp["self"], h, h, causal=True)
+        h = nn.layer_norm(x, lp["lnx_g"], lp["lnx_b"])
+        x = x + _mha(cfg, lp["cross"], h, memory, causal=False)
+        h = nn.layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(lp["mlp"], h)
+        return x, None
+
+    if unroll:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["dec_layers"])
+            x, _ = body(x, lp)
+    else:
+        f = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(f, x, params["dec_layers"])
+    x = nn.layer_norm(x, params["dec_ln_g"], params["dec_ln_b"])
+    return nn.tied_head(x, params["embed"])  # tied head
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        # cross-attention kv, precomputed once at prefill
+        "xk": jnp.zeros((L, batch, cfg.n_audio_ctx, cfg.n_kv_heads,
+                         cfg.head_dim), dtype),
+        "xv": jnp.zeros((L, batch, cfg.n_audio_ctx, cfg.n_kv_heads,
+                         cfg.head_dim), dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params, cache, tokens, frames=None):
+    """Encode audio, precompute cross KV, and run the target prompt."""
+    dtype = jnp.dtype(cfg.dtype)
+    memory = encode(cfg, params, frames)
+    B, S = tokens.shape
+    T_mem = memory.shape[1]
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    x = x + params["pos_dec"][:S].astype(dtype)[None]
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h = nn.layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = nn.dense(h, lp["self"]["wq"], lp["self"]["b_q"]).reshape(
+            B, S, cfg.n_heads, cfg.head_dim)
+        k = nn.dense(h, lp["self"]["wk"]).reshape(B, S, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        v = nn.dense(h, lp["self"]["wv"], lp["self"]["b_v"]).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, 0, 0, 0))
+        o = nn.flash_attention(q, k, v, causal=True,
+                               bf16_mm=cfg.attn_bf16_mm,
+                               causal_skip=cfg.causal_skip)
+        x = x + nn.dense(o.reshape(B, S, cfg.q_dim), lp["self"]["wo"],
+                         lp["self"]["b_o"])
+        xk = nn.dense(memory, lp["cross"]["wk"]).reshape(
+            B, T_mem, cfg.n_kv_heads, cfg.head_dim)
+        xv = nn.dense(memory, lp["cross"]["wv"], lp["cross"]["b_v"]).reshape(
+            B, T_mem, cfg.n_kv_heads, cfg.head_dim)
+        h = nn.layer_norm(x, lp["lnx_g"], lp["lnx_b"])
+        x = x + _mha(cfg, lp["cross"], h, None, causal=False,
+                     kv=(xk, xv))
+        h = nn.layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(lp["mlp"], h)
+        return x, (kc, vc, xk.astype(kc.dtype), xv.astype(kc.dtype))
+
+    x, (k_new, v_new, xk, xv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"]))
+    x = nn.layer_norm(x[:, -1:], params["dec_ln_g"], params["dec_ln_b"])
+    logits = nn.tied_head(x, params["embed"])
+    return logits, {"k": k_new, "v": v_new, "xk": xk, "xv": xv,
+                    "lengths": jnp.full((B,), S, jnp.int32)}
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    lengths = cache["lengths"] + 1
+    B = tokens.shape[0]
+    x = nn.embed(tokens, params["embed"]).astype(dtype)
+    pos = jnp.take(params["pos_dec"], lengths - 1, axis=0).astype(dtype)
+    x = x + pos[:, None, :]  # (B,1,D)
+
+    def body(x, xs):
+        lp, kc, vc, xk, xv = xs
+        h = nn.layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        q = nn.dense(h, lp["self"]["wq"], lp["self"]["b_q"]).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        k = nn.dense(h, lp["self"]["wk"]).reshape(B, 1, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        v = nn.dense(h, lp["self"]["wv"], lp["self"]["b_v"]).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim)
+        bidx = jnp.arange(B)
+        kc = kc.at[bidx, lengths - 1].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[bidx, lengths - 1].set(v[:, 0].astype(vc.dtype))
+        o = nn.decode_attention(q, kc, vc, lengths, bf16_mm=cfg.attn_bf16_mm)
+        x = x + nn.dense(o.reshape(B, 1, cfg.q_dim), lp["self"]["wo"],
+                         lp["self"]["b_o"])
+        h = nn.layer_norm(x, lp["lnx_g"], lp["lnx_b"])
+        qx = nn.dense(h, lp["cross"]["wq"], lp["cross"]["b_q"]).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        T_mem = xk.shape[1]
+        ox = nn.decode_attention(qx, xk, xv,
+                                 jnp.full((B,), T_mem, jnp.int32),
+                                 bf16_mm=cfg.attn_bf16_mm)
+        x = x + nn.dense(ox.reshape(B, 1, cfg.q_dim), lp["cross"]["wo"],
+                         lp["cross"]["b_o"])
+        h = nn.layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(lp["mlp"], h)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = nn.layer_norm(x, params["dec_ln_g"], params["dec_ln_b"])
+    logits = nn.tied_head(x, params["embed"])
+    return logits, {"k": k_new, "v": v_new, "xk": cache["xk"],
+                    "xv": cache["xv"], "lengths": lengths}

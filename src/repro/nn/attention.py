@@ -1,0 +1,306 @@
+"""Attention primitives: RoPE, chunked (flash-style) GQA attention, decode
+attention over KV caches, sliding-window variants, and EfficientViT's
+ReLU-based linear attention (the paper's backbone, Sec. II-A).
+
+The chunked attention is pure JAX (lax.scan online-softmax) so 32k-token
+prefill never materializes an (S, S) score matrix; activation memory is
+O(q_chunk * kv_chunk).  It is numerically guarded with finite -1e30 masks so
+fully-masked rows produce zeros, not NaNs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    i = jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * i / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def qk_rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMSNorm over the head dim (Qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad), n
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (None = unbounded)
+    q_offset=0,  # absolute position of q[0] (int or scalar array)
+    kv_len: Optional[jax.Array] = None,  # valid kv length (default: T)
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    scale: Optional[float] = None,
+    bf16_mm: bool = False,   # MXU-native bf16 dots with f32 accumulation
+    causal_skip: bool = False,  # triangle scan: skip fully-masked kv chunks
+) -> jax.Array:
+    """Online-softmax attention; returns (B, S, Hq, D).
+
+    ``bf16_mm`` keeps q/k/v in their (bf16) dtype and accumulates in f32 —
+    the MXU-native path (4x the f32-dot rate); the softmax statistics stay
+    f32 either way.  ``causal_skip`` replaces the dense (nq x nk) chunk grid
+    with a single scan over the lower-triangular (qi, kj<=qi) chunk pairs,
+    halving attention FLOPs for causal masks (EXPERIMENTS.md §Perf).
+    """
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, max(S, 1))
+    kv_chunk = min(kv_chunk, max(T, 1))
+
+    mm_dt = q.dtype if bf16_mm else jnp.float32
+
+    # layouts: q (B, Hkv, G, S, D); kv (B, Hkv, T, D)
+    qh = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    qh, s_real = _pad_to(qh, 3, q_chunk)
+    kh, t_real = _pad_to(kh, 2, kv_chunk)
+    vh, _ = _pad_to(vh, 2, kv_chunk)
+    Sp, Tp = qh.shape[3], kh.shape[2]
+    nq, nk = Sp // q_chunk, Tp // kv_chunk
+
+    t_valid = jnp.asarray(t_real if kv_len is None else kv_len, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    qh = qh.reshape(B, Hkv, G, nq, q_chunk, D).transpose(3, 0, 1, 2, 4, 5)
+    kh = kh.reshape(B, Hkv, nk, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+    vh = vh.reshape(B, Hkv, nk, kv_chunk, D).transpose(2, 0, 1, 3, 4)
+
+    def chunk_update(carry, qi, kj, qc, kc, vc):
+        m, l, acc = carry
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(mm_dt),
+                       kc.astype(mm_dt),
+                       preferred_element_type=jnp.float32) * scale
+        valid = k_pos[None, :] < t_valid
+        if causal:
+            valid &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            valid &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(mm_dt), vc.astype(mm_dt),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    def zero_carry():
+        return (jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk), jnp.float32),
+                jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32))
+
+    if causal_skip and causal and nq > 1:
+        # one scan over lower-triangular (qi, kj) chunk pairs, qi-major;
+        # the carry resets at kj==0 and flushes into the output buffer at
+        # kj==qi.  FLOPs: nq(nq+1)/2 chunk pairs instead of nq*nk.
+        pairs = [(qi, kj) for qi in range(nq) for kj in range(qi + 1)]
+        qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        kj_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+        def pair_body(carry, inp):
+            out_buf, m, l, acc = carry
+            qi, kj = inp
+            qc = jax.lax.dynamic_index_in_dim(qh, qi, 0, keepdims=False)
+            kc = jax.lax.dynamic_index_in_dim(kh, kj, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vh, kj, 0, keepdims=False)
+            z = zero_carry()
+            fresh = kj == 0
+            m = jnp.where(fresh, z[0], m)
+            l = jnp.where(fresh, z[1], l)
+            acc = jnp.where(fresh, z[2], acc)
+            m, l, acc = chunk_update((m, l, acc), qi, kj, qc, kc, vc)
+            done = kj == qi
+            out = acc / jnp.maximum(l, 1e-20)[..., None]
+            out_buf = jax.lax.cond(
+                done,
+                lambda ob: jax.lax.dynamic_update_index_in_dim(
+                    ob, out.astype(ob.dtype), qi, 0),
+                lambda ob: ob, out_buf)
+            return (out_buf, m, l, acc), None
+
+        out0 = jnp.zeros((nq, B, Hkv, G, q_chunk, D), jnp.float32)
+        (outs, _, _, _), _ = jax.lax.scan(
+            pair_body, (out0, *zero_carry()), (qi_arr, kj_arr))
+    else:
+        def one_q_chunk(args):
+            qi, qc = args
+            def kv_body(carry, inp):
+                kj, kc, vc = inp
+                return chunk_update(carry, qi, kj, qc, kc, vc), None
+            (m, l, acc), _ = jax.lax.scan(
+                kv_body, zero_carry(), (jnp.arange(nk), kh, vh))
+            return acc / jnp.maximum(l, 1e-20)[..., None]
+
+        outs = jax.lax.map(one_q_chunk, (jnp.arange(nq), qh))
+
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sp, D)
+    out = out[:, :, :, :s_real]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, s_real, Hq, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention over a KV cache (one new token per sequence)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, D)
+    k_cache: jax.Array,  # (B, T, Hkv, D)
+    v_cache: jax.Array,  # (B, T, Hkv, D)
+    lengths: jax.Array,  # (B,) valid entries per sequence (incl. current)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    bf16_mm: bool = False,
+) -> jax.Array:
+    B, _, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, Hkv, G, D)
+    mm_dt = k_cache.dtype if bf16_mm else jnp.float32
+    s = jnp.einsum("bhgd,bthd->bhgt", qh.astype(mm_dt),
+                   k_cache.astype(mm_dt),
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(T)[None, :]  # (1, T)
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(mm_dt),
+                     v_cache.astype(mm_dt),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def decode_attention_int8(
+    q: jax.Array,         # (B, 1, Hq, D) bf16/f32
+    k_q: jax.Array,       # (B, T, Hkv, D) int8
+    v_q: jax.Array,       # (B, T, Hkv, D) int8
+    k_scale: jax.Array,   # (B, T, Hkv) f32 per-row scales
+    v_scale: jax.Array,   # (B, T, Hkv) f32
+    lengths: jax.Array,   # (B,)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Fully-integer KV-cache attention — M2Q's memory-intensive level
+    applied to activations-at-rest (beyond-paper; EXPERIMENTS §Perf).
+
+    QK^T runs int8xint8 on the MXU (q quantized per (b,h) on the fly);
+    per-row K scales fold into the scores; the softmax weights are re-
+    quantized to int8 with the per-row V scales folded in, so PV is also an
+    int8 dot.  The cache never dequantizes into an HBM temp — reads are
+    1 byte/element.
+    """
+    B, _, Hq, D = q.shape
+    T, Hkv = k_q.shape[1], k_q.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    q_s = jnp.max(jnp.abs(qh), axis=-1, keepdims=True) / 127.0 + 1e-9
+    q8 = jnp.clip(jnp.round(qh / q_s), -127, 127).astype(jnp.int8)
+    acc = jnp.einsum("bhgd,bthd->bhgt", q8, k_q,
+                     preferred_element_type=jnp.int32)
+    s = acc.astype(jnp.float32) * q_s * scale \
+        * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    pos = jnp.arange(T)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fold per-row V scales into p, then re-quantize p for the int8 PV dot
+    pv = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    p_s = jnp.max(jnp.abs(pv), axis=-1, keepdims=True) / 127.0 + 1e-12
+    p8 = jnp.clip(jnp.round(pv / p_s), -127, 127).astype(jnp.int8)
+    out = jnp.einsum("bhgt,bthd->bhgd", p8, v_q,
+                     preferred_element_type=jnp.int32)
+    out = out.astype(jnp.float32) * p_s
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def quantize_kv_rows(x: jax.Array):
+    """(..., Hkv, D) -> (int8 rows, (..., Hkv) f32 scales), per-(row, head)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+# ---------------------------------------------------------------------------
+# EfficientViT ReLU linear attention (paper Sec. II-A)
+# ---------------------------------------------------------------------------
+
+
+def relu_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          eps: float = 1e-6) -> jax.Array:
+    """Softmax-free global attention with linear complexity.
+
+    q,k,v: (B, N, H, D).  out = (q' (k'^T v)) / (q' sum(k')) with
+    q' = relu(q), k' = relu(k) — the associative-property trick that makes
+    EfficientViT linear in N.
+    """
+    qr = jax.nn.relu(q).astype(jnp.float32)
+    kr = jax.nn.relu(k).astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kv = jnp.einsum("bnhd,bnhe->bhde", kr, vf)           # (B,H,D,D)
+    num = jnp.einsum("bnhd,bhde->bnhe", qr, kv)          # (B,N,H,D)
+    ksum = jnp.sum(kr, axis=1)                           # (B,H,D)
+    den = jnp.einsum("bnhd,bhd->bnh", qr, ksum)[..., None]
+    return (num / (den + eps)).astype(q.dtype)

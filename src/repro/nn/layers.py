@@ -1,0 +1,152 @@
+"""Framework layer primitives (pure JAX; params are nested dicts).
+
+Every weight consumer dispatches on the leaf type:
+  * jax.Array            — plain float compute
+  * core.CalibTensor     — record activation stats (PTQ calibration), float op
+  * core.QTensor leaves  — the M2Q serving paths (int8 / packed-int4 / APoT)
+
+so model code is identical in float, calibration, and quantized modes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.calibrate import CalibTensor
+from ..core.qtensor import QUniform, is_qtensor, qmatmul
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def lecun_normal(key, shape, dtype=jnp.float32):
+    fan_in = math.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+    return jax.random.normal(key, shape, dtype) / math.sqrt(max(fan_in, 1))
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+
+def dense(x: jax.Array, w, b=None) -> jax.Array:
+    """y = x @ w (+ b); w may be float, CalibTensor, or QTensor."""
+    if isinstance(w, CalibTensor):
+        w.record(x)
+        y = x @ w.w.astype(x.dtype)
+    elif is_qtensor(w):
+        y = qmatmul(x, w)
+    else:
+        y = x @ w.astype(x.dtype)
+    if b is not None:
+        if isinstance(b, CalibTensor):
+            b = b.w
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def tied_head(x: jax.Array, table) -> jax.Array:
+    """Logits via the (possibly quantized) embedding table: x @ table.T."""
+    if isinstance(table, CalibTensor):
+        table.record(x)
+        w = table.w
+    elif is_qtensor(table):
+        w = table.dequant(x.dtype)
+    else:
+        w = table
+    return x @ w.T.astype(x.dtype)
+
+
+def embed(ids: jax.Array, table) -> jax.Array:
+    if isinstance(table, CalibTensor):
+        return jnp.take(table.w, ids, axis=0)
+    if isinstance(table, QUniform):
+        return table.take(ids, dtype=jnp.float32)
+    return jnp.take(table, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# convolutions (EfficientViT + conv frontends); NHWC layout
+# ---------------------------------------------------------------------------
+
+
+def _conv_weight(w, dtype):
+    if isinstance(w, CalibTensor):
+        return w.w.astype(dtype)
+    if is_qtensor(w):
+        return w.dequant(dtype)
+    return w.astype(dtype)
+
+
+def conv2d(x: jax.Array, w, b=None, stride: int = 1, groups: int = 1,
+           padding: str = "SAME") -> jax.Array:
+    """x: (B,H,W,Cin); w: (kh,kw,Cin//groups,Cout)."""
+    if isinstance(w, CalibTensor):
+        w.record(x)
+    wv = _conv_weight(w, x.dtype)
+    y = jax.lax.conv_general_dilated(
+        x, wv, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def dwconv2d(x: jax.Array, w, b=None, stride: int = 1,
+             padding: str = "SAME") -> jax.Array:
+    """Depthwise conv; w: (kh,kw,1,C).  The paper's memory-intensive layer."""
+    c = x.shape[-1]
+    return conv2d(x, w, b=b, stride=stride, groups=c, padding=padding)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x, w1, w3, w2, b1=None, b3=None, b2=None):
+    """SwiGLU FFN: (silu(x@w1) * (x@w3)) @ w2."""
+    return dense(silu(dense(x, w1, b1)) * dense(x, w3, b3), w2, b2)
+
+
+def geglu(x, w1, w3, w2):
+    return dense(gelu(dense(x, w1)) * dense(x, w3), w2)

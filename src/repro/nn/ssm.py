@@ -1,0 +1,182 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and RG-LRU (Griffin /
+RecurrentGemma).
+
+Both are first-order linear recurrences.  RG-LRU has a *diagonal* state so we
+use ``jax.lax.associative_scan`` (O(log T) depth, states are the layer output
+anyway).  RWKV6 has a rank-1-updated *matrix* state (dk x dv per head), so
+materializing all T states is 64x the activation footprint — we run a
+chunked sequential scan with per-chunk checkpointing instead (state is stored
+only at chunk boundaries; the backward pass recomputes inside chunks).  The
+chunkwise-matmul (intra/inter chunk decomposition) variant is a recorded
+perf-iteration candidate in EXPERIMENTS.md.
+
+Decode (single token) uses the explicit ``*_step`` functions with carried
+state — this is what makes the ``long_500k`` cell O(1) in memory for these
+architectures.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, silu
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix (Finch: data-dependent decay via a small LoRA)
+# ---------------------------------------------------------------------------
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def rwkv6_decay(x_mixed: jax.Array, params) -> jax.Array:
+    """w_t in (0,1): exp(-exp(w0 + tanh(x @ A) @ B)) — data-dependent decay."""
+    lora = jnp.tanh(x_mixed @ params["w_lora_a"].astype(x_mixed.dtype))
+    logw = params["w0"].astype(jnp.float32) + (
+        lora @ params["w_lora_b"].astype(lora.dtype)).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def rwkv6_timemix_inputs(x: jax.Array, x_prev: jax.Array, params, n_heads: int):
+    """Project a (..., D) slice into per-head r,k,v,g,w,u.
+
+    x_prev is the token-shifted x (previous token, or carried decode state).
+    """
+    D = x.shape[-1]
+    hd = D // n_heads
+    r = dense(_lerp(x, x_prev, params["mu_r"]), params["wr"])
+    k = dense(_lerp(x, x_prev, params["mu_k"]), params["wk"])
+    v = dense(_lerp(x, x_prev, params["mu_v"]), params["wv"])
+    g = silu(dense(_lerp(x, x_prev, params["mu_g"]), params["wg"]))
+    w = rwkv6_decay(_lerp(x, x_prev, params["mu_w"]), params)
+
+    def heads(t):
+        return t.reshape(*t.shape[:-1], n_heads, hd)
+
+    return heads(r), heads(k), heads(v), g, heads(w.astype(x.dtype))
+
+
+def rwkv6_attend_step(state: jax.Array, r, k, v, w, u):
+    """One recurrence step.
+
+    state: (B, H, dk, dv);  r,k,v,w: (B, H, d);  u: (H, d) bonus.
+    out_t = r . (S + (u*k) (x) v);  S' = diag(w) S + k (x) v
+    """
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]  # (B,H,dk,dv)
+    out = jnp.einsum("bhk,bhkv->bhv", rf * u[None].astype(jnp.float32), kv) \
+        + jnp.einsum("bhk,bhkv->bhv", rf, state)
+    new_state = state * w.astype(jnp.float32)[..., :, None] + kv
+    return new_state, out
+
+
+def rwkv6_attend(state: jax.Array, r, k, v, w, u, chunk: int = 128):
+    """Sequence recurrence. r,k,v,w: (B, T, H, d). Returns (final_state, out).
+
+    Outer scan over chunks with checkpointed bodies -> O(T/chunk) stored
+    states instead of O(T).
+    """
+    B, T, H, d = r.shape
+    chunk = min(chunk, max(T, 1))
+    pad = (-T) % chunk
+    if pad:
+        padder = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padder(r), padder(k), padder(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    Tp = T + pad
+    nc = Tp // chunk
+
+    def to_chunks(t):  # (B,Tp,H,d) -> (nc, chunk, B, H, d)
+        return t.transpose(1, 0, 2, 3).reshape(nc, chunk, B, H, d)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    @jax.checkpoint
+    def chunk_body(st, inp):
+        rs, ks, vs, ws = inp
+
+        def step(s, xs):
+            return rwkv6_attend_step(s, *xs, u)
+
+        st, outs = jax.lax.scan(step, st, (rs, ks, vs, ws))
+        return st, outs
+
+    final, outs = jax.lax.scan(chunk_body, state.astype(jnp.float32),
+                               (rc, kc, vc, wc))
+    out = outs.reshape(Tp, B, H, d).transpose(1, 0, 2, 3)[:, :T]
+    return final, out
+
+
+def rwkv6_channelmix(x: jax.Array, x_prev: jax.Array, params) -> jax.Array:
+    xr = _lerp(x, x_prev, params["mu_cr"])
+    xk = _lerp(x, x_prev, params["mu_ck"])
+    r = jax.nn.sigmoid(dense(xr, params["cw_r"]))
+    k = jnp.square(jax.nn.relu(dense(xk, params["cw_k"])))
+    return r * dense(k, params["cw_v"])
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rg_lru_gates(x: jax.Array, params):
+    """a_t (decay) and gated input for h_t = a h_{t-1} + sqrt(1-a^2) (i*x)."""
+    rgate = jax.nn.sigmoid(dense(x, params["wa"], params.get("ba")))
+    igate = jax.nn.sigmoid(dense(x, params["wx"], params.get("bx")))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) \
+        * rgate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * igate.astype(jnp.float32) * x.astype(jnp.float32)
+    return a, gated
+
+
+def rg_lru(x: jax.Array, h0: jax.Array, params):
+    """x: (B, T, R); h0: (B, R). Returns (h_final, y (B,T,R)).
+
+    First-order diagonal recurrence -> associative scan over T.
+    """
+    a, b = rg_lru_gates(x, params)  # (B,T,R) f32
+    # fold h0 into the first step: b_0 += a_0 * h0
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h[:, -1], h.astype(x.dtype)
+
+
+def rg_lru_step(x: jax.Array, h: jax.Array, params):
+    """Single decode step. x: (B, R); h: (B, R)."""
+    a, b = rg_lru_gates(x[:, None], params)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new, h_new.astype(x.dtype)
+
+
+def temporal_conv1d(x: jax.Array, w: jax.Array, b=None,
+                    state=None) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise temporal conv (width W).  x: (B, T, R); w: (W, R).
+
+    Returns (y, new_state) where state is the last W-1 inputs (decode carry).
+    """
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state

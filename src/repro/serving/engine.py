@@ -1,0 +1,140 @@
+"""Continuous-batching serving engine over M2Q-quantized weights.
+
+Slot-based: a fixed decode batch of B slots, each holding one request's KV
+cache rows.  New requests prefill into a free slot (the per-slot cache
+columns are written via the batched prefill path with left-padding masked
+out by per-slot lengths); every engine step decodes one token for all live
+slots; finished requests free their slot immediately (continuous batching —
+no head-of-line blocking on the longest request).
+
+This is the serving analogue of the paper's deployment: weights are the
+QTensor tree from core.quantize_model, executing the int8/APoT/packed-4bit
+paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+from ..models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 = greedy
+    out_tokens: Optional[List[int]] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    decoded_tokens: int = 0
+    prefills: int = 0
+    finished: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.B = max_batch
+        self.T = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.stats = EngineStats()
+        self._decode = jax.jit(partial(self.model.decode_step, cfg))
+        # per-slot single-row prefill (batch=1 keeps ragged prompts simple;
+        # batched ragged prefill is a recorded optimization)
+        self._prefill1 = jax.jit(
+            lambda p, c, t: self.model.prefill(cfg, p, c, t))
+        self.cache = self.model.init_cache(cfg, max_batch, max_len,
+                                           dtype=jnp.float32)
+        self._slot_cache_t = jax.eval_shape(
+            lambda: self.model.init_cache(cfg, 1, max_len, dtype=jnp.float32))
+
+    # -- request API --------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> Request:
+        req = Request(uid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      out_tokens=[])
+        self.queue.append(req)
+        return req
+
+    # -- internals -----------------------------------------------------------
+    def _write_slot(self, slot: int, slot_cache):
+        """Copy a (1, ...) cache into slot row of the engine cache."""
+        def put(dst, src):
+            if dst.ndim == 1:  # lengths (B,)
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0])
+
+        self.cache = jax.tree.map(put, self.cache, slot_cache)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                sc = self.model.init_cache(self.cfg, 1, self.T,
+                                           dtype=jnp.float32)
+                logits, sc = self._prefill1(
+                    self.params, sc, jnp.asarray(req.prompt[None]))
+                self._write_slot(slot, sc)
+                tok = self._sample(logits[0, -1], req)
+                req.out_tokens.append(int(tok))
+                self.slots[slot] = req
+                self._pending_token = getattr(self, "_pending_token",
+                                              np.zeros(self.B, np.int32))
+                self._pending_token[slot] = int(tok)
+                self.stats.prefills += 1
+
+    def _sample(self, logits, req: Request):
+        logits = np.asarray(logits[: self.cfg.vocab_size], np.float32)
+        if req.temperature <= 0:
+            return int(np.argmax(logits))
+        self.key, k = jax.random.split(self.key)
+        p = jax.nn.softmax(jnp.asarray(logits) / req.temperature)
+        return int(jax.random.choice(k, p.shape[0], p=p))
+
+    def step(self) -> int:
+        """Admit + one decode step for all live slots. Returns #live."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(
+            getattr(self, "_pending_token", np.zeros(self.B, np.int32))
+        )[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        self.stats.steps += 1
+        for slot in live:
+            req = self.slots[slot]
+            tok = self._sample(logits[slot, 0], req)
+            req.out_tokens.append(int(tok))
+            self._pending_token[slot] = int(tok)
+            self.stats.decoded_tokens += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.stats.finished += 1
+                self.slots[slot] = None  # slot freed -> continuous batching
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.stats

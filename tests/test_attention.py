@@ -1,0 +1,174 @@
+"""flash_attention (all variants) and decode_attention vs a naive softmax
+reference; RWKV/RG-LRU recurrence invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+
+
+def naive_attention(q, k, v, causal=True, window=None, kv_len=None):
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qh = q.reshape(B, S, Hkv, G, D).astype(np.float32)
+    s = np.einsum("bshgd,bthd->bhgst", qh, np.asarray(k, np.float32))
+    s /= math.sqrt(D)
+    tpos = np.arange(T)
+    qpos = np.arange(S)
+    mask = np.ones((S, T), bool)
+    if kv_len is not None:
+        mask &= tpos[None, :] < kv_len
+    if causal:
+        mask &= tpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - tpos[None, :]) < window
+    s = np.where(mask[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= np.maximum(p.sum(-1, keepdims=True), 1e-20)
+    o = np.einsum("bhgst,bthd->bshgd", p, np.asarray(v, np.float32))
+    return o.reshape(B, S, Hq, D)
+
+
+def _qkv(B=2, S=48, T=48, Hq=4, Hkv=2, D=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, D)).astype("float32"))
+    k = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype("float32"))
+    v = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype("float32"))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_matches_naive(causal, window):
+    q, k, v = _qkv()
+    out = nn.flash_attention(q, k, v, causal=causal, window=window,
+                             q_chunk=16, kv_chunk=16)
+    ref = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_causal_skip_matches_dense():
+    q, k, v = _qkv(S=64, T=64)
+    base = nn.flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    tri = nn.flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                             causal_skip=True)
+    np.testing.assert_allclose(np.asarray(tri), np.asarray(base),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_bf16_mm_close():
+    q, k, v = _qkv()
+    q, k, v = (t.astype(jnp.bfloat16) for t in (q, k, v))
+    out = nn.flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                             bf16_mm=True)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                               rtol=0.08, atol=0.08)
+
+
+def test_flash_ragged_seq_and_kvlen():
+    q, k, v = _qkv(S=37, T=53)
+    out = nn.flash_attention(q, k, v, causal=False, kv_len=jnp.int32(40),
+                             q_chunk=16, kv_chunk=16)
+    ref = naive_attention(q, k, v, causal=False, kv_len=40)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_decode_attention_matches_naive(window):
+    B, T, Hq, Hkv, D = 3, 32, 4, 2, 16
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)).astype("float32"))
+    kc = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype("float32"))
+    vc = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype("float32"))
+    lengths = jnp.asarray([5, 17, 32], jnp.int32)
+    out = nn.decode_attention(q, kc, vc, lengths, window=window)
+    for b in range(B):
+        L = int(lengths[b])
+        lo = max(0, L - window) if window else 0
+        ref = naive_attention(q[b:b + 1], kc[b:b + 1, lo:L],
+                              vc[b:b + 1, lo:L], causal=False)
+        np.testing.assert_allclose(np.asarray(out[b]), ref[0], rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_rwkv_chunked_equals_stepwise():
+    B, T, H, d = 2, 37, 3, 8
+    rng = np.random.default_rng(2)
+    r, k, v, w = (jnp.asarray(rng.normal(0, 1, (B, T, H, d)).astype("float32"))
+                  for _ in range(4))
+    w = jax.nn.sigmoid(w) * 0.5 + 0.5  # decay in (0.5, 1)
+    u = jnp.asarray(rng.normal(0, 1, (H, d)).astype("float32"))
+    s0 = jnp.zeros((B, H, d, d), jnp.float32)
+    sA, outA = nn.rwkv6_attend(s0, r, k, v, w, u, chunk=8)
+    # stepwise reference
+    s = s0
+    outs = []
+    for t in range(T):
+        s, o = nn.rwkv6_attend_step(s, r[:, t], k[:, t], v[:, t], w[:, t], u)
+        outs.append(o)
+    outB = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(outA), np.asarray(outB),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sA), np.asarray(s), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rg_lru_scan_equals_step():
+    B, T, R = 2, 19, 16
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (B, T, R)).astype("float32"))
+    params = {
+        "wa": jnp.asarray(rng.normal(0, 0.3, (R, R)).astype("float32")),
+        "wx": jnp.asarray(rng.normal(0, 0.3, (R, R)).astype("float32")),
+        "ba": jnp.zeros((R,)), "bx": jnp.zeros((R,)),
+        "lam": jnp.linspace(0.5, 2.0, R),
+    }
+    h0 = jnp.asarray(rng.normal(0, 1, (B, R)).astype("float32"))
+    hT, y = nn.rg_lru(x, h0, params)
+    h = h0
+    ys = []
+    for t in range(T):
+        h, yt = nn.rg_lru_step(x[:, t], h, params)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """decode_attention_int8 (quantized cache) tracks the float path."""
+    B, T, Hq, Hkv, D = 2, 24, 4, 2, 16
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)).astype("float32"))
+    k = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype("float32"))
+    v = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype("float32"))
+    lengths = jnp.asarray([10, 24], jnp.int32)
+    ref = nn.decode_attention(q, k, v, lengths)
+    k8, ks = nn.quantize_kv_rows(k)
+    v8, vs = nn.quantize_kv_rows(v)
+    out = nn.decode_attention_int8(q, k8, v8, ks, vs, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0.05, atol=0.05)
+
+
+def test_int8_cache_end_to_end_decode():
+    import jax
+    from repro.configs.registry import REDUCED
+    from repro.models import dense_lm as M
+    cfg = REDUCED["granite-3-8b"].replace(kv_cache_dtype="int8")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 12), dtype=np.int32))
+    cache = M.init_cache(cfg, 2, 24)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    lg, cache = M.prefill(cfg, params, cache, toks)
+    l1, cache = M.decode_step(cfg, params, cache, toks[:, :1])
+    full = M.forward(cfg, params, jnp.concatenate([toks, toks[:, :1]], 1))
+    np.testing.assert_allclose(np.asarray(l1[:, 0]), np.asarray(full[:, 12]),
+                               rtol=0.15, atol=0.15)

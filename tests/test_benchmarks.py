@@ -1,0 +1,81 @@
+"""Benchmark-level assertions: the paper's trends must reproduce, the
+accelerator simulator must match the paper's published numbers, and the
+EfficientViT layer inventory must match the paper's GFLOPs."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import accel_sim as A
+
+
+def test_efficientvit_inventory_matches_paper_gflops():
+    """Paper Table V: EfficientViT-B1-R224 = 0.52 GFLOPs (=0.26 GMACs)."""
+    layers = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS["b1-r224"])
+    gmacs = sum(l.macs for l in layers) / 1e9
+    assert 0.26 * 0.7 <= gmacs <= 0.26 * 2.2, gmacs
+
+
+def test_simulator_predicts_table3_unfit_points():
+    """Fit one point (Trio B1-R224=26.06uJ); the other 7 cells of Table III
+    must be predicted within 10%."""
+    A.set_calibration()
+    paper = {
+        ("b1-r256", "trio"): 34.03, ("b1-r288", "trio"): 43.07,
+        ("b2-r224", "trio"): 80.58,
+        ("b1-r224", "m2q"): 17.85, ("b1-r256", "m2q"): 23.31,
+        ("b1-r288", "m2q"): 29.50, ("b2-r224", "m2q"): 55.64,
+    }
+    for (model, method), ref in paper.items():
+        layers = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS[model])
+        sim = A.simulate(layers, method)
+        assert abs(sim.energy_uj - ref) / ref < 0.10, (model, method,
+                                                       sim.energy_uj, ref)
+
+
+def test_simulator_reproduces_headline_claims():
+    """Paper abstract: ~31.5% comp-energy saving; ~80% EDP saving."""
+    A.set_calibration()
+    savings = []
+    for name in A.EFFICIENTVIT_CONFIGS:
+        layers = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS[name])
+        trio = A.simulate(layers, "trio")
+        ours = A.simulate(layers, "m2q")
+        savings.append(1 - ours.energy_uj / trio.energy_uj)
+    avg = sum(savings) / len(savings)
+    assert 0.25 <= avg <= 0.40, avg  # paper: 31.5%
+    l224 = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS["b1-r224"])
+    ours = A.simulate(l224, "m2q")
+    edp_saving = 1 - ours.edp_mj_ms / 4.3  # vs paper-reported Trio EDP
+    assert 0.7 <= edp_saving <= 0.95, edp_saving  # paper: 80%
+
+
+@pytest.mark.slow
+def test_table1_table2_trends_on_proxy():
+    """Needs the cached trained proxy (benchmarks/run.py trains it)."""
+    from benchmarks.proxy_model import CACHE, accuracy, train_proxy, CFG
+    if not CACHE.exists():
+        pytest.skip("proxy not trained yet (run benchmarks.run first)")
+    from repro.core import policy as pol
+    from repro.core.apply import fake_quant_model
+    from repro.models import get_model
+    model = get_model(CFG)
+    params = train_proxy()
+    kinds = {pol.KIND_DENSE}
+    acc = {s: accuracy(fake_quant_model(params, model.QUANT_RULES, scheme=s,
+                                        bits=b, kinds=kinds))
+           for s, b in [("uniform", 8), ("pot", 3), ("apot", 8), ("m2q", 8)]}
+    # Table I ordering: Uniform >= mixed >= APoT >> PoT
+    assert acc["uniform"] >= acc["m2q"] - 0.01
+    assert acc["m2q"] >= acc["apot"] - 0.01
+    assert acc["apot"] > acc["pot"]
+    # Table II: 4-bit DWConv is accuracy-free vs 8-bit
+    a4 = accuracy(fake_quant_model(params, model.QUANT_RULES,
+                                   scheme="uniform", bits=4,
+                                   kinds={pol.KIND_DWCONV}))
+    a8 = accuracy(fake_quant_model(params, model.QUANT_RULES,
+                                   scheme="uniform", bits=8,
+                                   kinds={pol.KIND_DWCONV}))
+    assert a4 >= a8 - 0.01

@@ -1,0 +1,146 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs the ref.py
+pure-jnp oracles, across shapes (aligned, ragged, tiny) and dtypes; plus
+triangulation against the QTensor XLA paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QAPoT, QM2Q, QUniform, quantize_act, select_schemes
+from repro.core.packing import apot_encode, pack_int4
+from repro.core.quant import apot_quantize, uniform_quantize
+from repro.kernels import ops, ref
+
+SHAPES = [(128, 128, 128), (256, 384, 512), (96, 72, 136), (8, 16, 32),
+          (130, 258, 514)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _mk_int8_weights(rng, K, N):
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    qt = QUniform.quantize(jnp.asarray(w), bits=8)
+    return qt
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+def test_int8_matmul_vs_ref(M, K, N):
+    rng = _rng(M + K + N)
+    qt = _mk_int8_weights(rng, K, N)
+    x = rng.normal(0, 1, (M, K)).astype(np.float32)
+    sa = jnp.float32(np.abs(x).max() / 127.0)
+    xq = quantize_act(jnp.asarray(x), sa)
+    y_ker = ops.int8_matmul_op(xq, qt.payload, sa, qt.scale.reshape(-1),
+                               qt.zero_point.reshape(-1), interpret=True)
+    y_ref = ref.int8_matmul_ref(xq, qt.payload, sa, qt.scale.reshape(-1),
+                                qt.zero_point.reshape(-1))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # triangulate vs QTensor serving path
+    qt.act_scale = sa
+    y_qt = qt.matmul(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_qt),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_int4_matmul_vs_ref(M, K, N, dtype):
+    N = N + (N % 2)  # packing needs even N
+    rng = _rng(M + K + N + 1)
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    qt = QUniform.quantize(jnp.asarray(w), bits=4)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)).astype(np.float32), dtype)
+    y_ker = ops.int4_matmul_op(x.astype(jnp.float32), qt.payload,
+                               qt.scale.reshape(-1),
+                               qt.zero_point.reshape(-1), interpret=True)
+    y_ref = ref.int4_matmul_ref(x.astype(jnp.float32), qt.payload,
+                                qt.scale.reshape(-1),
+                                qt.zero_point.reshape(-1))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+    y_qt = qt.matmul(x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_qt),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+def test_apot_matmul_vs_ref(M, K, N):
+    rng = _rng(M * 3 + K + N)
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    qt = QAPoT.quantize(jnp.asarray(w))
+    x = rng.normal(0, 1, (M, K)).astype(np.float32)
+    y_ker = ops.apot_matmul_op(jnp.asarray(x), qt.codes, qt.scale.reshape(-1),
+                               interpret=True)
+    y_ref = ref.apot_matmul_ref(jnp.asarray(x), qt.codes,
+                                qt.scale.reshape(-1))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    y_qt = qt.matmul(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_qt),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (64, 96, 200),
+                                   (16, 32, 48), (130, 514, 254)])
+def test_m2q_matmul_vs_ref_and_qtensor(M, K, N):
+    rng = _rng(M + 7 * K + N)
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    asn = select_schemes(jnp.asarray(w), ratio=0.5)
+    x = rng.normal(0, 1, (M, K)).astype(np.float32)
+    sa = jnp.float32(np.abs(x).max() / 127.0)
+    qt = QM2Q.quantize(jnp.asarray(w), asn.apot_idx, asn.uniform_idx,
+                       act_max_abs=jnp.float32(np.abs(x).max()))
+    xq = quantize_act(jnp.asarray(x), qt.uniform.act_scale)
+    yu_k, ya_k = ops.m2q_matmul_op(
+        xq, qt.uniform.act_scale, qt.uniform.payload,
+        qt.uniform.scale.reshape(-1), qt.uniform.zero_point.reshape(-1),
+        qt.apot.codes, qt.apot.scale.reshape(-1), interpret=True)
+    yu_r, ya_r = ref.m2q_matmul_ref(
+        xq, qt.uniform.act_scale, qt.uniform.payload,
+        qt.uniform.scale.reshape(-1), qt.uniform.zero_point.reshape(-1),
+        qt.apot.codes, qt.apot.scale.reshape(-1))
+    np.testing.assert_allclose(np.asarray(yu_k), np.asarray(yu_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ya_k), np.asarray(ya_r),
+                               rtol=1e-5, atol=1e-5)
+    # full fused path vs QTensor path (includes inverse permutation)
+    y_full = ops.qtensor_matmul(jnp.asarray(x), qt, interpret=True)
+    y_qt = qt.matmul(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_qt),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("B,H,W,C", [(2, 8, 8, 32), (1, 14, 14, 64),
+                                     (3, 7, 9, 16), (1, 16, 16, 130)])
+def test_dwconv_w4_vs_ref(B, H, W, C):
+    C = C + (C % 2)
+    rng = _rng(B + H + W + C)
+    w = rng.normal(0, 0.2, (3, 3, C)).astype(np.float32)
+    u = uniform_quantize(jnp.asarray(w), bits=4, axis=-1)
+    packed = pack_int4(u.q.reshape(9, C))
+    scale = u.scale.reshape(-1)
+    zp = u.zero_point.reshape(-1)
+    x = rng.normal(0, 1, (B, H, W, C)).astype(np.float32)
+    y_ker = ops.dwconv_w4_op(jnp.asarray(x), packed, scale, zp,
+                             interpret=True)
+    y_ref = ref.dwconv_w4_ref(jnp.asarray(x), packed, scale, zp)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qtensor_matmul_dispatch_uniform4_apot():
+    rng = _rng(99)
+    w = rng.normal(0, 0.05, (64, 48)).astype(np.float32)
+    x = jnp.asarray(rng.normal(0, 1, (3, 5, 64)).astype(np.float32))
+    q4 = QUniform.quantize(jnp.asarray(w), bits=4)
+    np.testing.assert_allclose(
+        np.asarray(ops.qtensor_matmul(x, q4, interpret=True)),
+        np.asarray(q4.matmul(x)), rtol=1e-4, atol=1e-4)
+    qa = QAPoT.quantize(jnp.asarray(w))
+    np.testing.assert_allclose(
+        np.asarray(ops.qtensor_matmul(x, qa, interpret=True)),
+        np.asarray(qa.matmul(x)), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,213 @@
+"""Unit + hypothesis property tests for the M2Q core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    QAPoT, QM2Q, QUniform, M2QPolicy, ShapeCtx,
+    apot_codebook, apot_dequantize, apot_quantize,
+    fake_quant_apot, fake_quant_pot, fake_quant_uniform,
+    pot_dequantize, pot_quantize, quantize_act, select_schemes,
+    quantize_model,
+)
+from repro.core.apply import abstract_quantize_model
+from repro.core.packing import (apot_decode_values, apot_encode, pack_int4,
+                                unpack_int4)
+
+finite_f32 = st.floats(min_value=-4.0, max_value=4.0, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+def w_arrays(min_side=2, max_side=24):
+    return hnp.arrays(np.float32,
+                      hnp.array_shapes(min_dims=2, max_dims=2,
+                                       min_side=min_side, max_side=max_side),
+                      elements=finite_f32)
+
+
+# ---------------------------------------------------------------------------
+# uniform (Eq. 1-2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(w=w_arrays(), bits=st.sampled_from([3, 4, 5, 6, 7, 8]))
+def test_uniform_error_bounded_by_half_step(w, bits):
+    from repro.core.quant import uniform_quantize, uniform_dequantize
+    u = uniform_quantize(jnp.asarray(w), bits=bits, axis=-1)
+    w_hat = np.asarray(uniform_dequantize(u))
+    step = np.asarray(u.scale)
+    err = np.abs(w - w_hat)
+    assert np.all(err <= 0.5 * step + 1e-5)
+
+
+def test_uniform_monotone_in_bits_gaussian():
+    """More bits -> lower MSE on generic (Gaussian) weights.  NOTE: strict
+    per-tensor monotonicity is FALSE in general — the 3-bit grid (range/7
+    steps) is not a subset of the 5-bit grid (range/31), so inputs lying
+    exactly on the coarse grid quantize losslessly at 3 bits but not at 5
+    (hypothesis found such a counterexample); the trend holds on continuous
+    distributions, which is what the paper's Table II sweeps."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.05, (64, 64)).astype("float32"))
+    errs = [float(jnp.mean((w - fake_quant_uniform(w, bits=b)) ** 2))
+            for b in (3, 5, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+# ---------------------------------------------------------------------------
+# PoT (Eq. 3) / APoT (Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def test_pot_paper_worked_example():
+    # paper: W=-0.26, S=2 -> s=-1, p=-3 -> dequant -0.25
+    t = pot_quantize(jnp.asarray([[-0.26, 1.74]]), bits=5, axis=None)
+    w_hat = np.asarray(pot_dequantize(t))
+    assert abs(w_hat[0, 0] - (-0.25)) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(w=w_arrays())
+def test_apot_decode_matches_codebook(w):
+    t = apot_quantize(jnp.asarray(w), axis=-1)
+    vals = np.abs(np.asarray(apot_dequantize(t)) / np.asarray(t.scale))
+    cb = apot_codebook()
+    # every reconstructed magnitude is (numerically) a codebook entry
+    d = np.min(np.abs(vals[..., None] - cb[None, None]), axis=-1)
+    assert np.all(d < 1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(w=w_arrays())
+def test_apot_encode_decode_roundtrip(w):
+    t = apot_quantize(jnp.asarray(w), axis=-1)
+    codes = apot_encode(t)
+    vals = np.asarray(apot_decode_values(codes)) * np.asarray(t.scale)
+    np.testing.assert_allclose(vals, np.asarray(apot_dequantize(t)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_scheme_error_ordering_gaussian():
+    """Paper Table I trend: PoT < APoT < mixed ~ uniform (accuracy), i.e.
+    MSE ordering uniform <= m2q <= apot <= pot on gaussian filters."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.05, (256, 64)).astype("float32"))
+    e_u = float(jnp.mean((w - fake_quant_uniform(w, 8)) ** 2))
+    e_p = float(jnp.mean((w - fake_quant_pot(w, 3)) ** 2))
+    e_a = float(jnp.mean((w - fake_quant_apot(w)) ** 2))
+    asn = select_schemes(w, ratio=0.5)
+    qm = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx)
+    e_m = float(jnp.mean((w - qm.dequant()) ** 2))
+    assert e_u <= e_m <= e_a <= e_p
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(q=hnp.arrays(np.uint8,
+                    hnp.array_shapes(min_dims=2, max_dims=3, min_side=2,
+                                     max_side=16).map(
+                        lambda s: s[:-1] + (s[-1] + s[-1] % 2,)),
+                    elements=st.integers(0, 15)))
+def test_int4_pack_roundtrip(q):
+    packed = pack_int4(jnp.asarray(q))
+    assert packed.shape[-1] == q.shape[-1] // 2
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), q)
+
+
+# ---------------------------------------------------------------------------
+# scheme selection (Eq. 6)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=w_arrays(min_side=4))
+def test_select_schemes_ratio_and_partition(w):
+    asn = select_schemes(jnp.asarray(w), ratio=0.5)
+    n = w.shape[-1]
+    assert len(asn.apot_idx) == n // 2
+    both = np.concatenate([asn.apot_idx, asn.uniform_idx])
+    np.testing.assert_array_equal(np.sort(both), np.arange(n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=w_arrays(min_side=4))
+def test_unconstrained_selection_no_worse_than_uniform(w):
+    """Eq. 6 argmin: per-filter min(mse_u, mse_a) <= uniform-only MSE."""
+    wj = jnp.asarray(w)
+    asn = select_schemes(wj, ratio=None)
+    from repro.core.quant import filterwise_mse
+    per_filter = np.minimum(asn.mse_uniform, asn.mse_apot)
+    assert np.all(per_filter <= asn.mse_uniform + 1e-12)
+
+
+def test_m2q_inv_perm_is_permutation():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(0, 0.1, (32, 10)).astype("float32"))
+    asn = select_schemes(w)
+    q = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx)
+    np.testing.assert_array_equal(np.sort(np.asarray(q.inv_perm)),
+                                  np.arange(10))
+
+
+# ---------------------------------------------------------------------------
+# activation quant + integer path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=hnp.arrays(np.float32, (8, 16), elements=finite_f32),
+       mx=st.floats(0.1, 8.0))
+def test_quantize_act_bounds(x, mx):
+    s = jnp.float32(mx / 127.0)
+    xq = np.asarray(quantize_act(jnp.asarray(x), s))
+    assert xq.dtype == np.int8
+    assert xq.min() >= -127 and xq.max() <= 127
+
+
+def test_int8_path_close_to_dequant_path():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(0, 0.05, (128, 64)).astype("float32"))
+    x = jnp.asarray(rng.normal(0, 1, (16, 128)).astype("float32"))
+    qt = QUniform.quantize(w, bits=8, act_max_abs=jnp.max(jnp.abs(x)))
+    y_int = qt.matmul(x)
+    qt_f = QUniform.quantize(w, bits=8)  # no act scale -> dequant path
+    y_deq = qt_f.matmul(x)
+    rel = float(jnp.linalg.norm(y_int - y_deq) / jnp.linalg.norm(y_deq))
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# abstract twin agrees with concrete quantization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "dbrx-132b", "rwkv6-3b"])
+def test_abstract_quantize_matches_concrete(arch):
+    from repro.configs.registry import REDUCED
+    from repro.models import get_model
+    cfg = REDUCED[arch]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    ctx = ShapeCtx(tokens_per_step=10_000_000,
+                   moe_top_k=max(cfg.moe_top_k, 1),
+                   moe_num_experts=max(cfg.moe_experts, 1))
+    pol = M2QPolicy(intensity_threshold=1.0, quantize_activations=False)
+    qp, _ = quantize_model(params, model.QUANT_RULES, ctx, pol)
+    abs_params = jax.eval_shape(lambda: model.init(cfg, jax.random.PRNGKey(0)))
+    qp_abs = abstract_quantize_model(abs_params, model.QUANT_RULES, ctx, pol,
+                                     with_act_scales=False)
+    conc = jax.tree_util.tree_flatten_with_path(qp)[0]
+    abst = jax.tree_util.tree_flatten_with_path(qp_abs)[0]
+    assert len(conc) == len(abst)
+    for (pc, lc), (pa, la) in zip(conc, abst):
+        assert jax.tree_util.keystr(pc) == jax.tree_util.keystr(pa)
+        assert tuple(lc.shape) == tuple(la.shape), jax.tree_util.keystr(pc)
+        assert lc.dtype == la.dtype, jax.tree_util.keystr(pc)

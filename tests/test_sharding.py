@@ -1,0 +1,102 @@
+"""Sharding rules + a small-mesh end-to-end dry-run (subprocess: the device
+count must be fixed before jax initializes)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+
+def test_spec_rules_divisibility_and_paths():
+    import jax
+    from repro.dist.sharding import spec_for_param
+    mesh = None
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 4}
+
+    m = FakeMesh()
+    # column-parallel qkv
+    assert spec_for_param("layers/attn/wq", (24, 64, 128), np.dtype("float32"),
+                          m) == P(None, None, "model")
+    # QTensor child path suffixes are stripped before rule matching
+    assert spec_for_param("layers/attn/wq/0/0", (24, 64, 128),
+                          np.dtype("int8"), m) == P(None, None, "model")
+    # indivisible dim falls back to replication, not an error
+    assert spec_for_param("layers/attn/wq", (24, 64, 126),
+                          np.dtype("float32"), m) == P(None, None, None)
+    # permutation indices always replicate
+    assert spec_for_param("layers/attn/wq/2", (24, 128), np.dtype("int32"),
+                          m) == P()
+    # expert weights: EP on the (stacked) expert axis 1 of (L, E, D, F)
+    assert spec_for_param("layers/moe/experts/w1", (8, 16, 64, 128),
+                          np.dtype("float32"), m) == P(None, "model", None,
+                                                       None)
+    # fsdp adds a data axis on the first free divisible dim of big tensors
+    s = spec_for_param("layers/mlp/w1", (24, 512, 256), np.dtype("float32"),
+                       m, fsdp=True)
+    assert s == P("data", None, "model") or s == P(("data",), None, "model")
+
+
+_SMALL_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.configs.registry import REDUCED
+    from repro.dist import sharding as shd
+    from repro.models import get_model
+    from repro.optim.adamw import AdamW
+    from repro.train.step import make_train_step, make_serve_step
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    cfg = REDUCED["qwen3-14b"].replace(dtype="bfloat16", act_sharding="data",
+                                       attn_bf16_mm=True, causal_skip=True)
+    model = get_model(cfg)
+    with mesh:
+        # train step compiles AND runs on 16 virtual devices
+        params = model.init(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-3)
+        opt_state = opt.init(params)
+        step = make_train_step(cfg, model, opt)
+        batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+                 "labels": jnp.zeros((8, 32), jnp.int32)}
+        pspec = shd.param_specs(params, mesh, fsdp=True)
+        in_specs = (pspec, type(opt_state)(count=jax.sharding.PartitionSpec(),
+                                           m=pspec, v=pspec),
+                    shd.batch_specs(batch, mesh))
+        fn = jax.jit(step, in_shardings=shd.shardings_from_specs(in_specs, mesh),
+                     donate_argnums=(0, 1))
+        params2, opt2, metrics = fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        # quantized decode also compiles + runs sharded
+        from repro.core import M2QPolicy, ShapeCtx, quantize_model
+        qp, _ = quantize_model(model.init(cfg, jax.random.PRNGKey(0)),
+                               model.QUANT_RULES, ShapeCtx(tokens_per_step=8),
+                               M2QPolicy(intensity_threshold=0.5))
+        cache = model.init_cache(cfg, 8, 16)
+        serve = make_serve_step(cfg, model)
+        qspec = shd.param_specs(qp, mesh)
+        sfn = jax.jit(serve, in_shardings=shd.shardings_from_specs(
+            (qspec, shd.cache_specs(cache, mesh, shard_model=True),
+             shd.batch_specs(jnp.zeros((8, 1), jnp.int32), mesh)), mesh),
+            donate_argnums=(1,))
+        logits, cache = sfn(qp, cache, jnp.zeros((8, 1), jnp.int32))
+        print(json.dumps({"loss": loss,
+                          "finite": bool(jnp.isfinite(loss)),
+                          "logits_finite": bool(jnp.all(jnp.isfinite(
+                              logits.astype(jnp.float32))))}))
+""")
+
+
+@pytest.mark.slow
+def test_small_mesh_end_to_end():
+    out = subprocess.run([sys.executable, "-c", _SMALL_DRYRUN],
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["finite"] and rec["logits_finite"]
