@@ -1,0 +1,163 @@
+"""Microbenchmarks for the five Pallas kernels + the M2Q dispatch chain.
+
+Emits ``BENCH_kernels.json``: per-kernel wall-clock and loop-aware HLO op
+counts (via repro.launch.hlo_analysis.op_histogram), plus a fused-vs-legacy
+comparison of the M2Q layer epilogue — the fused permutation-free path must
+show ZERO standalone gather/concatenate ops, the legacy concat+``take``
+epilogue it replaced shows both.  Wall-clocks on the CPU interpret path are
+not kernel latencies (the container has no TPU) but they pin the dispatch
+overhead trend from PR to PR; on a TPU backend the same harness times the
+real kernels with autotuned blocks.
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_OUT = Path(__file__).resolve().parent / "BENCH_kernels.json"
+_TRACKED_OPS = ("gather", "concatenate", "dot", "fusion", "custom-call",
+                "scatter", "pad", "slice", "while")
+
+
+def _hist_summary(hist):
+    out = {op: int(hist.get(op, 0)) for op in _TRACKED_OPS}
+    out["total"] = int(sum(hist.values()))
+    return out
+
+
+def _bench_one(name, fn, args, iters=3):
+    from repro.kernels.autotune import measure
+    from repro.launch.hlo_analysis import op_histogram
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return {
+        "wall_s": round(measure(fn, *args, reps=iters), 6),
+        "ops": _hist_summary(op_histogram(txt)),
+        # strictest view: counts fusion interiors too — the legacy
+        # concat+take epilogue surfaces here even after XLA fuses it
+        "ops_incl_fused": _hist_summary(
+            op_histogram(txt, include_fused=True)),
+    }
+
+
+def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
+    from repro.core import QAPoT, QM2Q, QUniform, select_schemes
+    from repro.core.packing import pack_int4
+    from repro.core.quant import uniform_quantize
+    from repro.kernels import ops
+
+    M, K, N = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)).astype(np.float32))
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    sa = jnp.float32(float(np.abs(np.asarray(x)).max()) / 127.0)
+    interpret = jax.default_backend() != "tpu"
+
+    report = {"backend": jax.default_backend(), "interpret": interpret,
+              "shape": list(shape), "unix_time": int(time.time()),
+              "kernels": {}, "m2q_paths": {}}
+
+    q8 = QUniform.quantize(jnp.asarray(w), bits=8)
+    report["kernels"]["int8_matmul"] = _bench_one(
+        "int8_matmul",
+        lambda xx: ops.int8_matmul_op(xx, q8.payload, sa,
+                                      q8.scale.reshape(-1),
+                                      q8.zero_point.reshape(-1),
+                                      interpret=interpret),
+        (x,), iters)
+
+    q4 = QUniform.quantize(jnp.asarray(w), bits=4)
+    report["kernels"]["int4_matmul"] = _bench_one(
+        "int4_matmul",
+        lambda xx: ops.int4_matmul_op(xx, q4.payload, q4.scale.reshape(-1),
+                                      q4.zero_point.reshape(-1),
+                                      interpret=interpret),
+        (x,), iters)
+
+    qa = QAPoT.quantize(jnp.asarray(w))
+    report["kernels"]["apot_matmul"] = _bench_one(
+        "apot_matmul",
+        lambda xx: ops.apot_matmul_op(xx, qa.codes, qa.scale.reshape(-1),
+                                      interpret=interpret),
+        (x,), iters)
+
+    asn = select_schemes(jnp.asarray(w), ratio=0.5)
+    qm = QM2Q.quantize(jnp.asarray(w), asn.apot_idx, asn.uniform_idx,
+                       act_max_abs=jnp.float32(3.0))
+    report["kernels"]["m2q_matmul"] = _bench_one(
+        "m2q_matmul",
+        lambda xx: ops.m2q_matmul_op(xx, qm.act_scale, qm.payload,
+                                     qm.u_scale.reshape(-1),
+                                     qm.u_zp.reshape(-1),
+                                     qm.a_scale.reshape(-1),
+                                     interpret=interpret),
+        (x,), iters)
+
+    C = max(32, (N // 4) * 2)
+    wc = rng.normal(0, 0.2, (3, 3, C)).astype(np.float32)
+    uc = uniform_quantize(jnp.asarray(wc), bits=4, axis=-1)
+    packed = pack_int4(uc.q.reshape(9, C))
+    xc = jnp.asarray(rng.normal(0, 1, (2, 16, 16, C)).astype(np.float32))
+    report["kernels"]["dwconv_w4"] = _bench_one(
+        "dwconv_w4",
+        lambda xx: ops.dwconv_w4_op(xx, packed, uc.scale.reshape(-1),
+                                    uc.zero_point.reshape(-1),
+                                    interpret=interpret),
+        (xc,), iters)
+
+    # --- M2Q layer epilogue: fused permutation-free vs legacy concat+take --
+    report["m2q_paths"]["fused"] = _bench_one(
+        "m2q_fused", lambda xx: qm.matmul(xx), (x,), iters)
+
+    ui = jnp.asarray(asn.uniform_idx, jnp.int32)
+    ai = jnp.asarray(asn.apot_idx, jnp.int32)
+    inv_perm = jnp.argsort(jnp.concatenate([ui, ai])).astype(jnp.int32)
+    qu_half = QUniform.quantize(jnp.asarray(w)[:, ui], bits=8,
+                                act_max_abs=jnp.float32(3.0))
+    qa_half = QAPoT.quantize(jnp.asarray(w)[:, ai],
+                             act_max_abs=jnp.float32(3.0))
+
+    def legacy(xx):  # the epilogue this PR deleted
+        y = jnp.concatenate([qu_half.matmul(xx), qa_half.matmul(xx)], axis=-1)
+        return jnp.take(y, inv_perm, axis=-1)
+
+    report["m2q_paths"]["legacy_concat_take"] = _bench_one(
+        "m2q_legacy", legacy, (x,), iters)
+    return report
+
+
+def write_report(out_path=DEFAULT_OUT, shape=(128, 128, 128),
+                 iters: int = 3) -> dict:
+    report = collect(shape=shape, iters=iters)
+    fused = report["m2q_paths"]["fused"]["ops_incl_fused"]
+    assert fused["gather"] == 0 and fused["concatenate"] == 0, fused
+    Path(out_path).write_text(json.dumps(report, indent=1, sort_keys=True))
+    return report
+
+
+def print_report(report) -> None:
+    """CSV-ish summary lines (shared by this CLI and benchmarks.run)."""
+    for section in ("kernels", "m2q_paths"):
+        prefix = "kernel" if section == "kernels" else "m2q_path"
+        for name, rec in report[section].items():
+            o = rec["ops_incl_fused"]
+            print(f"{prefix}/{name},{rec['wall_s']},"
+                  f"gather={o['gather']} concat={o['concatenate']}")
+
+
+def main():
+    out = Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT_OUT
+    report = write_report(out)
+    print_report(report)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,10 +8,11 @@ import time
 
 
 def main() -> None:
-    from . import accel_sim, roofline, tables
+    from . import accel_sim, kernel_bench, roofline, tables
 
     accel_sim.set_calibration()
     print("name,value,derived")
+    kernel_bench.print_report(kernel_bench.write_report())
     t0 = time.time()
     for fn in (tables.table1_schemes, tables.table2_bits,
                tables.table3_energy, tables.table4_ablation,

@@ -49,8 +49,11 @@ rel = float(jnp.linalg.norm(logits_q - logits_fp)
             / jnp.linalg.norm(logits_fp))
 print(f"quantized-vs-float relative error: {rel:.4f}")
 
-# 5. the fused mixed-scheme Pallas kernel vs its pure-jnp oracle
-from repro.core import QM2Q, quantize_act, select_schemes
+# 5. the fused mixed-scheme Pallas kernel vs its pure-jnp oracle.
+# The merged permutation-free layout: one byte per weight in original
+# filter order, float activations in (quantization fused into the kernel
+# prologue), one output array out — no concatenate/gather epilogue.
+from repro.core import QM2Q, select_schemes
 from repro.kernels import ops
 from repro.kernels import ref as kref
 
@@ -60,16 +63,10 @@ x = jnp.asarray(np.random.default_rng(2).normal(0, 1, (16, 128)), jnp.float32)
 asn = select_schemes(w, ratio=0.5)
 qt = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx,
                    act_max_abs=jnp.max(jnp.abs(x)))
-xq = quantize_act(x, qt.uniform.act_scale)
-yu, ya = ops.m2q_matmul_op(xq, qt.uniform.act_scale, qt.uniform.payload,
-                           qt.uniform.scale.reshape(-1),
-                           qt.uniform.zero_point.reshape(-1),
-                           qt.apot.codes, qt.apot.scale.reshape(-1),
-                           interpret=True)
-ru, ra = kref.m2q_matmul_ref(xq, qt.uniform.act_scale, qt.uniform.payload,
-                             qt.uniform.scale.reshape(-1),
-                             qt.uniform.zero_point.reshape(-1),
-                             qt.apot.codes, qt.apot.scale.reshape(-1))
-print("fused kernel max|err| vs oracle:",
-      float(jnp.max(jnp.abs(yu - ru))), float(jnp.max(jnp.abs(ya - ra))))
+y = ops.m2q_matmul_op(x, qt.act_scale, qt.payload, qt.u_scale.reshape(-1),
+                      qt.u_zp.reshape(-1), qt.a_scale.reshape(-1),
+                      interpret=True)
+r = kref.m2q_merged_ref(x, qt.act_scale, qt.payload, qt.u_scale.reshape(-1),
+                        qt.u_zp.reshape(-1), qt.a_scale.reshape(-1))
+print("fused kernel max|err| vs oracle:", float(jnp.max(jnp.abs(y - r))))
 print("quickstart OK")

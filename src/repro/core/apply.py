@@ -92,9 +92,11 @@ def _quantize_leaf(w, kind: str, decision: str, p: pol.M2QPolicy,
             per_layer = [_batched_m2q(w[i], p.apot_ratio)
                          for i in range(w.shape[0])]
             qt = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+            # tree.map reconstructs with layer 0's aux; refresh the shape
+            # so the treedef matches the abstract twin's
+            qt = dataclasses.replace(qt, shape=tuple(w.shape))
         if ams is not None:
-            qt.uniform.act_scale = act_scale_from_stats(ams)
-            qt.apot.act_scale = act_scale_from_stats(ams)
+            qt.act_scale = act_scale_from_stats(ams)
         return qt
     raise ValueError(f"unknown compute scheme {p.compute_scheme}")
 
@@ -118,22 +120,25 @@ def _joint_group_quantize(w_up, w_gate, w_down, ratio):
         d = w_down[i] if stacked else w_down
         sel_src = u if g is None else jnp.concatenate([u, g], axis=0)
         asn = select_schemes(sel_src, ratio=ratio if ratio is not None else 0.5)
-        nu = len(asn.uniform_idx)
         perm = np.concatenate([asn.uniform_idx, asn.apot_idx])
-        qu = QM2Q(uniform=QUniform.quantize(u[:, perm[:nu]], bits=8),
-                  apot=QAPoT.quantize(u[:, perm[nu:]]),
-                  inv_perm=None)
-        ups.append(qu)
+        # fold_perm: columns stored in [uniform | apot] order, the runtime
+        # permutation folded into w_down's rows below
+        ups.append(QM2Q.quantize(u, asn.apot_idx, asn.uniform_idx,
+                                 fold_perm=True))
         if g is not None:
-            gates.append(QM2Q(
-                uniform=QUniform.quantize(g[:, perm[:nu]], bits=8),
-                apot=QAPoT.quantize(g[:, perm[nu:]]),
-                inv_perm=None))
+            gates.append(QM2Q.quantize(g, asn.apot_idx, asn.uniform_idx,
+                                       fold_perm=True))
         downs.append(jnp.take(d, jnp.asarray(perm), axis=0))
     if not stacked:
         return ups[0], (gates[0] if gates else None), downs[0]
-    q_up = jax.tree.map(lambda *xs: jnp.stack(xs), *ups)
-    q_gate = jax.tree.map(lambda *xs: jnp.stack(xs), *gates) if gates else None
+    q_up = dataclasses.replace(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *ups),
+        shape=tuple(w_up.shape))
+    q_gate = None
+    if gates:
+        q_gate = dataclasses.replace(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *gates),
+            shape=tuple(w_gate.shape))
     return q_up, q_gate, jnp.stack(downs)
 
 
@@ -195,8 +200,8 @@ def quantize_model(
                                       decision="mixed(perm-folded)",
                                       shape=tuple(leaf.shape),
                                       bits=weight_bits(qt),
-                                      n_apot=qt.apot.shape[-1],
-                                      n_uniform=qt.uniform.shape[-1]))
+                                      n_apot=qt.n_apot,
+                                      n_uniform=qt.n_uniform))
             return qt
         if key in permuted_down:
             leaf = permuted_down[key]
@@ -224,8 +229,8 @@ def quantize_model(
         rep = LayerReport(path=key, kind=kind, decision=decision,
                           shape=tuple(leaf.shape), bits=weight_bits(qt))
         if isinstance(qt, (QM2Q, QExpertM2Q)):
-            rep.n_apot = qt.apot.shape[-1]
-            rep.n_uniform = qt.uniform.shape[-1]
+            rep.n_apot = qt.n_apot
+            rep.n_uniform = qt.n_uniform
         w_hat = qt.dequant()
         rep.mse = float(jnp.mean((jnp.asarray(leaf, jnp.float32).reshape(w_hat.shape)
                                   - w_hat) ** 2))
@@ -293,6 +298,27 @@ def abstract_quantize_model(
                      if act else None,
                      shape=tuple(shape))
 
+    def q_m2q(shape, reduce_axes=None, act=False, stacked=False, cls=None):
+        # merged permutation-free layout: one byte payload + three
+        # zero-masked per-column scale rows (see core.qtensor).  The split
+        # counts live in treedef aux, so they must mirror select_schemes'
+        # floor rule under the policy's ratio.  ratio=None (Eq. 6 argmin)
+        # has a data-dependent split the shape-only twin cannot know; the
+        # 1:1 default is assumed there.
+        red = _reduction_axes(len(shape), -1, reduce_axes)
+        ks = _keepdims(shape, red)
+        n = shape[-1]
+        ratio = p.apot_ratio if p.apot_ratio is not None else 0.5
+        n_apot = int(n * ratio)
+        if cls is None:
+            cls = QM2Q if len(shape) == 2 else QExpertM2Q
+        return cls(
+            payload=_sds(shape, jnp.int8), u_scale=_sds(ks, jnp.float32),
+            u_zp=_sds(ks, jnp.float32), a_scale=_sds(ks, jnp.float32),
+            act_scale=_sds(_act_shape(shape, stacked), jnp.float32)
+            if act else None,
+            shape=tuple(shape), n_uniform=n - n_apot, n_apot=n_apot)
+
     def visit(path, leaf):
         if not hasattr(leaf, "shape"):
             return leaf
@@ -314,13 +340,11 @@ def abstract_quantize_model(
         act = with_act_scales and p.quantize_activations
         if decision == pol.DECISION_MIXED and p.compute_scheme == "m2q" and \
                 any(re.search(rx, key) for rx in fold_res):
-            # perm-folded group member: halves without inv_perm, no act scale
-            n = shape[-1]
+            # perm-folded group member: merged [uniform | apot] column order,
+            # no act scale (consumer rows were permuted offline); stacked
+            # groups keep the QM2Q class (3-D children via tree.map stack)
             ra2 = (ndim - 2,) if ndim >= 3 else None
-            return QM2Q(
-                uniform=q_uniform(shape[:-1] + (n - n // 2,), 8, -1, ra2),
-                apot=q_apot(shape[:-1] + (n // 2,), ra2),
-                inv_perm=None)
+            return q_m2q(shape, ra2, cls=QM2Q)
         if decision == pol.DECISION_LOWBIT:
             if kind == pol.KIND_EMBEDDING:
                 return q_uniform(shape, p.memory_bits, 0)
@@ -335,22 +359,10 @@ def abstract_quantize_model(
             return q_uniform(shape, 8, -1, ra, act=act, stacked=stacked)
         if p.compute_scheme == "apot":
             return q_apot(shape, ra, act=act, stacked=stacked)
-        # m2q: 1:1 split of the filter axis
-        n = shape[-1]
-        nu = n - n // 2
-        na = n // 2
-        half_u = shape[:-1] + (nu,)
-        half_a = shape[:-1] + (na,)
+        # m2q: 1:1 split of the filter axis, merged byte layout
         if ndim == 2:
-            return QM2Q(uniform=q_uniform(half_u, 8, -1, None, act=act),
-                        apot=q_apot(half_a, None, act=act),
-                        inv_perm=_sds((n,), jnp.int32))
-        ra = (ndim - 2,)
-        perm_shape = shape[:-2] + (n,)
-        return QExpertM2Q(
-            uniform=q_uniform(half_u, 8, -1, ra, act=act, stacked=stacked),
-            apot=q_apot(half_a, ra, act=act, stacked=stacked),
-            inv_perm=_sds(perm_shape, jnp.int32))
+            return q_m2q(shape, None, act=act)
+        return q_m2q(shape, (ndim - 2,), act=act, stacked=stacked)
 
     return jax.tree_util.tree_map_with_path(visit, params_abs)
 

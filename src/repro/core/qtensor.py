@@ -8,8 +8,10 @@ serves (Sec. IV):
   MPMA single mode; 4-bit payloads are nibble-packed).
 * :class:`QAPoT`     — APoT-coded weights (the SAT engine), one byte/weight.
 * :class:`QM2Q`      — a mixed-scheme layer: the filter set split 1:1 into a
-  uniform half and an APoT half (paper Sec. III-B-1), plus the inverse
-  permutation restoring filter order.  This is the fused MPMA+SAT execution.
+  uniform half and an APoT half (paper Sec. III-B-1), stored MERGED in one
+  byte-per-weight array in original filter order (the inverse permutation is
+  applied to the payload offline, at quantize time).  This is the fused
+  MPMA+SAT execution with no runtime concatenate/gather epilogue.
 
 Each kind implements ``dequant()`` (reference f32 weights) and ``matmul(x)``
 (the XLA serving path).  The Pallas kernels in :mod:`repro.kernels` implement
@@ -184,139 +186,225 @@ class QAPoT:
         return y * self.scale.reshape(-1).astype(x.dtype)
 
 
+def _as_code_bytes(payload: jax.Array) -> jax.Array:
+    """Reinterpret a merged int8 payload tile as uint8 APoT code bytes."""
+    if payload.dtype == jnp.uint8:
+        return payload
+    return jax.lax.bitcast_convert_type(payload, jnp.uint8)
+
+
+def _merged_dequant(payload, u_scale, u_zp, a_scale, dtype=jnp.float32):
+    """Merged-layout dequant: each column is EITHER uniform (a_scale==0)
+    or APoT (u_scale==0), so the two decodes sum without a select."""
+    qi = payload.astype(jnp.int32).astype(jnp.float32)
+    wu = (qi - u_zp) * u_scale
+    wa = packing.apot_decode_values(_as_code_bytes(payload)) * a_scale
+    return (wu + wa).astype(dtype)
+
+
+def _merged_matmul(x, payload, u_scale, u_zp, a_scale, act_scale):
+    """y = x @ W for the merged layout; x (..., K), payload (K, N).
+
+    Output columns land directly in the stored (original-filter) order — no
+    concatenate, no inverse-permutation gather.  Both engines stream the
+    same quantized activation tile (paper Sec. IV "Execution Flow"); the
+    zero-masked scales cancel each engine's contribution on the columns it
+    does not own.
+
+    NOTE: this is the pure-XLA compatibility path (works under scan/SPMD
+    with no Pallas dependency), and here the full-width APoT decode DOES
+    materialize a (K, N) f32 operand that the half-width legacy layout did
+    not — accepted because on TPU nn.dense routes calibrated leaves to
+    kernels.m2q_matmul (see kernels.ops.dispatch_enabled), where the
+    decode never leaves VMEM and weight HBM traffic stays at one byte per
+    weight; this fallback serves CPU runs and shapes the kernels cannot
+    take.
+    """
+    if act_scale is None:
+        return x @ _merged_dequant(payload, u_scale, u_zp, a_scale, x.dtype)
+    xq = quantize_act(x, act_scale)
+    acc = jax.lax.dot_general(
+        xq, payload, (((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+    yu = (acc.astype(jnp.float32) - xsum.astype(jnp.float32) * u_zp) * u_scale
+    vals = packing.apot_decode_values(_as_code_bytes(payload))
+    ya = jnp.dot(xq.astype(jnp.float32), vals) * a_scale
+    return ((yu + ya) * act_scale).astype(x.dtype)
+
+
+def _merge_halves(up, uscale, uzp, codes, ascale, inv_perm=None):
+    """Scatter uniform bytes + APoT code bytes into one (..., N) int8 array.
+
+    Inputs arrive in [uniform | apot] column order; ``inv_perm`` (when given)
+    restores original filter order ONCE, offline — the runtime inverse
+    permutation is gone.  Scales are zero-padded on the columns the other
+    engine owns, so the merged epilogue is a masked sum.
+    """
+    zeros_u = jnp.zeros(codes.shape[:-2] + (1, codes.shape[-1]), jnp.float32)
+    zeros_a = jnp.zeros(up.shape[:-2] + (1, up.shape[-1]), jnp.float32)
+    payload = jnp.concatenate(
+        [up, jax.lax.bitcast_convert_type(codes, jnp.int8)], axis=-1)
+    u_scale = jnp.concatenate([uscale, zeros_u], axis=-1)
+    u_zp = jnp.concatenate([uzp, zeros_u], axis=-1)
+    a_scale = jnp.concatenate([zeros_a, ascale], axis=-1)
+    if inv_perm is not None:
+        if payload.ndim == 2:
+            payload = jnp.take(payload, inv_perm, axis=-1)
+            u_scale = jnp.take(u_scale, inv_perm, axis=-1)
+            u_zp = jnp.take(u_zp, inv_perm, axis=-1)
+            a_scale = jnp.take(a_scale, inv_perm, axis=-1)
+        else:  # (E, K, N) with per-expert perms (E, N)
+            ip = inv_perm[..., None, :]
+            payload = jnp.take_along_axis(payload, ip, axis=-1)
+            u_scale = jnp.take_along_axis(u_scale, ip, axis=-1)
+            u_zp = jnp.take_along_axis(u_zp, ip, axis=-1)
+            a_scale = jnp.take_along_axis(a_scale, ip, axis=-1)
+    return payload, u_scale, u_zp, a_scale
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QM2Q:
-    """Mixed-scheme layer: uniform half + APoT half + inverse filter perm."""
+    """Mixed-scheme layer in the merged, permutation-free layout.
 
-    uniform: QUniform
-    apot: QAPoT
-    inv_perm: jax.Array  # (N,) int32
+    One byte per weight, columns in ORIGINAL filter order: a column owned by
+    the uniform engine stores its offset-folded int8 payload; a column owned
+    by the SAT engine stores its APoT code byte.  Per-column scales are
+    zero-masked (``u_scale``/``u_zp`` vanish on APoT columns, ``a_scale`` on
+    uniform columns), so dequant/matmul are a sum of the two engine outputs
+    with no concatenate and no inverse-permutation gather — the reordering
+    happened once, offline, in :meth:`quantize`.
+    """
+
+    payload: jax.Array   # (K, N) int8 — uniform byte or APoT code per column
+    u_scale: jax.Array   # (1, N) f32, 0 on APoT columns
+    u_zp: jax.Array      # (1, N) f32 stored-domain zero point, 0 on APoT cols
+    a_scale: jax.Array   # (1, N) f32, 0 on uniform columns
+    act_scale: Optional[jax.Array]
+    shape: tuple
+    n_uniform: int
+    n_apot: int
 
     def tree_flatten(self):
-        return (self.uniform, self.apot, self.inv_perm), ()
+        return (self.payload, self.u_scale, self.u_zp, self.a_scale,
+                self.act_scale), (self.shape, self.n_uniform, self.n_apot)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, shape=aux[0], n_uniform=aux[1], n_apot=aux[2])
 
     @classmethod
     def quantize(cls, w: jax.Array, apot_idx, uniform_idx,
-                 act_max_abs: Optional[jax.Array] = None) -> "QM2Q":
+                 act_max_abs: Optional[jax.Array] = None,
+                 fold_perm: bool = False) -> "QM2Q":
+        """``fold_perm=True`` stores columns in [uniform | apot] order (the
+        consumer's rows were permuted to match — see apply.py FFN groups);
+        otherwise the inverse permutation is applied to the payload here,
+        once, so outputs come out in original filter order."""
         w2 = w.reshape(-1, w.shape[-1])
-        wu = w2[:, jnp.asarray(uniform_idx)]
-        wa = w2[:, jnp.asarray(apot_idx)]
-        perm = jnp.concatenate(
-            [jnp.asarray(uniform_idx, jnp.int32), jnp.asarray(apot_idx, jnp.int32)])
-        inv_perm = jnp.argsort(perm).astype(jnp.int32)
-        return cls(
-            uniform=QUniform.quantize(wu, bits=8, act_max_abs=act_max_abs),
-            apot=QAPoT.quantize(wa, act_max_abs=act_max_abs),
-            inv_perm=inv_perm)
-
-    @property
-    def shape(self):
-        return (self.uniform.shape[0], self.uniform.shape[1] + self.apot.shape[1])
+        ui = jnp.asarray(uniform_idx, jnp.int32)
+        ai = jnp.asarray(apot_idx, jnp.int32)
+        u: UniformQ = uniform_quantize(w2[:, ui], bits=8, axis=-1)
+        t: APoTQ = apot_quantize(w2[:, ai], axis=-1)
+        inv_perm = None
+        if not fold_perm:
+            inv_perm = jnp.argsort(jnp.concatenate([ui, ai])).astype(jnp.int32)
+        payload, u_scale, u_zp, a_scale = _merge_halves(
+            (u.q - _I8_OFFSET).astype(jnp.int8), u.scale,
+            u.zero_point - _I8_OFFSET, packing.apot_encode(t), t.scale,
+            inv_perm)
+        act_scale = None if act_max_abs is None else act_scale_from_stats(
+            act_max_abs)
+        return cls(payload, u_scale, u_zp, a_scale, act_scale,
+                   tuple(w2.shape), int(ui.shape[0]), int(ai.shape[0]))
 
     def dequant(self, dtype=jnp.float32) -> jax.Array:
-        w = jnp.concatenate(
-            [self.uniform.dequant(dtype), self.apot.dequant(dtype)], axis=-1)
-        if self.inv_perm is None:  # perm folded into the consumer's rows
-            return w
-        return jnp.take(w, self.inv_perm, axis=-1)
+        return _merged_dequant(self.payload, self.u_scale, self.u_zp,
+                               self.a_scale, dtype)
 
     def matmul(self, x: jax.Array) -> jax.Array:
-        # Paper Sec. IV "Execution Flow": SAT (APoT half) runs in parallel
-        # with MPMA (uniform half); on TPU both halves stream the same
-        # activation tile — repro.kernels.m2q_matmul fuses them in one pass.
-        yu = self.uniform.matmul(x)
-        ya = self.apot.matmul(x)
-        y = jnp.concatenate([yu, ya], axis=-1)
-        if self.inv_perm is None:
-            return y
-        return jnp.take(y, self.inv_perm, axis=-1)
+        return _merged_matmul(x, self.payload, self.u_scale, self.u_zp,
+                              self.a_scale, self.act_scale)
+
+    def scheme_mask(self) -> jax.Array:
+        """(N,) bool — True where the column is uniform-quantized."""
+        return (self.a_scale.reshape(-1) == 0.0)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QExpertM2Q:
-    """Mixed-scheme quantization of a stacked MoE expert weight (E, K, N).
+    """Merged mixed-scheme quantization of stacked expert weights (E, K, N).
 
-    Scales are per-(expert, filter): reduce_axes=(1,).  Each expert gets its
-    own MSE scheme split (Eq. 6 applied per expert), but the 1:1 ratio makes
-    the two halves stackable: uniform payload (E, K, N/2), APoT codes
-    (E, K, N/2), inverse perms (E, N).
+    Same permutation-free byte layout as :class:`QM2Q`, with per-(expert,
+    filter) scales (reduce_axes=(1,)) and per-expert Eq. 6 splits.  Stacked
+    layer trees add a leading L axis to every child (payload (L, E, K, N)).
     """
 
-    uniform: QUniform   # payload (E, K, Nu)
-    apot: QAPoT         # codes (E, K, Na)
-    inv_perm: jax.Array  # (E, N) int32
+    payload: jax.Array   # (E, K, N) int8 merged bytes, original filter order
+    u_scale: jax.Array   # (E, 1, N) f32, 0 on APoT columns
+    u_zp: jax.Array      # (E, 1, N) f32, 0 on APoT columns
+    a_scale: jax.Array   # (E, 1, N) f32, 0 on uniform columns
+    act_scale: Optional[jax.Array]
+    shape: tuple
+    n_uniform: int
+    n_apot: int
 
     def tree_flatten(self):
-        return (self.uniform, self.apot, self.inv_perm), ()
+        return (self.payload, self.u_scale, self.u_zp, self.a_scale,
+                self.act_scale), (self.shape, self.n_uniform, self.n_apot)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, shape=aux[0], n_uniform=aux[1], n_apot=aux[2])
 
     @classmethod
     def quantize(cls, w: jax.Array, apot_idx: jax.Array, uniform_idx: jax.Array,
                  act_max_abs: Optional[jax.Array] = None) -> "QExpertM2Q":
         """apot_idx/uniform_idx: (E, Na) / (E, Nu) per-expert filter indices."""
-        e = w.shape[0]
-        wu = jnp.take_along_axis(w, jnp.asarray(uniform_idx)[:, None, :], axis=-1)
-        wa = jnp.take_along_axis(w, jnp.asarray(apot_idx)[:, None, :], axis=-1)
-        perm = jnp.concatenate([jnp.asarray(uniform_idx, jnp.int32),
-                                jnp.asarray(apot_idx, jnp.int32)], axis=-1)
-        inv_perm = jnp.argsort(perm, axis=-1).astype(jnp.int32)
-        return cls(
-            uniform=QUniform.quantize(wu, bits=8, act_max_abs=act_max_abs,
-                                      reduce_axes=(1,)),
-            apot=QAPoT.quantize(wa, act_max_abs=act_max_abs, reduce_axes=(1,)),
-            inv_perm=inv_perm)
-
-    @property
-    def shape(self):
-        e, k, nu = self.uniform.shape
-        return (e, k, nu + self.apot.shape[-1])
+        ui = jnp.asarray(uniform_idx, jnp.int32)
+        ai = jnp.asarray(apot_idx, jnp.int32)
+        wu = jnp.take_along_axis(w, ui[:, None, :], axis=-1)
+        wa = jnp.take_along_axis(w, ai[:, None, :], axis=-1)
+        u: UniformQ = uniform_quantize(wu, bits=8, axis=-1, reduce_axes=(1,))
+        t: APoTQ = apot_quantize(wa, axis=-1, reduce_axes=(1,))
+        inv_perm = jnp.argsort(jnp.concatenate([ui, ai], axis=-1),
+                               axis=-1).astype(jnp.int32)
+        payload, u_scale, u_zp, a_scale = _merge_halves(
+            (u.q - _I8_OFFSET).astype(jnp.int8), u.scale,
+            u.zero_point - _I8_OFFSET, packing.apot_encode(t), t.scale,
+            inv_perm)
+        act_scale = None if act_max_abs is None else act_scale_from_stats(
+            act_max_abs)
+        return cls(payload, u_scale, u_zp, a_scale, act_scale,
+                   tuple(w.shape), int(ui.shape[-1]), int(ai.shape[-1]))
 
     def dequant(self, dtype=jnp.float32) -> jax.Array:
-        w = jnp.concatenate(
-            [self.uniform.dequant(dtype), self.apot.dequant(dtype)], axis=-1)
-        if self.inv_perm is None:
-            return w
-        return jnp.take_along_axis(w, self.inv_perm[..., None, :], axis=-1)
+        return _merged_dequant(self.payload, self.u_scale, self.u_zp,
+                               self.a_scale, dtype)
 
     def matmul(self, x: jax.Array) -> jax.Array:
-        """Dense matmul for a scan-sliced stacked leaf (payloads are 2-D
+        """Dense matmul for a scan-sliced stacked leaf (payload is 2-D
         inside the layer scan); identical contract to QM2Q.matmul."""
-        yu = self.uniform.matmul(x)
-        ya = self.apot.matmul(x)
-        y = jnp.concatenate([yu, ya], axis=-1)
-        if self.inv_perm is None:
-            return y
-        return jnp.take(y, self.inv_perm, axis=-1)
+        return _merged_matmul(x, self.payload, self.u_scale, self.u_zp,
+                              self.a_scale, self.act_scale)
 
     def expert_matmul(self, xe: jax.Array) -> jax.Array:
-        """y[E,C,N] = xe[E,C,K] @ w[E,K,N] with the mixed-scheme halves."""
-        u = self.uniform
-        if u.act_scale is not None:
-            xq = quantize_act(xe, u.act_scale)
-            acc = jax.lax.dot_general(
-                xq, u.payload, (((2,), (1,)), ((0,), (0,))),
-                preferred_element_type=jnp.int32)
-            xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
-            yu = (acc.astype(jnp.float32)
-                  - xsum.astype(jnp.float32) * u.zero_point)
-            yu = (yu * (u.act_scale * u.scale)).astype(xe.dtype)
-        else:
-            yu = jnp.einsum("eck,ekn->ecn", xe, u.dequant(xe.dtype))
-        vals = packing.apot_decode_values(self.apot.codes, dtype=xe.dtype)
-        ya = jnp.einsum("eck,ekn->ecn", xe, vals) * self.apot.scale.astype(xe.dtype)
-        y = jnp.concatenate([yu, ya], axis=-1)
-        if self.inv_perm is None:
-            return y
-        return jnp.take_along_axis(y, self.inv_perm[..., None, :], axis=-1)
+        """y[E,C,N] = xe[E,C,K] @ w[E,K,N], permutation-free."""
+        if self.act_scale is None:
+            return jnp.einsum("eck,ekn->ecn", xe, self.dequant(xe.dtype))
+        xq = quantize_act(xe, self.act_scale)
+        acc = jax.lax.dot_general(
+            xq, self.payload, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32)
+        xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+        yu = (acc.astype(jnp.float32)
+              - xsum.astype(jnp.float32) * self.u_zp) * self.u_scale
+        vals = packing.apot_decode_values(_as_code_bytes(self.payload))
+        ya = jnp.einsum("eck,ekn->ecn", xq.astype(jnp.float32),
+                        vals) * self.a_scale
+        return ((yu + ya) * self.act_scale).astype(xe.dtype)
 
 
 QLeaf = (QUniform, QAPoT, QM2Q, QExpertM2Q)
@@ -338,7 +426,7 @@ def weight_bits(qt) -> float:
     if isinstance(qt, QAPoT):
         return 8.0  # one byte per code (7 useful bits)
     if isinstance(qt, (QM2Q, QExpertM2Q)):
-        n_u = qt.uniform.shape[-1]
-        n_a = qt.apot.shape[-1]
-        return (weight_bits(qt.uniform) * n_u + weight_bits(qt.apot) * n_a) / (n_u + n_a)
+        # merged layout: one byte per weight for both engines (8-bit uniform
+        # payloads and 1-byte APoT codes interleave in a single array)
+        return 8.0
     raise TypeError(type(qt))

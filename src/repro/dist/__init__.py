@@ -1,0 +1,2 @@
+# Distribution substrate: sharding rules (dist.sharding) and gradient
+# compression for bandwidth-limited data parallelism (dist.compression).

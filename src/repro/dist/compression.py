@@ -1,0 +1,67 @@
+"""Gradient compression for bandwidth-limited data-parallel training.
+
+Two codecs, both pytree-wise:
+
+* :func:`compress_decompress` — blockwise symmetric int8 quantization (the
+  all-reduce payload shrinks 4x vs f32).  Lossy but unbiased enough for the
+  train loop's ``grad_compression`` flag (see train.step).
+* :func:`compress_with_feedback` — magnitude top-k sparsification with
+  error feedback: what the wire drops accumulates in a residual and is
+  re-injected next step, so the compressed stream is exact in the limit
+  (``comp + residual == grad + residual_in`` identically, per leaf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(grads):
+    """Zero error-feedback state shaped like the gradient tree."""
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def _int8_roundtrip(g: jax.Array, block: int = 256) -> jax.Array:
+    """Blockwise symmetric int8 quantize -> dequantize of one leaf."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    fb = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(fb), axis=-1, keepdims=True),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(fb / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return deq.reshape(g.shape).astype(g.dtype)
+
+
+def compress_decompress(grads, block: int = 256):
+    """Simulate the int8 wire format: quantize + dequantize every leaf."""
+    return jax.tree.map(partial(_int8_roundtrip, block=block), grads)
+
+
+def _topk_leaf(v: jax.Array, k_ratio: float) -> Tuple[jax.Array, jax.Array]:
+    flat = v.reshape(-1)
+    k = max(1, int(flat.shape[0] * k_ratio))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    keep = jnp.abs(flat) >= thresh
+    comp = jnp.where(keep, flat, 0.0).reshape(v.shape)
+    return comp, v - comp
+
+
+def compress_with_feedback(grads, residual, k_ratio: float = 0.1):
+    """Top-k sparsification with error feedback.
+
+    Returns ``(compressed, new_residual)`` where per leaf
+    ``compressed + new_residual == grad + residual`` exactly — the residual
+    carries precisely what the sparsifier dropped.
+    """
+    fed = jax.tree.map(lambda g, r: g + r, grads, residual)
+    pairs = jax.tree.map(partial(_topk_leaf, k_ratio=k_ratio), fed)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res

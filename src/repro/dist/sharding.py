@@ -1,0 +1,141 @@
+"""Sharding rules: canonical tree path + shape -> PartitionSpec.
+
+Policy (GSPMD data+model mesh):
+
+* column-parallel on the ``model`` axis for qkv projections, FFN up/gate,
+  lm_head and embeddings (output-channel = last dim);
+* row-parallel for the projections that contract a model-sharded axis
+  (attn/wo, FFN down) so the pair forms the classic Megatron sandwich;
+* expert-parallel on the (stacked) expert axis for MoE expert weights;
+* optional FSDP: big tensors additionally shard their first free divisible
+  dim over ``data``.
+
+QTensor leaves flatten through registered pytree nodes, so param paths grow
+numeric child suffixes ("layers/attn/wq/0" = payload, "/1" = scale, ...);
+suffixes are stripped before rule matching and each child's own shape
+decides divisibility — payloads and per-column scales co-shard on the
+filter axis, while int32 index leaves (permutations, lookup tables) always
+replicate.  Any indivisible dim falls back to replication on that dim
+rather than erroring (reduced demo configs have odd shapes).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# role patterns matched against the stripped canonical path
+_COL_RE = re.compile(
+    r"(attn/w[qkv]|mlp/w[13]|shared/w[13]|lm_head|head|embed)$")
+_ROW_RE = re.compile(r"(attn/wo|mlp/w2|shared/w2)$")
+_EXPERT_RE = re.compile(r"experts/")
+
+# FSDP only pays off above this many elements (small tensors replicate)
+_FSDP_MIN_SIZE = 1 << 20
+
+
+def _strip_child_suffix(path: str) -> str:
+    """Drop trailing QTensor child indices: 'layers/attn/wq/0/0' -> '.../wq'."""
+    parts = path.split("/")
+    while parts and parts[-1].isdigit():
+        parts.pop()
+    return "/".join(parts)
+
+
+def _mesh_axes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def spec_for_param(path: str, shape, dtype, mesh,
+                   fsdp: bool = False) -> P:
+    """PartitionSpec for one (possibly QTensor-child) parameter leaf."""
+    dt = np.dtype(dtype)
+    if dt.kind in "iu" and dt.itemsize >= 4:
+        return P()  # permutation / index leaves: always replicated
+    axes = _mesh_axes(mesh)
+    shape = tuple(shape)
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    spec = [None] * ndim
+    clean = _strip_child_suffix(path)
+
+    def try_set(dim: int, axis: Optional[str]) -> None:
+        if (axis in axes and 0 <= dim < ndim and spec[dim] is None
+                and shape[dim] > 1 and shape[dim] % axes[axis] == 0):
+            spec[dim] = axis
+
+    if _EXPERT_RE.search(clean):
+        try_set(ndim - 3, "model")  # (L, E, K, N) -> E; (E, K, N) -> E
+    elif _ROW_RE.search(clean):
+        try_set(ndim - 2, "model")
+    elif _COL_RE.search(clean):
+        try_set(ndim - 1, "model")
+    if fsdp and int(np.prod(shape)) >= _FSDP_MIN_SIZE:
+        for d in range(ndim):
+            if spec[d] is None:
+                before = spec[d]
+                try_set(d, "data")
+                if spec[d] is not before:
+                    break
+    return P(*spec)
+
+
+def param_specs(params, mesh, fsdp: bool = False):
+    """Spec tree mirroring ``params`` (QTensor leaves flatten through)."""
+    from ..core.calibrate import path_str
+
+    def visit(path, leaf):
+        if not hasattr(leaf, "shape"):
+            return P()
+        return spec_for_param(path_str(path), leaf.shape,
+                              getattr(leaf, "dtype", np.float32), mesh,
+                              fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def batch_specs(batch, mesh):
+    """Data-parallel batch: leading dim over 'data' when divisible."""
+    axes = _mesh_axes(mesh)
+
+    def visit(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return P()
+        s = [None] * len(leaf.shape)
+        if "data" in axes and leaf.shape[0] % axes["data"] == 0:
+            s[0] = "data"
+        return P(*s)
+
+    return jax.tree.map(visit, batch)
+
+
+def cache_specs(cache, mesh, shard_model: bool = False):
+    """KV/state cache: batch axis over 'data' (axis 0 for per-slot vectors
+    like lengths, axis 1 under the stacked layer dim), optionally heads
+    over 'model' for attention caches."""
+    axes = _mesh_axes(mesh)
+
+    def visit(leaf):
+        nd = len(leaf.shape)
+        s = [None] * nd
+        if nd == 0:
+            return P()
+        bdim = 0 if nd == 1 else 1
+        if "data" in axes and leaf.shape[bdim] % axes["data"] == 0:
+            s[bdim] = "data"
+        if (shard_model and "model" in axes and nd >= 5
+                and leaf.shape[3] % axes["model"] == 0):
+            s[3] = "model"  # (L, B, T, H, Dh) heads axis
+        return P(*s)
+
+    return jax.tree.map(visit, cache)
+
+
+def shardings_from_specs(specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree (same structure)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

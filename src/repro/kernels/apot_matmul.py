@@ -19,17 +19,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-def decode_apot_tile(codes: jax.Array) -> jax.Array:
-    """uint8 (bk,bn) -> f32 values s*(2^-e1 + 2^-e2), zero-aware.
+from .compat import CompilerParams
 
-    Bit masks are python ints (pallas kernels may not capture traced
-    constants); uint8 dtype is preserved by the & / >> ops.
+
+def decode_apot_tile(codes: jax.Array) -> jax.Array:
+    """code bytes (bk,bn) -> f32 values s*(2^-e1 + 2^-e2), zero-aware.
+
+    Accepts uint8 codes OR an int8 view of the same bytes (the merged M2Q
+    payload stores both engines' bytes in one int8 array): widening to int32
+    and masking with 0xFF recovers the unsigned bit pattern on two's-
+    complement hardware.  Bit masks are python ints (pallas kernels may not
+    capture traced constants).
     """
-    e1 = ((codes >> 3) & 0x07).astype(jnp.float32)
-    e2 = (codes & 0x07).astype(jnp.float32)
+    c = codes.astype(jnp.int32) & 0xFF
+    e1 = ((c >> 3) & 0x07).astype(jnp.float32)
+    e2 = (c & 0x07).astype(jnp.float32)
     mag = jnp.exp2(-e1) + jnp.exp2(-e2)
-    sign = jnp.where((codes & 0x40) != 0, -1.0, 1.0)
-    return jnp.where((codes & 0x80) != 0, 0.0, sign * mag)
+    sign = jnp.where((c & 0x40) != 0, -1.0, 1.0)
+    return jnp.where((c & 0x80) != 0, 0.0, sign * mag)
 
 
 def _kernel(x_ref, c_ref, scale_ref, o_ref, acc_ref, *, nk: int):
@@ -65,7 +72,7 @@ def apot_matmul(x: jax.Array, codes: jax.Array, scale: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, codes, scale.reshape(1, -1))

@@ -1,0 +1,197 @@
+"""Shape-keyed block-size autotuner for the Pallas kernels.
+
+Replaces the fixed power-of-two ``_block()`` heuristic in ops.py: each
+(kernel, M, N, K) shape gets its block triple from a persistent JSON cache,
+populated by timing candidate triples on the real accelerator backend.
+
+Interpret-safe fallback: on CPU / interpret mode (the container has no TPU)
+timing the Python interpreter is meaningless, so the heuristic triple is
+returned immediately and nothing is benchmarked or persisted.  The cache
+file location comes from ``REPRO_AUTOTUNE_CACHE`` (default
+``~/.cache/repro/autotune.json``); writes are atomic (tmp + rename) so
+concurrent processes never observe a torn file.
+"""
+from __future__ import annotations
+
+import fcntl
+import json
+import os
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+Blocks = Tuple[int, int, int]
+
+_LOCK = threading.Lock()
+_CACHES: Dict[str, "AutotuneCache"] = {}
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def heuristic_block(m: int, cap: int = 128) -> int:
+    """Largest power-of-two block <= cap that keeps tiny shapes legal."""
+    b = 8
+    while b * 2 <= min(m, cap):
+        b *= 2
+    return b
+
+
+def heuristic_blocks(M: int, N: int, K: int, cap: int = 128) -> Blocks:
+    return (heuristic_block(M, cap), heuristic_block(N, cap),
+            heuristic_block(K, cap))
+
+
+def candidate_blocks(M: int, N: int, K: int) -> List[Blocks]:
+    """Distinct legal triples around the heuristic: the heuristic itself,
+    plus smaller-M (better pipelining at small batch) and 256-wide variants
+    (fewer grid steps on large shapes)."""
+    base = heuristic_blocks(M, N, K)
+    cands = {base}
+    for bm in {8, base[0] // 2 or 8, base[0], min(256, max(8, M))}:
+        for bn in {base[1], min(256, base[1] * 2)}:
+            for bk in {base[2], min(256, base[2] * 2)}:
+                c = (heuristic_block(M, max(bm, 8)),
+                     heuristic_block(N, max(bn, 8)),
+                     heuristic_block(K, max(bk, 8)))
+                cands.add(c)
+    return sorted(cands)
+
+
+class AutotuneCache:
+    """JSON-backed {key: [bm, bn, bk]} map with atomic persistence."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._data: Dict[str, list] = {}
+        self._loaded = False
+
+    def load(self) -> "AutotuneCache":
+        self._loaded = True
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            self._data = {k: list(v) for k, v in raw.items()
+                          if isinstance(v, (list, tuple)) and len(v) == 3}
+        except (OSError, ValueError):
+            self._data = {}
+        return self
+
+    def get(self, key: str) -> Optional[Blocks]:
+        if not self._loaded:
+            self.load()
+        v = self._data.get(key)
+        return tuple(int(x) for x in v) if v else None
+
+    def put(self, key: str, blocks: Blocks, save: bool = True) -> None:
+        if not self._loaded:
+            self.load()
+        self._data[key] = [int(b) for b in blocks]
+        if save:
+            self.save()
+
+    def save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # merge-on-write under an exclusive file lock: concurrent tuner
+        # processes (and threads) each hold a partial in-memory view, and
+        # the read-merge-replace must be atomic as a unit or a slower
+        # writer drops the faster one's entries
+        with _LOCK, open(f"{self.path}.lock", "w") as lf:
+            try:
+                fcntl.flock(lf, fcntl.LOCK_EX)
+            except OSError:
+                pass  # exotic filesystems: fall back to atomic replace only
+            try:
+                with open(self.path) as f:
+                    disk = json.load(f)
+                merged = {k: list(v) for k, v in disk.items()
+                          if isinstance(v, (list, tuple)) and len(v) == 3}
+            except (OSError, ValueError):
+                merged = {}
+            merged.update(self._data)
+            self._data = merged
+            tmp = f"{self.path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(self._data, f, indent=0, sort_keys=True)
+            os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        if not self._loaded:
+            self.load()
+        return len(self._data)
+
+
+def _shared_cache(path: Optional[str]) -> AutotuneCache:
+    p = path or default_cache_path()
+    with _LOCK:
+        if p not in _CACHES:
+            _CACHES[p] = AutotuneCache(p)
+        return _CACHES[p]
+
+
+def measure(fn: Callable, *args, reps: int = 3) -> float:
+    """Warmup + best-of-N wall-clock of ``fn(*args)``; the one timing
+    harness shared by the tuner and benchmarks/kernel_bench."""
+    fn(*args)  # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _time_candidate(bench_fn: Callable[[Blocks], object], blocks: Blocks,
+                    reps: int = 3) -> float:
+    try:
+        return measure(bench_fn, blocks, reps=reps)
+    except Exception:
+        return float("inf")
+
+
+def blocks_for(kernel: str, M: int, N: int, K: int, *,
+               interpret: bool = False,
+               bench_fn: Optional[Callable[[Blocks], object]] = None,
+               cache_path: Optional[str] = None,
+               candidates: Optional[Sequence[Blocks]] = None,
+               force_tune: bool = False) -> Blocks:
+    """Resolve the block triple for one kernel launch.
+
+    Tuning only happens on a real accelerator backend (or when
+    ``force_tune`` is set, for tests) AND when a ``bench_fn`` is provided;
+    every other case falls back to the heuristic so the interpret path
+    stays cheap and deterministic.
+    """
+    fallback = heuristic_blocks(M, N, K)
+    tunable = force_tune or (not interpret
+                             and jax.default_backend() != "cpu")
+    if not tunable or bench_fn is None:
+        return fallback
+    if not jax.core.trace_state_clean():
+        # inside a jit/vmap trace the bench closure holds tracers:
+        # "timing" it measures Python tracing, not the kernel.  Use the
+        # cache if warm, else the heuristic — and never persist from here.
+        return _shared_cache(cache_path).get(
+            f"{kernel}:{M}x{N}x{K}:{jax.default_backend()}") or fallback
+    cache = _shared_cache(cache_path)
+    key = f"{kernel}:{M}x{N}x{K}:{jax.default_backend()}"
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    cands = list(candidates) if candidates else candidate_blocks(M, N, K)
+    timed = [(_time_candidate(bench_fn, c), c) for c in cands]
+    timed.sort(key=lambda t: (t[0], t[1]))
+    if not timed or timed[0][0] == float("inf"):
+        return fallback  # nothing ran: do not poison the persistent cache
+    best = timed[0][1]
+    cache.put(key, best)
+    return best

@@ -1,0 +1,12 @@
+"""Small cross-version Pallas/TPU compatibility surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+container pins a version on the old name.  Kernels import from here so the
+rename is absorbed in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, H: int, W: int):
     lo = (wp_ref[...] & 0x0F).astype(jnp.float32)
@@ -57,7 +59,7 @@ def dwconv_w4(x: jax.Array, packed: jax.Array, scale: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, H, W, bc), lambda b, c: (b, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((B, H, W, C), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xp, packed, scale.reshape(1, -1), zero_point.reshape(1, -1))

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _unpack_nibbles(packed: jax.Array) -> jax.Array:
     """(bk, bn/2) uint8 -> (bk, bn) f32 codes in 0..15 (even idx = low)."""
@@ -63,7 +65,7 @@ def int4_matmul(x: jax.Array, packed: jax.Array, scale: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, packed, scale.reshape(1, -1), zero_point.reshape(1, -1))

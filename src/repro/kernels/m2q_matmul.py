@@ -4,14 +4,32 @@ The paper pipelines its two engines (MPMA for the uniform filter half, SAT
 for the APoT half) over the same activation stream (Sec. IV "Execution
 Flow").  The TPU equivalent: ONE kernel invocation whose grid walks the
 activation tile once; per (m, k) step it feeds the int8 MXU dot for the
-uniform half AND the decode+dot for the APoT half from the *same* x tile in
-VMEM.  The 1:1 APoT:Uniform ratio (paper Sec. V-A) is what makes the two
-half-width outputs the same shape — the ratio literally aligns with the
-N-tiling here, mirroring the paper's ratio<->parallelism alignment.
+uniform engine AND the decode+dot for the SAT engine from the *same* x tile
+in VMEM.
 
-Inputs arrive pre-quantized (xq int8 + act_scale), since activations are
-8-bit uniform everywhere in M2Q.  The inverse filter permutation is applied
-by the caller (cheap gather epilogue in XLA).
+Permutation-free layout (see core.qtensor): the weight arrives as a single
+merged byte array in ORIGINAL filter order — each column holds either an
+offset-folded int8 uniform payload or an APoT code byte, with per-column
+scales zero-masked on the columns the other engine owns.  The epilogue sums
+the two engine accumulators and writes ONE output tile directly in filter
+order: no concatenate, no inverse-permutation gather, ever.
+
+Fused activation quantization: x arrives in float; the max-abs scale is a
+scalar operand and the int8 rounding happens in the kernel prologue on the
+VMEM tile, so the quantized activation never round-trips through HBM as a
+separate XLA pass.
+
+Tradeoff (deliberate): with interleaved per-filter scheme assignment, both
+engines sweep all N columns and the zero-masked scales cancel the half each
+does not own — 2x the MAC count of two half-width dots.  What it buys: the
+weight stays 1 byte/weight, HBM traffic is unchanged IN THIS KERNEL (the
+decode lives in VMEM; the XLA fallback in core.qtensor does materialize
+the decoded operand — see _merged_matmul's note), and the O(M*N) concat +
+inverse-permutation gather epilogue (plus its round-trips) is gone.  The
+decode/serving shapes this kernel exists for are bandwidth-bound (small
+M), where bytes moved — not MACs — set the wall-clock; layers
+whose consumer can absorb the reorder offline avoid even that via the
+fold_perm path (apply.py FFN groups), which keeps the halves contiguous.
 """
 from __future__ import annotations
 
@@ -22,52 +40,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.quant import quantize_act
 from .apot_matmul import decode_apot_tile
+from .compat import CompilerParams
 
 
-def _kernel(xq_ref, up_ref, uscale_ref, uzp_ref, ac_ref, ascale_s_ref,
-            act_scale_ref, yu_ref, ya_ref, uacc_ref, xsum_ref, aacc_ref,
-            *, nk: int):
+def _kernel(x_ref, p_ref, uscale_ref, uzp_ref, ascale_ref, act_scale_ref,
+            y_ref, uacc_ref, xsum_ref, aacc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         uacc_ref[...] = jnp.zeros_like(uacc_ref)
         xsum_ref[...] = jnp.zeros_like(xsum_ref)
         aacc_ref[...] = jnp.zeros_like(aacc_ref)
 
-    xq = xq_ref[...]
-    # uniform half: int8 x int8 -> int32 (MPMA merged mode; 2x MXU rate)
+    sa = act_scale_ref[0, 0]
+    # fused activation quantization: float tile -> int8 in VMEM (shared
+    # rounding definition with the XLA/ref paths)
+    xq = quantize_act(x_ref[...].astype(jnp.float32), sa)
+    p = p_ref[...]
+    # uniform engine: int8 x int8 -> int32 (MPMA merged mode; 2x MXU rate)
     uacc_ref[...] += jax.lax.dot_general(
-        xq, up_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+        xq, p, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
     xsum_ref[...] += jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
-    # APoT half: decode codes in VMEM, f32 dot (SAT engine) — same x tile
-    w = decode_apot_tile(ac_ref[...])
+    # SAT engine: decode the SAME byte tile as APoT codes, f32 dot.  On
+    # uniform columns the decode is garbage — cancelled by a_scale == 0.
+    w = decode_apot_tile(p)
     aacc_ref[...] += jnp.dot(xq.astype(jnp.float32), w,
                              preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _epilogue():
-        sa = act_scale_ref[0, 0]
         u = uacc_ref[...].astype(jnp.float32)
         corr = xsum_ref[...].astype(jnp.float32) * uzp_ref[...]
-        yu_ref[...] = (u - corr) * (sa * uscale_ref[...])
-        # APoT half consumed xq directly -> fold act_scale into epilogue
-        ya_ref[...] = aacc_ref[...] * (sa * ascale_s_ref[...])
+        yu = (u - corr) * uscale_ref[...]
+        ya = aacc_ref[...] * ascale_ref[...]
+        y_ref[...] = (yu + ya) * sa
 
 
-def m2q_matmul(xq: jax.Array, act_scale: jax.Array,
-               u_payload: jax.Array, u_scale: jax.Array, u_zp: jax.Array,
-               a_codes: jax.Array, a_scale: jax.Array,
+def m2q_matmul(x: jax.Array, act_scale: jax.Array, payload: jax.Array,
+               u_scale: jax.Array, u_zp: jax.Array, a_scale: jax.Array,
                *, bm: int = 128, bn: int = 128, bk: int = 128,
-               interpret: bool = False):
-    """xq (M,K) int8; uniform payload (K,Nu) int8; APoT codes (K,Na) uint8;
-    Nu == Na (1:1 ratio, ops.py pads). Returns (yu (M,Nu), ya (M,Na)) f32."""
-    M, K = xq.shape
-    Nu = u_payload.shape[1]
-    Na = a_codes.shape[1]
-    assert Nu == Na, "1:1 ratio keeps both halves tile-aligned"
+               interpret: bool = False) -> jax.Array:
+    """x (M,K) float; merged payload (K,N) int8; scales (N,) zero-masked.
+
+    Returns y (M,N) f32 in original filter order (ops.py pads/unpads).
+    """
+    M, K = x.shape
+    N = payload.shape[1]
     nk = K // bk
-    grid = (M // bm, Nu // bn, nk)
+    grid = (M // bm, N // bn, nk)
     return pl.pallas_call(
         functools.partial(_kernel, nk=nk),
         grid=grid,
@@ -76,25 +97,18 @@ def m2q_matmul(xq: jax.Array, act_scale: jax.Array,
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((M, Nu), jnp.float32),
-            jax.ShapeDtypeStruct((M, Na), jnp.float32),
-        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.int32),
             pltpu.VMEM((bm, 1), jnp.int32),
             pltpu.VMEM((bm, bn), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(xq, u_payload, u_scale.reshape(1, -1), u_zp.reshape(1, -1),
-      a_codes, a_scale.reshape(1, -1), act_scale.reshape(1, 1))
+    )(x, payload, u_scale.reshape(1, -1), u_zp.reshape(1, -1),
+      a_scale.reshape(1, -1), act_scale.reshape(1, 1))

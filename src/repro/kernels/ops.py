@@ -4,18 +4,29 @@ Handles: padding to MXU-aligned block multiples, interpret-mode fallback on
 CPU (the container has no TPU; interpret=True executes the kernel body in
 Python — correctness validation per the task spec), leading-batch-dim
 flattening, and QTensor-level entry points mirroring core.qtensor methods.
+
+Block sizes come from the shape-keyed autotuner (kernels.autotune): on a
+real accelerator each (kernel, shape) pair is timed once and persisted to a
+JSON cache; on CPU/interpret the power-of-two heuristic is used directly.
+
+The M2Q path is permutation-free end to end: the merged byte payload is in
+original filter order, the fused kernel emits ONE output array, and the old
+concatenate + ``jnp.take`` inverse-permutation epilogue is gone.  Activation
+quantization is fused into the m2q/int8 kernel prologues, so these entry
+points take FLOAT activations plus a scalar scale.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.qtensor import QAPoT, QM2Q, QUniform
-from ..core.quant import quantize_act
-from . import ref
+from ..core.qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform
+from ..core.quant import act_scale_from_stats
+from . import autotune, ref
 from .apot_matmul import apot_matmul
 from .dwconv_w4 import dwconv_w4
 from .int4_matmul import int4_matmul
@@ -25,6 +36,36 @@ from .m2q_matmul import m2q_matmul
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def dispatch_enabled() -> bool:
+    """Should nn.dense route QTensor matmuls through the Pallas kernels?
+
+    Default: only on a real TPU backend (the interpret path is a Python
+    correctness harness, ~1000x slower than XLA on CPU — wiring it into
+    serving would tank the engine).  ``REPRO_PALLAS_DISPATCH=1/0``
+    overrides either way (tests force it on to exercise the wiring).
+    """
+    env = os.environ.get("REPRO_PALLAS_DISPATCH")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false")
+    return jax.default_backend() == "tpu"
+
+
+def kernel_supported(qt) -> bool:
+    """True when the fused kernel computes the SAME function as the XLA
+    QTensor path for this leaf (2-D weight, identical activation handling
+    — calibrated int paths quantize activations, weights-only paths do
+    not), so dispatch cannot change serving numerics."""
+    if isinstance(qt, (QM2Q, QExpertM2Q)):
+        return qt.payload.ndim == 2 and qt.act_scale is not None
+    if isinstance(qt, QUniform):
+        if qt.payload.ndim != 2 or qt.axis != 1:
+            return False
+        return qt.bits == 4 or (qt.bits == 8 and qt.act_scale is not None)
+    if isinstance(qt, QAPoT):
+        return qt.codes.ndim == 2 and qt.act_scale is None
+    return False
 
 
 def _pad2(x, m0, m1, value=0):
@@ -42,35 +83,55 @@ def _pad1(x, m, value=0):
     return x
 
 
-def _block(m, cap=128):
-    """Largest power-of-two block <= cap that keeps tiny shapes legal."""
-    b = 8
-    while b * 2 <= min(m, cap):
-        b *= 2
-    return b
+def _act_scale_or_default(x, act_scale):
+    """Calibrated scalar scale, or a dynamic max-abs fallback.
+
+    The fallback is a scalar reduce (fused by XLA into the surrounding
+    graph) through the same act_scale_from_stats definition the calibrated
+    path uses; the int8 payload itself never materializes in HBM — rounding
+    happens inside the kernel prologue.
+    """
+    if act_scale is not None:
+        return jnp.asarray(act_scale, jnp.float32).reshape(())
+    return act_scale_from_stats(jnp.max(jnp.abs(x.astype(jnp.float32))))
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def int8_matmul_op(xq, wq, act_scale, scale, zero_point,
-                   interpret: Optional[bool] = None):
-    interpret = _interpret_default() if interpret is None else interpret
-    M, K = xq.shape
+# ---------------------------------------------------------------------------
+# jitted cores (block sizes static) + autotuned public wrappers
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _int8_core(x, wq, act_scale, scale, zero_point, bm, bn, bk, interpret):
+    M, K = x.shape
     N = wq.shape[1]
-    bm, bn, bk = _block(M), _block(N), _block(K)
-    xp = _pad2(xq, bm, bk)
+    xp = _pad2(x.astype(jnp.float32), bm, bk)
     wp = _pad2(wq, bk, bn)
-    y = int8_matmul(xp, wp, act_scale, _pad1(scale, bn), _pad1(zero_point, bn),
-                    bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = int8_matmul(xp, wp, act_scale, _pad1(scale, bn),
+                    _pad1(zero_point, bn), bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
     return y[:M, :N]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def int4_matmul_op(x, packed, scale, zero_point,
-                   interpret: Optional[bool] = None):
+def int8_matmul_op(x, wq, act_scale, scale, zero_point,
+                   interpret: Optional[bool] = None,
+                   blocks: Optional[Tuple[int, int, int]] = None):
+    """x (M,K) FLOAT activations; quantization is fused into the kernel."""
     interpret = _interpret_default() if interpret is None else interpret
     M, K = x.shape
+    N = wq.shape[1]
+    if blocks is None:
+        blocks = autotune.blocks_for(
+            "int8_matmul", M, N, K, interpret=interpret,
+            bench_fn=lambda b: _int8_core(x, wq, act_scale, scale, zero_point,
+                                          *b, interpret))
+    return _int8_core(x, wq, act_scale, scale, zero_point, *blocks, interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _int4_core(x, packed, scale, zero_point, bm, bn, bk, interpret):
+    M, K = x.shape
     N = packed.shape[1] * 2
-    bm, bn, bk = _block(M), _block(N), _block(K)
     xp = _pad2(x, bm, bk)
     pp = _pad2(packed, bk, bn // 2)
     y = int4_matmul(xp, pp, _pad1(scale, bn), _pad1(zero_point, bn),
@@ -78,12 +139,24 @@ def int4_matmul_op(x, packed, scale, zero_point,
     return y[:M, :N]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def apot_matmul_op(x, codes, scale, interpret: Optional[bool] = None):
+def int4_matmul_op(x, packed, scale, zero_point,
+                   interpret: Optional[bool] = None,
+                   blocks: Optional[Tuple[int, int, int]] = None):
     interpret = _interpret_default() if interpret is None else interpret
     M, K = x.shape
+    N = packed.shape[1] * 2
+    if blocks is None:
+        blocks = autotune.blocks_for(
+            "int4_matmul", M, N, K, interpret=interpret,
+            bench_fn=lambda b: _int4_core(x, packed, scale, zero_point, *b,
+                                          interpret))
+    return _int4_core(x, packed, scale, zero_point, *blocks, interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _apot_core(x, codes, scale, bm, bn, bk, interpret):
+    M, K = x.shape
     N = codes.shape[1]
-    bm, bn, bk = _block(M), _block(N), _block(K)
     xp = _pad2(x, bm, bk)
     # pad codes with the zero-flag byte so padded weights decode to 0
     cp = _pad2(codes, bk, bn, value=0x80)
@@ -92,34 +165,57 @@ def apot_matmul_op(x, codes, scale, interpret: Optional[bool] = None):
     return y[:M, :N]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def m2q_matmul_op(xq, act_scale, u_payload, u_scale, u_zp, a_codes, a_scale,
-                  interpret: Optional[bool] = None):
+def apot_matmul_op(x, codes, scale, interpret: Optional[bool] = None,
+                   blocks: Optional[Tuple[int, int, int]] = None):
     interpret = _interpret_default() if interpret is None else interpret
-    M, K = xq.shape
-    Nu, Na = u_payload.shape[1], a_codes.shape[1]
-    Nh = max(Nu, Na)
-    bm, bn, bk = _block(M), _block(Nh), _block(K)
-    Nhp = Nh + ((-Nh) % bn)
-    xp = _pad2(xq, bm, bk)
-    up = _pad2(u_payload, bk, 1)
-    up = jnp.pad(up, ((0, 0), (0, Nhp - Nu)))
-    ap = jnp.pad(a_codes, ((0, (-K) % bk), (0, Nhp - Na)),
-                 constant_values=0x80)
-    us = jnp.pad(u_scale.reshape(-1), (0, Nhp - Nu))
-    uz = jnp.pad(u_zp.reshape(-1), (0, Nhp - Nu))
-    asc = jnp.pad(a_scale.reshape(-1), (0, Nhp - Na))
-    yu, ya = m2q_matmul(xp, act_scale, up, us, uz, ap, asc,
-                        bm=bm, bn=bn, bk=bk, interpret=interpret)
-    return yu[:M, :Nu], ya[:M, :Na]
+    M, K = x.shape
+    N = codes.shape[1]
+    if blocks is None:
+        blocks = autotune.blocks_for(
+            "apot_matmul", M, N, K, interpret=interpret,
+            bench_fn=lambda b: _apot_core(x, codes, scale, *b, interpret))
+    return _apot_core(x, codes, scale, *blocks, interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def dwconv_w4_op(x, packed, scale, zero_point,
-                 interpret: Optional[bool] = None):
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _m2q_core(x, act_scale, payload, u_scale, u_zp, a_scale,
+              bm, bn, bk, interpret):
+    M, K = x.shape
+    N = payload.shape[1]
+    xp = _pad2(x.astype(jnp.float32), bm, bk)
+    # K-pad rows of the payload multiply quantized-zero activations; N-pad
+    # columns carry zero scales — both vanish, any pad byte is safe.
+    pp = _pad2(payload, bk, bn)
+    y = m2q_matmul(xp, act_scale, pp, _pad1(u_scale, bn), _pad1(u_zp, bn),
+                   _pad1(a_scale, bn), bm=bm, bn=bn, bk=bk,
+                   interpret=interpret)
+    return y[:M, :N]
+
+
+def m2q_matmul_op(x, act_scale, payload, u_scale, u_zp, a_scale,
+                  interpret: Optional[bool] = None,
+                  blocks: Optional[Tuple[int, int, int]] = None):
+    """Fused permutation-free M2Q matmul.
+
+    x (M,K) FLOAT; payload (K,N) merged int8 bytes in original filter
+    order; u_scale/u_zp/a_scale (N,) zero-masked. Returns y (M,N) f32 —
+    both engine halves summed in the kernel epilogue, no concat/gather.
+    """
     interpret = _interpret_default() if interpret is None else interpret
+    M, K = x.shape
+    N = payload.shape[1]
+    if blocks is None:
+        blocks = autotune.blocks_for(
+            "m2q_matmul", M, N, K, interpret=interpret,
+            bench_fn=lambda b: _m2q_core(x, act_scale, payload, u_scale,
+                                         u_zp, a_scale, *b, interpret))
+    return _m2q_core(x, act_scale, payload, u_scale, u_zp, a_scale, *blocks,
+                     interpret)
+
+
+@partial(jax.jit, static_argnames=("bc", "interpret"))
+def _dwconv_core(x, packed, scale, zero_point, bc, interpret):
     C = x.shape[-1]
-    bc = _block(C)
     pc = (-C) % bc
     if pc:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pc)))
@@ -130,6 +226,37 @@ def dwconv_w4_op(x, packed, scale, zero_point,
     return y[..., :C]
 
 
+def _dwconv_bc(bn: int, C: int) -> int:
+    """Channel block: capped at C and even (nibble pairs)."""
+    bc = min(bn, C)
+    return max(bc - (bc % 2), 2)
+
+
+def dwconv_w4_op(x, packed, scale, zero_point,
+                 interpret: Optional[bool] = None,
+                 blocks: Optional[Tuple[int, int, int]] = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    B, H, W, C = x.shape
+    if blocks is None:
+        # candidates are benched with the SAME adjusted bc that executes;
+        # only bn matters here, so dedupe triples by their effective bc
+        seen, cands = set(), []
+        for c in autotune.candidate_blocks(B * H * W, C, 9):
+            bc = _dwconv_bc(c[1], C)
+            if bc not in seen:
+                seen.add(bc)
+                cands.append(c)
+        _, bn, _ = autotune.blocks_for(
+            "dwconv_w4", B * H * W, C, 9, interpret=interpret,
+            candidates=cands,
+            bench_fn=lambda b: _dwconv_core(x, packed, scale, zero_point,
+                                            _dwconv_bc(b[1], C), interpret))
+    else:
+        bn = blocks[1]
+    return _dwconv_core(x, packed, scale, zero_point, _dwconv_bc(bn, C),
+                        interpret)
+
+
 # ---------------------------------------------------------------------------
 # QTensor-level entry points (kernel-backed twins of core.qtensor methods)
 # ---------------------------------------------------------------------------
@@ -138,30 +265,23 @@ def dwconv_w4_op(x, packed, scale, zero_point,
 def qtensor_matmul(x: jax.Array, qt, interpret: Optional[bool] = None):
     """Kernel-backed y = x @ W for 2-D QTensor leaves; x (..., K)."""
     lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if isinstance(qt, QM2Q):
-        u, a = qt.uniform, qt.apot
-        sa = u.act_scale if u.act_scale is not None else jnp.float32(
-            jnp.max(jnp.abs(x2)) / 127.0 + 1e-9)
-        xq = quantize_act(x2, sa)
-        yu, ya = m2q_matmul_op(xq, sa, u.payload, u.scale.reshape(-1),
-                               u.zero_point.reshape(-1), a.codes,
-                               a.scale.reshape(-1), interpret=interpret)
-        y = jnp.concatenate([yu, ya], axis=-1)
-        y = jnp.take(y, qt.inv_perm, axis=-1)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if isinstance(qt, (QM2Q, QExpertM2Q)):
+        sa = _act_scale_or_default(x2, qt.act_scale)
+        y = m2q_matmul_op(x2, sa, qt.payload, qt.u_scale.reshape(-1),
+                          qt.u_zp.reshape(-1), qt.a_scale.reshape(-1),
+                          interpret=interpret)
     elif isinstance(qt, QUniform) and qt.bits == 8:
-        sa = qt.act_scale if qt.act_scale is not None else jnp.float32(
-            jnp.max(jnp.abs(x2)) / 127.0 + 1e-9)
-        xq = quantize_act(x2, sa)
-        y = int8_matmul_op(xq, qt.payload, sa, qt.scale.reshape(-1),
+        sa = _act_scale_or_default(x2, qt.act_scale)
+        y = int8_matmul_op(x2, qt.payload, sa, qt.scale.reshape(-1),
                            qt.zero_point.reshape(-1), interpret=interpret)
     elif isinstance(qt, QUniform) and qt.bits == 4:
-        y = int4_matmul_op(x2.astype(jnp.float32), qt.payload,
+        y = int4_matmul_op(x2, qt.payload,
                            qt.scale.reshape(-1), qt.zero_point.reshape(-1),
                            interpret=interpret)
     elif isinstance(qt, QAPoT):
-        y = apot_matmul_op(x2.astype(jnp.float32), qt.codes,
-                           qt.scale.reshape(-1), interpret=interpret)
+        y = apot_matmul_op(x2, qt.codes, qt.scale.reshape(-1),
+                           interpret=interpret)
     else:
         raise TypeError(type(qt))
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)

@@ -45,18 +45,27 @@ def apot_matmul_ref(x: jax.Array, codes: jax.Array,
     return (x @ vals) * scale[None, :]
 
 
-def m2q_matmul_ref(xq: jax.Array, act_scale: jax.Array,
-                   u_payload: jax.Array, u_scale: jax.Array, u_zp: jax.Array,
-                   a_codes: jax.Array, a_scale: jax.Array):
-    """Fused mixed-scheme layer (1:1 split). Returns (yu (M,Nu), ya (M,Na)).
+def m2q_merged_ref(x: jax.Array, act_scale: jax.Array, payload: jax.Array,
+                   u_scale: jax.Array, u_zp: jax.Array,
+                   a_scale: jax.Array) -> jax.Array:
+    """Permutation-free merged-layout oracle (mirrors kernels.m2q_matmul).
 
-    Both halves consume the SAME quantized activation tile (xq int8):
-      yu = int8 path;  ya = (xq * act_scale) @ decode(codes) * a_scale.
+    x (M,K) FLOAT — activation quantization is part of the contract (the
+    kernel fuses it into its prologue); payload (K,N) int8 merged bytes;
+    scales (N,) zero-masked per column.  Returns y (M,N) f32 in original
+    filter order.
     """
-    yu = int8_matmul_ref(xq, u_payload, act_scale, u_scale, u_zp)
-    xf = xq.astype(jnp.float32) * act_scale
-    ya = apot_matmul_ref(xf, a_codes, a_scale)
-    return yu, ya
+    from ..core.quant import quantize_act
+    xq = quantize_act(x, act_scale)
+    acc = jax.lax.dot_general(xq, payload, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    xsum = jnp.sum(xq.astype(jnp.int32), axis=-1, keepdims=True)
+    yu = (acc.astype(jnp.float32)
+          - xsum.astype(jnp.float32) * u_zp[None, :]) * u_scale[None, :]
+    codes = jax.lax.bitcast_convert_type(payload, jnp.uint8)
+    vals = packing.apot_decode_values(codes, dtype=jnp.float32)
+    ya = (xq.astype(jnp.float32) @ vals) * a_scale[None, :]
+    return (yu + ya) * act_scale
 
 
 def dwconv_w4_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,

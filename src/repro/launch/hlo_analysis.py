@@ -289,6 +289,45 @@ def _fusion_read_write(ins: Instr, comps, shapes) -> Tuple[float, float]:
     return reads, float(write)
 
 
+def op_histogram(text: str, weighted: bool = True,
+                 include_fused: bool = False) -> Dict[str, int]:
+    """Loop-aware opcode histogram.
+
+    Default counts STANDALONE (top-level, post-fusion) ops — fusion-interior
+    instructions are registers, not HBM-visible ops, so callee computations
+    of fusions/custom-calls are excluded.  ``include_fused=True`` counts the
+    interiors too (strictest check: "no gather exists ANYWHERE in this
+    module", fused or not).  ``weighted`` multiplies by while-loop trip
+    counts (a gather inside an L-layer scan counts L times).  Used by the
+    kernel benchmarks to prove the fused M2Q path emits zero
+    gather/concatenate per quantized layer."""
+    comps = parse_computations(text)
+    mult = computation_multipliers(comps)
+    # exclude fusion/custom-call interiors AND applied computations (reduce/
+    # sort/scatter bodies) — none are HBM-visible ops; while bodies stay in
+    fused_callees = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.opcode in ("fusion", "custom-call"):
+                mcall = re.search(r"calls=%?([\w.-]+)", ins.args)
+                if mcall:
+                    fused_callees.add(mcall.group(1))
+            for m in re.finditer(r"to_apply=%?([\w.-]+)", ins.args):
+                fused_callees.add(m.group(1))
+    hist: Dict[str, int] = {}
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0)
+        if cname in fused_callees:
+            if not include_fused:
+                continue
+            m = max(m, 1)  # callees carry no trip multiplier of their own
+        if m <= 0:
+            continue
+        for ins in instrs:
+            hist[ins.opcode] = hist.get(ins.opcode, 0) + (m if weighted else 1)
+    return hist
+
+
 def analyze(text: str) -> dict:
     comps = parse_computations(text)
     mult = computation_multipliers(comps)

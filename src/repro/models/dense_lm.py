@@ -42,6 +42,11 @@ FFN_FOLD_GROUPS = [
     (r"layers/shared/w1$", r"layers/shared/w3$", r"layers/shared/w2$"),
 ]
 
+# prefill() accepts per-row lengths with right-padded prompts (attention
+# caches mask positions >= length; recurrent families must not see pad
+# tokens, so they leave this unset and the engine buckets by exact length)
+RAGGED_PREFILL = True
+
 # quantization rules: path regex -> layer kind (first match wins)
 QUANT_RULES = [
     (r"embed", pol.KIND_EMBEDDING),
@@ -290,12 +295,20 @@ def decode_step(cfg: ArchConfig, params, cache, tokens):
     return logits, {**kv_new, "lengths": lengths}
 
 
-def prefill(cfg: ArchConfig, params, cache, tokens, prefix_embeds=None):
+def prefill(cfg: ArchConfig, params, cache, tokens, prefix_embeds=None,
+            lengths=None):
     """Fill the cache from a prompt; returns (last-token logits, cache).
 
     Implemented as forward + cache writeback (the flash path computes k/v per
     layer; for serving-scale prefill we re-project k/v into the cache via a
     scan identical to forward's but emitting kv).
+
+    ``lengths`` (B,) enables RAGGED batched prefill: prompts are
+    right-padded to a common S, per-row logits are read at position
+    ``lengths-1``, and cache ``lengths`` record the true prompt sizes.  The
+    pad rows beyond a prompt's length hold garbage k/v but sit at positions
+    >= length, which decode attention masks out — and causality keeps them
+    out of every valid row's receptive field during the prefill itself.
     """
     dtype = jnp.dtype(cfg.dtype)
     x = _embed_inputs(cfg, params, tokens, prefix_embeds, dtype)
@@ -333,7 +346,13 @@ def prefill(cfg: ArchConfig, params, cache, tokens, prefix_embeds=None):
         return x, kv
 
     x, kv_new = jax.lax.scan(body, x, (params["layers"], kv_layers))
-    x = nn.rms_norm(x[:, -1:], params["final_norm"])
-    logits = nn.dense(x, params["lm_head"])
-    new_cache = {**kv_new, "lengths": jnp.full((B,), S, jnp.int32)}
+    if lengths is None:
+        x_last = x[:, -1:]
+        new_lengths = jnp.full((B,), S, jnp.int32)
+    else:
+        new_lengths = jnp.asarray(lengths, jnp.int32)
+        x_last = x[jnp.arange(B), new_lengths - 1][:, None]
+    x_last = nn.rms_norm(x_last, params["final_norm"])
+    logits = nn.dense(x_last, params["lm_head"])
+    new_cache = {**kv_new, "lengths": new_lengths}
     return logits, new_cache

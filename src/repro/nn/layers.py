@@ -38,12 +38,22 @@ def lecun_normal(key, shape, dtype=jnp.float32):
 
 
 def dense(x: jax.Array, w, b=None) -> jax.Array:
-    """y = x @ w (+ b); w may be float, CalibTensor, or QTensor."""
+    """y = x @ w (+ b); w may be float, CalibTensor, or QTensor.
+
+    QTensor leaves route through the fused Pallas kernels when the backend
+    supports them (kernels.ops.dispatch_enabled — TPU by default, env-
+    overridable) and the leaf's kernel computes the identical function;
+    otherwise the pure-XLA QTensor path runs.
+    """
     if isinstance(w, CalibTensor):
         w.record(x)
         y = x @ w.w.astype(x.dtype)
     elif is_qtensor(w):
-        y = qmatmul(x, w)
+        from ..kernels import ops as _kops
+        if _kops.dispatch_enabled() and _kops.kernel_supported(w):
+            y = _kops.qtensor_matmul(x, w)
+        else:
+            y = qmatmul(x, w)
     else:
         y = x @ w.astype(x.dtype)
     if b is not None:

@@ -1,11 +1,20 @@
 """Continuous-batching serving engine over M2Q-quantized weights.
 
 Slot-based: a fixed decode batch of B slots, each holding one request's KV
-cache rows.  New requests prefill into a free slot (the per-slot cache
-columns are written via the batched prefill path with left-padding masked
-out by per-slot lengths); every engine step decodes one token for all live
-slots; finished requests free their slot immediately (continuous batching —
-no head-of-line blocking on the longest request).
+cache rows.  New requests prefill into free slots; every engine step decodes
+one token for all live slots; finished requests free their slot immediately
+(continuous batching — no head-of-line blocking on the longest request).
+
+Device-resident decode loop: sampling (greedy AND temperature) runs inside
+the jitted decode step, the pending next-token vector and the per-slot
+output ring live on device, and the PRNG key threads through the jit — the
+host never reads a token mid-request.  The only device->host transfer is
+one fetch of a request's finished token row when it completes (completion
+itself is decided by host-side step counting, not by reading tokens).
+Prefill is batched over ragged prompts: families that support right-padded
+prompts with per-row lengths (``RAGGED_PREFILL``) admit every waiting
+request in one call; recurrent families are bucketed by exact prompt length
+so pad tokens never pollute their state.
 
 This is the serving analogue of the paper's deployment: weights are the
 QTensor tree from core.quantize_model, executing the int8/APoT/packed-4bit
@@ -14,8 +23,8 @@ paths.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Dict, List, Optional
+import itertools
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +49,7 @@ class EngineStats:
     steps: int = 0
     decoded_tokens: int = 0
     prefills: int = 0
+    prefill_batches: int = 0
     finished: int = 0
 
 
@@ -51,85 +61,176 @@ class Engine:
         self.params = params
         self.B = max_batch
         self.T = max_len
-        self.key = jax.random.PRNGKey(seed)
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.stats = EngineStats()
-        self._decode = jax.jit(partial(self.model.decode_step, cfg))
-        # per-slot single-row prefill (batch=1 keeps ragged prompts simple;
-        # batched ragged prefill is a recorded optimization)
-        self._prefill1 = jax.jit(
-            lambda p, c, t: self.model.prefill(cfg, p, c, t))
+        self._uids = itertools.count()  # monotonic: uids never collide
+        self._ragged = bool(getattr(self.model, "RAGGED_PREFILL", False))
         self.cache = self.model.init_cache(cfg, max_batch, max_len,
                                            dtype=jnp.float32)
-        self._slot_cache_t = jax.eval_shape(
-            lambda: self.model.init_cache(cfg, 1, max_len, dtype=jnp.float32))
+        # device-resident decode state
+        self.key = jax.random.PRNGKey(seed)
+        self._pending = jnp.zeros((max_batch,), jnp.int32)
+        self._temps = jnp.zeros((max_batch,), jnp.float32)
+        self._outbuf = jnp.zeros((max_batch, max_len), jnp.int32)
+        self._counts = jnp.zeros((max_batch,), jnp.int32)
+        # host mirror of per-slot emitted-token counts (drives completion
+        # without reading token values back)
+        self._emitted = [0] * max_batch
+        self._decode_step = jax.jit(self._decode_step_impl)
+        self._prefill_sample = jax.jit(self._prefill_sample_impl)
+        self._prefill_sample_ragged = jax.jit(self._prefill_sample_ragged_impl)
 
     # -- request API --------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
                temperature: float = 0.0) -> Request:
-        req = Request(uid=len(self.queue), prompt=np.asarray(prompt, np.int32),
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt: prefill needs at least one token")
+        if len(prompt) + max_new_tokens > self.T:
+            # the KV cache and the device output ring are both max_len wide;
+            # silently clamping would truncate/corrupt the decoded stream
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
+                f" exceeds max_len ({self.T})")
+        req = Request(uid=next(self._uids), prompt=prompt,
                       max_new_tokens=max_new_tokens, temperature=temperature,
                       out_tokens=[])
         self.queue.append(req)
         return req
 
+    # -- jitted cores --------------------------------------------------------
+    def _sample_tokens(self, logits, key, temps):
+        """(B, V_padded) logits -> (B,) int32 tokens, fully in-graph."""
+        lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        safe_t = jnp.maximum(temps, 1e-6)[:, None]
+        keys = jax.random.split(key, lg.shape[0])
+        drawn = jax.vmap(jax.random.categorical)(keys, lg / safe_t)
+        return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+    def _decode_step_impl(self, params, cache, pending, outbuf, counts,
+                          temps, live, key):
+        key, k_s = jax.random.split(key)
+        logits, cache = self.model.decode_step(self.cfg, params, cache,
+                                               pending[:, None])
+        tok = self._sample_tokens(logits[:, 0], k_s, temps)
+        tok = jnp.where(live, tok, pending)
+        b = jnp.arange(self.B)
+        outbuf = outbuf.at[b, jnp.minimum(counts, self.T - 1)].set(
+            jnp.where(live, tok, outbuf[b, jnp.minimum(counts, self.T - 1)]))
+        counts = counts + live.astype(jnp.int32)
+        return cache, tok, outbuf, counts, key
+
+    def _prefill_sample_impl(self, params, slot_cache, tokens, temps, key):
+        logits, slot_cache = self.model.prefill(self.cfg, params, slot_cache,
+                                                tokens)
+        tok = self._sample_tokens(logits[:, -1], key, temps)
+        return tok, slot_cache
+
+    def _prefill_sample_ragged_impl(self, params, slot_cache, tokens,
+                                    lengths, temps, key):
+        logits, slot_cache = self.model.prefill(self.cfg, params, slot_cache,
+                                                tokens, lengths=lengths)
+        tok = self._sample_tokens(logits[:, -1], key, temps)
+        return tok, slot_cache
+
     # -- internals -----------------------------------------------------------
-    def _write_slot(self, slot: int, slot_cache):
-        """Copy a (1, ...) cache into slot row of the engine cache."""
+    def _write_slots(self, slots: List[int], group_cache):
+        """Copy an (n, ...) batched prefill cache into the engine cache."""
+        idx = jnp.asarray(slots, jnp.int32)
+
         def put(dst, src):
             if dst.ndim == 1:  # lengths (B,)
-                return dst.at[slot].set(src[0])
-            return dst.at[:, slot].set(src[:, 0])
+                return dst.at[idx].set(src)
+            return dst.at[:, idx].set(src)
 
-        self.cache = jax.tree.map(put, self.cache, slot_cache)
+        self.cache = jax.tree.map(put, self.cache, group_cache)
 
     def _admit(self):
-        for slot in range(self.B):
-            if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                sc = self.model.init_cache(self.cfg, 1, self.T,
-                                           dtype=jnp.float32)
-                logits, sc = self._prefill1(
-                    self.params, sc, jnp.asarray(req.prompt[None]))
-                self._write_slot(slot, sc)
-                tok = self._sample(logits[0, -1], req)
-                req.out_tokens.append(int(tok))
-                self.slots[slot] = req
-                self._pending_token = getattr(self, "_pending_token",
-                                              np.zeros(self.B, np.int32))
-                self._pending_token[slot] = int(tok)
-                self.stats.prefills += 1
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        n = min(len(free), len(self.queue))
+        if n == 0:
+            return
+        slots, reqs = free[:n], self.queue[:n]
+        if self._ragged:
+            groups = [(slots, reqs)]
+        else:  # exact-length buckets: recurrent states must not see padding
+            by_len: Dict[int, list] = {}
+            for s, r in zip(slots, reqs):
+                by_len.setdefault(len(r.prompt), []).append((s, r))
+            groups = [tuple(zip(*g)) for g in by_len.values()]
+        for gslots, greqs in groups:
+            gslots, greqs = list(gslots), list(greqs)
+            taken = {id(r) for r in greqs}
+            self.queue = [r for r in self.queue if id(r) not in taken]
+            lens = np.asarray([len(r.prompt) for r in greqs], np.int32)
+            pmax = int(lens.max())
+            if self._ragged:
+                # bucket the padded length to a power of two (capped at
+                # max_len): bounds XLA recompiles of the prefill graph to
+                # O(B * log T) shape variants instead of one per distinct
+                # prompt length; lengths mask the extra pad columns
+                b = 8
+                while b < pmax:
+                    b *= 2
+                pmax = min(b, self.T)
+            toks = np.zeros((len(greqs), pmax), np.int32)
+            for i, r in enumerate(greqs):
+                toks[i, : len(r.prompt)] = r.prompt
+            sc = self.model.init_cache(self.cfg, len(greqs), self.T,
+                                       dtype=jnp.float32)
+            temps = jnp.asarray([r.temperature for r in greqs], jnp.float32)
+            self.key, k = jax.random.split(self.key)
+            if self._ragged:
+                first, sc = self._prefill_sample_ragged(
+                    self.params, sc, jnp.asarray(toks), jnp.asarray(lens),
+                    temps, k)
+            else:
+                first, sc = self._prefill_sample(self.params, sc,
+                                                 jnp.asarray(toks), temps, k)
+            self._write_slots(gslots, sc)
+            idx = jnp.asarray(gslots, jnp.int32)
+            self._pending = self._pending.at[idx].set(first)
+            self._temps = self._temps.at[idx].set(temps)
+            self._outbuf = self._outbuf.at[idx, 0].set(first)
+            self._counts = self._counts.at[idx].set(1)
+            for s, r in zip(gslots, greqs):
+                self.slots[s] = r
+                self._emitted[s] = 1
+            self.stats.prefills += len(greqs)
+            self.stats.prefill_batches += 1
+            self._finish_done()  # max_new_tokens == 1 finishes at prefill
 
-    def _sample(self, logits, req: Request):
-        logits = np.asarray(logits[: self.cfg.vocab_size], np.float32)
-        if req.temperature <= 0:
-            return int(np.argmax(logits))
-        self.key, k = jax.random.split(self.key)
-        p = jax.nn.softmax(jnp.asarray(logits) / req.temperature)
-        return int(jax.random.choice(k, p.shape[0], p=p))
+    def _finish_done(self):
+        """Retire completed slots; the ONLY per-request device->host read."""
+        for slot, req in enumerate(self.slots):
+            if req is None or self._emitted[slot] < req.max_new_tokens:
+                continue
+            toks = np.asarray(
+                jax.device_get(self._outbuf[slot, : req.max_new_tokens]))
+            req.out_tokens = [int(t) for t in toks]
+            req.done = True
+            self.stats.finished += 1
+            self.slots[slot] = None
+            self._emitted[slot] = 0
 
     def step(self) -> int:
         """Admit + one decode step for all live slots. Returns #live."""
         self._admit()
-        live = [i for i, r in enumerate(self.slots) if r is not None]
+        live_mask = np.asarray([r is not None for r in self.slots], bool)
+        live = [i for i in range(self.B) if live_mask[i]]
         if not live:
             return 0
-        toks = jnp.asarray(
-            getattr(self, "_pending_token", np.zeros(self.B, np.int32))
-        )[:, None]
-        logits, self.cache = self._decode(self.params, self.cache, toks)
+        self.cache, self._pending, self._outbuf, self._counts, self.key = \
+            self._decode_step(self.params, self.cache, self._pending,
+                              self._outbuf, self._counts, self._temps,
+                              jnp.asarray(live_mask), self.key)
         self.stats.steps += 1
+        self.stats.decoded_tokens += len(live)
         for slot in live:
-            req = self.slots[slot]
-            tok = self._sample(logits[slot, 0], req)
-            req.out_tokens.append(int(tok))
-            self._pending_token[slot] = int(tok)
-            self.stats.decoded_tokens += 1
-            if len(req.out_tokens) >= req.max_new_tokens:
-                req.done = True
-                self.stats.finished += 1
-                self.slots[slot] = None  # slot freed -> continuous batching
+            self._emitted[slot] += 1
+        self._finish_done()
         return len(live)
 
     def run(self, max_steps: int = 10_000) -> EngineStats:

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Canonical tier-1 test entry point (documented in ROADMAP.md).
+#
+# Env setup follows SNIPPETS.md (olmax run.sh): fp64 is *allowed* but the
+# default dtype stays 32-bit, and the host platform exposes exactly one
+# virtual device (the sharded dry-run tests fork subprocesses that set
+# their own 16-device world before jax initializes).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=1${XLA_FLAGS:+ $XLA_FLAGS}"
+export JAX_ENABLE_X64=1          # allow fp64
+export JAX_DEFAULT_DTYPE_BITS=32 # ..but don't enforce it
+
+exec python -m pytest -x -q "$@"

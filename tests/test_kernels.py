@@ -1,15 +1,17 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs the ref.py
 pure-jnp oracles, across shapes (aligned, ragged, tiny) and dtypes; plus
-triangulation against the QTensor XLA paths."""
+triangulation against the QTensor XLA paths, parity of the permutation-free
+merged M2Q layout against the legacy concat+gather epilogue and the float
+reference, HLO cleanliness of the fused path, and the block autotuner."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import QAPoT, QM2Q, QUniform, quantize_act, select_schemes
-from repro.core.packing import apot_encode, pack_int4
-from repro.core.quant import apot_quantize, uniform_quantize
-from repro.kernels import ops, ref
+from repro.core.packing import apot_decode_values, apot_encode, pack_int4
+from repro.core.quant import apot_quantize, fake_quant_act, uniform_quantize
+from repro.kernels import autotune, ops, ref
 
 SHAPES = [(128, 128, 128), (256, 384, 512), (96, 72, 136), (8, 16, 32),
           (130, 258, 514)]
@@ -32,9 +34,12 @@ def test_int8_matmul_vs_ref(M, K, N):
     qt = _mk_int8_weights(rng, K, N)
     x = rng.normal(0, 1, (M, K)).astype(np.float32)
     sa = jnp.float32(np.abs(x).max() / 127.0)
-    xq = quantize_act(jnp.asarray(x), sa)
-    y_ker = ops.int8_matmul_op(xq, qt.payload, sa, qt.scale.reshape(-1),
+    # the kernel quantizes the float tile in its prologue; the oracle takes
+    # the pre-quantized activation — identical rounding by construction
+    y_ker = ops.int8_matmul_op(jnp.asarray(x), qt.payload, sa,
+                               qt.scale.reshape(-1),
                                qt.zero_point.reshape(-1), interpret=True)
+    xq = quantize_act(jnp.asarray(x), sa)
     y_ref = ref.int8_matmul_ref(xq, qt.payload, sa, qt.scale.reshape(-1),
                                 qt.zero_point.reshape(-1))
     np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
@@ -91,27 +96,92 @@ def test_m2q_matmul_vs_ref_and_qtensor(M, K, N):
     w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
     asn = select_schemes(jnp.asarray(w), ratio=0.5)
     x = rng.normal(0, 1, (M, K)).astype(np.float32)
-    sa = jnp.float32(np.abs(x).max() / 127.0)
     qt = QM2Q.quantize(jnp.asarray(w), asn.apot_idx, asn.uniform_idx,
                        act_max_abs=jnp.float32(np.abs(x).max()))
-    xq = quantize_act(jnp.asarray(x), qt.uniform.act_scale)
-    yu_k, ya_k = ops.m2q_matmul_op(
-        xq, qt.uniform.act_scale, qt.uniform.payload,
-        qt.uniform.scale.reshape(-1), qt.uniform.zero_point.reshape(-1),
-        qt.apot.codes, qt.apot.scale.reshape(-1), interpret=True)
-    yu_r, ya_r = ref.m2q_matmul_ref(
-        xq, qt.uniform.act_scale, qt.uniform.payload,
-        qt.uniform.scale.reshape(-1), qt.uniform.zero_point.reshape(-1),
-        qt.apot.codes, qt.apot.scale.reshape(-1))
-    np.testing.assert_allclose(np.asarray(yu_k), np.asarray(yu_r),
+    y_ker = ops.m2q_matmul_op(
+        jnp.asarray(x), qt.act_scale, qt.payload, qt.u_scale.reshape(-1),
+        qt.u_zp.reshape(-1), qt.a_scale.reshape(-1), interpret=True)
+    y_ref = ref.m2q_merged_ref(
+        jnp.asarray(x), qt.act_scale, qt.payload, qt.u_scale.reshape(-1),
+        qt.u_zp.reshape(-1), qt.a_scale.reshape(-1))
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(ya_k), np.asarray(ya_r),
-                               rtol=1e-5, atol=1e-5)
-    # full fused path vs QTensor path (includes inverse permutation)
+    # full fused dispatch vs QTensor XLA path (both permutation-free)
     y_full = ops.qtensor_matmul(jnp.asarray(x), qt, interpret=True)
     y_qt = qt.matmul(jnp.asarray(x))
     np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_qt),
                                rtol=5e-3, atol=5e-3)
+
+
+def _legacy_m2q(w, asn, x, act_scale):
+    """Pre-refactor oracle: quantize the halves separately, run both engine
+    matmuls, CONCATENATE, then inverse-permutation GATHER — the epilogue the
+    merged layout deleted."""
+    ui = jnp.asarray(asn.uniform_idx, jnp.int32)
+    ai = jnp.asarray(asn.apot_idx, jnp.int32)
+    inv_perm = jnp.argsort(jnp.concatenate([ui, ai]))
+    xq = quantize_act(x, act_scale)
+    qu = QUniform.quantize(w[:, ui], bits=8)
+    yu = ref.int8_matmul_ref(xq, qu.payload, act_scale,
+                             qu.scale.reshape(-1), qu.zero_point.reshape(-1))
+    t = apot_quantize(w[:, ai], axis=-1)
+    ya = ref.apot_matmul_ref(xq.astype(jnp.float32) * act_scale,
+                             apot_encode(t), t.scale.reshape(-1))
+    y = jnp.concatenate([yu, ya], axis=-1)
+    return jnp.take(y, inv_perm, axis=-1)
+
+
+@pytest.mark.parametrize("M,K,N", [(32, 64, 48), (16, 96, 130)])
+def test_m2q_permutation_free_parity_vs_legacy_and_float(M, K, N):
+    """The permutation-free merged path must match (a) the legacy
+    concat+gather path bit-for-bit and (b) the float reference to
+    quantization tolerance."""
+    rng = _rng(11 * M + K + N)
+    w = jnp.asarray(rng.normal(0, 0.05, (K, N)).astype(np.float32))
+    asn = select_schemes(w, ratio=0.5)
+    x = jnp.asarray(rng.normal(0, 1, (M, K)).astype(np.float32))
+    amax = jnp.float32(np.abs(np.asarray(x)).max())
+    qt = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx, act_max_abs=amax)
+
+    y_legacy = _legacy_m2q(w, asn, x, qt.act_scale)
+    y_merged = qt.matmul(x)
+    np.testing.assert_allclose(np.asarray(y_merged), np.asarray(y_legacy),
+                               rtol=1e-5, atol=1e-5)
+    y_fused = ops.m2q_matmul_op(x, qt.act_scale, qt.payload,
+                                qt.u_scale.reshape(-1), qt.u_zp.reshape(-1),
+                                qt.a_scale.reshape(-1), interpret=True)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_legacy),
+                               rtol=1e-5, atol=1e-5)
+    # float reference: error is quantization-level, not path-level
+    y_float = fake_quant_act(x, qt.act_scale) @ qt.dequant()
+    rel = float(jnp.linalg.norm(y_merged - y_float)
+                / jnp.linalg.norm(y_float))
+    assert rel < 5e-3, rel
+
+
+def test_m2q_hlo_emits_no_gather_or_concat():
+    """Acceptance: zero standalone gather/concatenate per quantized layer on
+    BOTH serving paths (XLA QTensor matmul and the fused Pallas dispatch),
+    counting fusion interiors too."""
+    from repro.launch.hlo_analysis import op_histogram
+    rng = _rng(21)
+    w = jnp.asarray(rng.normal(0, 0.05, (128, 96)).astype(np.float32))
+    asn = select_schemes(w, ratio=0.5)
+    qt = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx,
+                       act_max_abs=jnp.float32(3.0))
+    x = jnp.zeros((8, 128), jnp.float32)
+    for fn in (lambda v: qt.matmul(v),
+               lambda v: ops.qtensor_matmul(v, qt, interpret=True)):
+        txt = jax.jit(fn).lower(x).compile().as_text()
+        hist = op_histogram(txt, include_fused=True)
+        assert hist.get("gather", 0) == 0, hist
+        assert hist.get("concatenate", 0) == 0, hist
+    # the legacy epilogue DOES emit them (guards against a vacuous check)
+    txt = jax.jit(
+        lambda v: _legacy_m2q(w, asn, v, jnp.float32(3.0) / 127.0)
+    ).lower(x).compile().as_text()
+    hist = op_histogram(txt, include_fused=True)
+    assert hist.get("gather", 0) >= 1 and hist.get("concatenate", 0) >= 1
 
 
 @pytest.mark.parametrize("B,H,W,C", [(2, 8, 8, 32), (1, 14, 14, 64),
@@ -144,3 +214,141 @@ def test_qtensor_matmul_dispatch_uniform4_apot():
     np.testing.assert_allclose(
         np.asarray(ops.qtensor_matmul(x, qa, interpret=True)),
         np.asarray(qa.matmul(x)), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# nn.dense kernel dispatch wiring
+# ---------------------------------------------------------------------------
+
+
+def test_dense_routes_qtensors_through_kernels_when_enabled(monkeypatch):
+    """With dispatch forced on, the model-facing nn.dense runs the fused
+    Pallas path for supported leaves and matches the XLA QTensor path; the
+    CPU default leaves dispatch off."""
+    from repro import nn
+    from repro.core import qmatmul
+
+    monkeypatch.setenv("REPRO_PALLAS_DISPATCH", "0")
+    assert not ops.dispatch_enabled()  # forced off -> XLA path
+    monkeypatch.setenv("REPRO_PALLAS_DISPATCH", "1")
+    assert ops.dispatch_enabled()
+
+    rng = _rng(31)
+    w = jnp.asarray(rng.normal(0, 0.05, (64, 48)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (4, 64)).astype(np.float32))
+    amax = jnp.float32(np.abs(np.asarray(x)).max())
+
+    asn = select_schemes(w, ratio=0.5)
+    qm = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx, act_max_abs=amax)
+    assert ops.kernel_supported(qm)
+    np.testing.assert_allclose(np.asarray(nn.dense(x, qm)),
+                               np.asarray(qmatmul(x, qm)),
+                               rtol=1e-4, atol=1e-4)
+    q8 = QUniform.quantize(w, bits=8, act_max_abs=amax)
+    assert ops.kernel_supported(q8)
+    np.testing.assert_allclose(np.asarray(nn.dense(x, q8)),
+                               np.asarray(qmatmul(x, q8)),
+                               rtol=1e-4, atol=1e-4)
+    # uncalibrated leaves stay on the XLA path (kernel would quantize
+    # activations the XLA dequant path does not)
+    assert not ops.kernel_supported(QM2Q.quantize(w, asn.apot_idx,
+                                                  asn.uniform_idx))
+    assert not ops.kernel_supported(QUniform.quantize(w, bits=8))
+    # embeddings (axis=0 per-row scales) never dispatch
+    assert not ops.kernel_supported(QUniform.quantize(w, bits=8, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_interpret_falls_back_to_heuristic():
+    assert autotune.blocks_for("int8_matmul", 130, 258, 514,
+                               interpret=True) == \
+        autotune.heuristic_blocks(130, 258, 514)
+    # no bench_fn -> heuristic even when "tunable"
+    assert autotune.blocks_for("int8_matmul", 128, 128, 128,
+                               interpret=False) == (128, 128, 128)
+
+
+def test_autotune_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "tune.json")
+    cache = autotune.AutotuneCache(path)
+    assert cache.get("k:1x2x3:cpu") is None
+    cache.put("k:1x2x3:cpu", (8, 16, 32))
+    reloaded = autotune.AutotuneCache(path).load()
+    assert reloaded.get("k:1x2x3:cpu") == (8, 16, 32)
+    assert len(reloaded) == 1
+    # corrupt file degrades to empty, not an exception
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert autotune.AutotuneCache(path).load().get("k:1x2x3:cpu") is None
+
+
+def test_autotune_never_benches_inside_a_trace(tmp_path):
+    """Benching under jit tracing would 'time' tracer construction and
+    poison the persistent cache; inside a trace the tuner must return the
+    heuristic (or a warm cache hit) without calling bench_fn."""
+    path = str(tmp_path / "tune.json")
+    calls = []
+
+    def bench(blocks):
+        calls.append(blocks)
+        return np.zeros(())
+
+    def traced(x):
+        blocks = autotune.blocks_for("fake_traced", 64, 64, 64,
+                                     interpret=False, bench_fn=bench,
+                                     cache_path=path, force_tune=True)
+        assert blocks == autotune.heuristic_blocks(64, 64, 64)
+        return x
+
+    jax.jit(traced)(jnp.zeros((2,)))
+    assert calls == []
+    assert autotune.AutotuneCache(path).load().get(
+        f"fake_traced:64x64x64:{jax.default_backend()}") is None
+
+
+def test_autotune_all_failures_do_not_poison_cache(tmp_path):
+    path = str(tmp_path / "tune.json")
+
+    def bench(blocks):
+        raise RuntimeError("kernel launch failed")
+
+    best = autotune.blocks_for("fake_broken", 64, 64, 64, interpret=False,
+                               bench_fn=bench, cache_path=path,
+                               candidates=[(8, 8, 8)], force_tune=True)
+    assert best == autotune.heuristic_blocks(64, 64, 64)
+    # the untuned fallback must NOT be persisted under the tuned key
+    assert autotune.AutotuneCache(path).load().get(
+        f"fake_broken:64x64x64:{jax.default_backend()}") is None
+
+
+def test_autotune_times_candidates_and_persists(tmp_path):
+    path = str(tmp_path / "tune.json")
+    import time
+    calls = []
+    cands = [(8, 8, 8), (16, 16, 16), (32, 32, 32)]
+    times = {(8, 8, 8): 3.0, (16, 16, 16): 1.0, (32, 32, 32): 2.0}
+
+    def bench(blocks):
+        calls.append(blocks)
+        time.sleep(times[blocks] / 1000.0)
+        return np.zeros(())
+
+    best = autotune.blocks_for("fake_kernel", 64, 64, 64, interpret=False,
+                               bench_fn=bench, cache_path=path,
+                               candidates=cands, force_tune=True)
+    assert best == (16, 16, 16)
+    assert set(calls) == set(cands)
+    # second call: served from the persisted cache, no re-benchmarking
+    calls.clear()
+    again = autotune.blocks_for("fake_kernel", 64, 64, 64, interpret=False,
+                                bench_fn=bench, cache_path=path,
+                                candidates=cands, force_tune=True)
+    assert again == (16, 16, 16) and calls == []
+    # and it survives a fresh cache object reading the JSON file
+    fresh = autotune.AutotuneCache(path).load()
+    assert fresh.get(f"fake_kernel:64x64x64:{jax.default_backend()}") == \
+        (16, 16, 16)
