@@ -23,8 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_OUT = Path(__file__).resolve().parent / "BENCH_kernels.json"
-_TRACKED_OPS = ("gather", "concatenate", "dot", "fusion", "custom-call",
-                "scatter", "pad", "slice", "while")
+_TRACKED_OPS = ("gather", "concatenate", "convolution", "dot", "fusion",
+                "custom-call", "scatter", "pad", "slice", "while")
 
 
 def _hist_summary(hist):
@@ -130,6 +130,51 @@ def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
 
     report["m2q_paths"]["legacy_concat_take"] = _bench_one(
         "m2q_legacy", legacy, (x,), iters)
+
+    # --- quantized conv dispatch: fused / XLA-QTensor / f32-fallback -------
+    # PWConv (B1/B2 late-stage widths) + depthwise (3x3 MBConv, 5x5 MSA agg)
+    # at a 7x7 late-stage map.  The fused and XLA-QTensor paths must emit
+    # ZERO convolution ops (PWConv is a matmul; dwconv runs the packed-w4
+    # kernel); the dequantized-f32 fallback they replaced shows the conv.
+    import dataclasses
+    from repro import nn
+
+    report["conv"] = {}
+    for name, cin, cout in (("pwconv_b1", 256, 256), ("pwconv_b2", 384, 384)):
+        wc4 = rng.normal(0, 0.05, (1, 1, cin, cout)).astype(np.float32)
+        w2 = jnp.asarray(wc4.reshape(cin, cout))
+        asn_c = select_schemes(w2, ratio=0.5)
+        qc = QM2Q.quantize(w2, asn_c.apot_idx, asn_c.uniform_idx,
+                           act_max_abs=jnp.float32(3.0))
+        qc = dataclasses.replace(qc, shape=wc4.shape)
+        xc4 = jnp.asarray(rng.normal(0, 1, (1, 7, 7, cin)).astype(np.float32))
+        report["conv"][f"{name}/fused"] = _bench_one(
+            name, lambda xx, q=qc: ops.qtensor_matmul(xx, q,
+                                                      interpret=interpret),
+            (xc4,), iters)
+        report["conv"][f"{name}/xla_qtensor"] = _bench_one(
+            name, lambda xx, q=qc: nn.conv2d(xx, q), (xc4,), iters)
+        report["conv"][f"{name}/f32_dequant_conv"] = _bench_one(
+            name, lambda xx, q=qc: jax.lax.conv_general_dilated(
+                xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")), (xc4,), iters)
+
+    for name, k, ch in (("dwconv3x3_b1", 3, 256), ("dwconv5x5_b2", 5, 1152)):
+        wdw = rng.normal(0, 0.2, (k * k, ch)).astype(np.float32)
+        udw = uniform_quantize(jnp.asarray(wdw), bits=4, axis=-1)
+        qdw = QUniform(payload=pack_int4(udw.q), scale=udw.scale,
+                       zero_point=udw.zero_point, act_scale=None, bits=4,
+                       axis=1, shape=(k, k, 1, ch))
+        xdw = jnp.asarray(rng.normal(0, 1, (1, 7, 7, ch)).astype(np.float32))
+        report["conv"][f"{name}/fused"] = _bench_one(
+            name, lambda xx, q=qdw: ops.qtensor_dwconv(xx, q,
+                                                       interpret=interpret),
+            (xdw,), iters)
+        report["conv"][f"{name}/f32_dequant_conv"] = _bench_one(
+            name, lambda xx, q=qdw: jax.lax.conv_general_dilated(
+                xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=ch), (xdw,), iters)
     return report
 
 
@@ -138,18 +183,29 @@ def write_report(out_path=DEFAULT_OUT, shape=(128, 128, 128),
     report = collect(shape=shape, iters=iters)
     fused = report["m2q_paths"]["fused"]["ops_incl_fused"]
     assert fused["gather"] == 0 and fused["concatenate"] == 0, fused
+    for name, rec in report["conv"].items():
+        convs = rec["ops_incl_fused"]["convolution"]
+        if name.endswith("/f32_dequant_conv"):
+            # the depthwise f32 baseline keeps its convolution op (guards a
+            # vacuous check); XLA canonicalizes the 1x1 f32 conv to a dot,
+            # so only the dwconv baselines discriminate here
+            assert name.startswith("pwconv") or convs >= 1, (name, rec)
+        else:  # fused + XLA-QTensor quantized paths: no convolution op
+            assert convs == 0, (name, rec)
     Path(out_path).write_text(json.dumps(report, indent=1, sort_keys=True))
     return report
 
 
 def print_report(report) -> None:
     """CSV-ish summary lines (shared by this CLI and benchmarks.run)."""
-    for section in ("kernels", "m2q_paths"):
-        prefix = "kernel" if section == "kernels" else "m2q_path"
-        for name, rec in report[section].items():
+    for section in ("kernels", "m2q_paths", "conv"):
+        prefix = {"kernels": "kernel", "m2q_paths": "m2q_path",
+                  "conv": "conv"}[section]
+        for name, rec in report.get(section, {}).items():
             o = rec["ops_incl_fused"]
             print(f"{prefix}/{name},{rec['wall_s']},"
-                  f"gather={o['gather']} concat={o['concatenate']}")
+                  f"gather={o['gather']} concat={o['concatenate']} "
+                  f"conv={o['convolution']}")
 
 
 def main():

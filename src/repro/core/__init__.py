@@ -37,7 +37,6 @@ from .policy import (
     ShapeCtx,
     decide,
     dense_intensity,
-    dwconv_intensity,
 )
 from .qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform, is_qtensor, qmatmul, weight_bits
 from .calibrate import CalibTensor, run_calibration, wrap_for_calibration

@@ -208,6 +208,12 @@ def quantize_model(
         kind = match_kind(rules, key)
         if kind is None or kind == pol.KIND_SKIP or leaf.ndim < 2:
             return leaf
+        # conv leaves (HWIO): classify on the 4-D shape (decide() reads
+        # kh/kw for DWConv), but quantize the (kh*kw*cin, cout) flattening —
+        # filter-wise scales land on Cout, QM2Q's merged-byte layout and the
+        # matmul kernels apply unchanged, and the aux ``shape`` keeps the
+        # original filter for the XLA conv fallback to reshape through.
+        conv = leaf.ndim == 4 and kind in (pol.KIND_DENSE, pol.KIND_DWCONV)
         # classify on the per-unit shape (strip stacked layer / expert axes)
         if kind == pol.KIND_EXPERT and leaf.ndim >= 3:
             dec_shape = tuple(leaf.shape[-2:])
@@ -220,12 +226,16 @@ def quantize_model(
             return leaf
         # activation stats: plain key, or per-layer '@i' keys for stacked
         ams = act_stats.get(key)
-        if ams is None and leaf.ndim >= 3:
+        if ams is None and leaf.ndim >= 3 and not conv:
             per = [act_stats.get(f"{key}@{i}") for i in range(leaf.shape[0])]
             if all(v is not None for v in per):
                 ams = np.asarray(per, np.float32).reshape(leaf.shape[0], 1, 1)
-        qt = _quantize_leaf(jnp.asarray(leaf, jnp.float32), kind, decision, p,
-                            ams)
+        w = jnp.asarray(leaf, jnp.float32)
+        if conv:
+            w = w.reshape(-1, w.shape[-1])
+        qt = _quantize_leaf(w, kind, decision, p, ams)
+        if conv:
+            qt = dataclasses.replace(qt, shape=tuple(leaf.shape))
         rep = LayerReport(path=key, kind=kind, decision=decision,
                           shape=tuple(leaf.shape), bits=weight_bits(qt))
         if isinstance(qt, (QM2Q, QExpertM2Q)):
@@ -338,6 +348,19 @@ def abstract_quantize_model(
         batched = (kind in (pol.KIND_DENSE, pol.KIND_HEAD, pol.KIND_EXPERT)
                    and ndim >= 3)
         act = with_act_scales and p.quantize_activations
+        # conv leaves mirror the concrete path: 2-D flattened payload,
+        # original HWIO shape in aux
+        if ndim == 4 and kind in (pol.KIND_DENSE, pol.KIND_DWCONV):
+            flat = (int(np.prod(shape[:-1])), int(shape[-1]))
+            if decision == pol.DECISION_LOWBIT:
+                qt = q_uniform(flat, p.memory_bits, -1)
+            elif p.compute_scheme == "uniform8":
+                qt = q_uniform(flat, 8, -1, act=act)
+            elif p.compute_scheme == "apot":
+                qt = q_apot(flat, act=act)
+            else:
+                qt = q_m2q(flat, None, act=act)
+            return dataclasses.replace(qt, shape=shape)
         if decision == pol.DECISION_MIXED and p.compute_scheme == "m2q" and \
                 any(re.search(rx, key) for rx in fold_res):
             # perm-folded group member: merged [uniform | apot] column order,

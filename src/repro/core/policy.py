@@ -67,14 +67,6 @@ def dense_intensity(k: int, n: int, tokens: float, weight_bits: int = 8,
     return flops / max(bytes_moved, 1.0)
 
 
-def dwconv_intensity(kh: int, kw: int, channels: int, tokens: float,
-                     weight_bits: int = 8, act_bytes: int = 2) -> float:
-    """Depthwise conv: each output pixel-channel does kh*kw MACs."""
-    flops = 2.0 * tokens * channels * kh * kw
-    bytes_moved = (weight_bits / 8.0) * kh * kw * channels + act_bytes * 2 * tokens * channels
-    return flops / max(bytes_moved, 1.0)
-
-
 def decide(kind: str, shape: tuple, ctx: ShapeCtx, policy: M2QPolicy) -> str:
     """Classify one weight -> DECISION_*."""
     if kind == KIND_SKIP:
@@ -83,10 +75,14 @@ def decide(kind: str, shape: tuple, ctx: ShapeCtx, policy: M2QPolicy) -> str:
         # Gather: one row touched per token; zero reuse -> memory-intensive.
         return DECISION_LOWBIT
     if kind == KIND_DWCONV:
-        kh, kw = shape[0], shape[1]
-        c = shape[-1]
-        inten = dwconv_intensity(kh, kw, c, ctx.tokens_per_step)
-        return DECISION_LOWBIT if inten < policy.intensity_threshold else DECISION_MIXED
+        # Structurally memory-intensive (paper Sec. III-A): one weight
+        # channel per filter means zero cross-filter reuse, so the intensity
+        # is bounded by kh*kw/act_bytes (~4.5 for 3x3, ~12.5 for 5x5)
+        # REGARDLESS of tokens_per_step — far below any MXU ridge point.
+        # Tying this to the tunable threshold misclassified DWConvs whenever
+        # the threshold was lowered to steer *dense* layers, so the paper's
+        # taxonomy is honored unconditionally here.
+        return DECISION_LOWBIT
     if kind in (KIND_DENSE, KIND_HEAD, KIND_EXPERT):
         k = int(math.prod(shape[:-1]))
         n = int(shape[-1])

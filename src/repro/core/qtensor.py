@@ -316,8 +316,11 @@ class QM2Q:
             inv_perm)
         act_scale = None if act_max_abs is None else act_scale_from_stats(
             act_max_abs)
+        # shape records the ORIGINAL weight shape (e.g. HWIO for a quantized
+        # conv filter whose payload was flattened to (kh*kw*cin, cout));
+        # consumers reshape dequant() output back through it.
         return cls(payload, u_scale, u_zp, a_scale, act_scale,
-                   tuple(w2.shape), int(ui.shape[0]), int(ai.shape[0]))
+                   tuple(w.shape), int(ui.shape[0]), int(ai.shape[0]))
 
     def dequant(self, dtype=jnp.float32) -> jax.Array:
         return _merged_dequant(self.payload, self.u_scale, self.u_zp,

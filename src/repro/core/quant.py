@@ -136,7 +136,12 @@ def pot_quantize(w: jax.Array, bits: int = 8, axis: int = -1, eps: float = 1e-8,
     lo, hi = _moveaxis_stats(w, axis, reduce_axes)
     scale = jnp.maximum(hi - lo, eps)  # paper: S = max(W) - min(W)
     a = jnp.abs(w) / scale
-    pmin = -(2**bits) + 1  # paper clip range [-2^b + 1, 0]
+    # paper clip range [-2^b + 1, 0], further clamped to what the int8
+    # exponent storage can hold: for bits=8 the paper bound is -255, but
+    # subnormal-tiny weights (log2(|w|/S) down to ~ -149) would wrap through
+    # int8 to POSITIVE exponents and explode pot_dequantize.  -127 keeps
+    # every stored p representable (and 2^-127 is already ~1e-38 * S).
+    pmin = max(-(2**bits) + 1, -127)
     # log2 of 0 -> -inf; handle via is_zero mask.
     is_zero = a < 2.0 ** (pmin - 1)
     safe = jnp.where(is_zero, 1.0, a)

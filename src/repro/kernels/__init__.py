@@ -11,5 +11,6 @@ from .ops import (
     int4_matmul_op,
     int8_matmul_op,
     m2q_matmul_op,
+    qtensor_dwconv,
     qtensor_matmul,
 )

@@ -1,11 +1,18 @@
-"""4-bit depthwise 3x3 conv kernel (the MPMA *single mode*, paper Sec. IV-1a).
+"""4-bit depthwise conv kernel (the MPMA *single mode*, paper Sec. IV-1a).
 
 DWConv is the paper's memory-intensive class: one weight channel per filter,
 no cross-filter input reuse — so the win is bandwidth, exactly what 4-bit
 weights buy (Table II shows 4-bit is accuracy-free).  The packed nibbles
-(9, C/2) stay packed across HBM; decode happens once per channel tile in
-VMEM; the 9-tap accumulation mirrors the paper's output-parallel dataflow
+(kh*kw, C/2) stay packed across HBM; decode happens once per channel tile in
+VMEM; the tap accumulation mirrors the paper's output-parallel dataflow
 (partial sums accumulate across taps in registers, never leaving VMEM).
+
+The kernel is parameterized over the kernel window (kh, kw) and stride so it
+serves BOTH EfficientViT depthwise shapes: the MBConv 3x3 (stride 1 and the
+stride-2 stage-entry downsamplers) and the MSA 5x5 multi-scale aggregation.
+SAME padding is applied by the wrapper (XLA conventions: asymmetric for
+even-sized windows under stride), so the kernel body only sees the padded
+tile and accumulates kh*kw strided taps.
 
 Grid: (B, C/bc) — channels are the parallel dim (the paper's "blocks within
 a PE tile compute different channels").  H/W stay whole per block (edge
@@ -14,6 +21,7 @@ models are 224x224; H-tiling is a recorded follow-up for larger maps).
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,42 +31,60 @@ from jax.experimental.pallas import tpu as pltpu
 from .compat import CompilerParams
 
 
-def _kernel(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, H: int, W: int):
+def same_padding(size: int, k: int, stride: int) -> Tuple[int, int]:
+    """XLA SAME padding (lo, hi) for one spatial dim."""
+    out = -(-size // stride)  # ceil
+    total = max((out - 1) * stride + k - size, 0)
+    lo = total // 2
+    return lo, total - lo
+
+
+def _kernel(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, KH: int, KW: int,
+            HO: int, WO: int, stride: int):
     lo = (wp_ref[...] & 0x0F).astype(jnp.float32)
     hi = ((wp_ref[...] >> 4) & 0x0F).astype(jnp.float32)
-    q = jnp.stack([lo, hi], axis=-1).reshape(9, -1)  # (9, bc)
+    q = jnp.stack([lo, hi], axis=-1).reshape(KH * KW, -1)  # (kh*kw, bc)
     w = (q - zp_ref[...]) * scale_ref[...]  # decode once per channel tile
-    x = x_ref[0].astype(jnp.float32)  # (H+2, W+2, bc)
-    acc = jnp.zeros((H, W, x.shape[-1]), jnp.float32)
-    for i in range(3):
-        for j in range(3):
-            acc = acc + x[i:i + H, j:j + W] * w[3 * i + j]
+    x = x_ref[0].astype(jnp.float32)  # (HI, WI, bc), SAME-padded
+    acc = jnp.zeros((HO, WO, x.shape[-1]), jnp.float32)
+    s = stride
+    for i in range(KH):
+        for j in range(KW):
+            tap = x[i:i + (HO - 1) * s + 1:s, j:j + (WO - 1) * s + 1:s]
+            acc = acc + tap * w[KW * i + j]
     o_ref[0] = acc
 
 
 def dwconv_w4(x: jax.Array, packed: jax.Array, scale: jax.Array,
-              zero_point: jax.Array, *, bc: int = 128,
+              zero_point: jax.Array, *, kh: int = 3, kw: int = 3,
+              stride: int = 1, bc: int = 128,
               interpret: bool = False) -> jax.Array:
-    """x (B,H,W,C) (unpadded); packed (9, C/2) uint8; scale/zp (C,) f32.
+    """x (B,H,W,C) (unpadded); packed (kh*kw, C/2) uint8; scale/zp (C,) f32.
 
-    Returns (B,H,W,C) f32 — depthwise 3x3, stride 1, SAME.
+    Returns (B,HO,WO,C) f32 — depthwise kh x kw, SAME padding, stride >= 1.
     """
     B, H, W, C = x.shape
+    assert packed.shape[0] == kh * kw, (packed.shape, kh, kw)
     bc = min(bc, C)
     assert C % bc == 0 and bc % 2 == 0
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    ph = same_padding(H, kh, stride)
+    pw = same_padding(W, kw, stride)
+    HO = -(-H // stride)
+    WO = -(-W // stride)
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    HI, WI = xp.shape[1], xp.shape[2]
     grid = (B, C // bc)
     return pl.pallas_call(
-        functools.partial(_kernel, H=H, W=W),
+        functools.partial(_kernel, KH=kh, KW=kw, HO=HO, WO=WO, stride=stride),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, H + 2, W + 2, bc), lambda b, c: (b, 0, 0, c)),
-            pl.BlockSpec((9, bc // 2), lambda b, c: (0, c)),
+            pl.BlockSpec((1, HI, WI, bc), lambda b, c: (b, 0, 0, c)),
+            pl.BlockSpec((kh * kw, bc // 2), lambda b, c: (0, c)),
             pl.BlockSpec((1, bc), lambda b, c: (0, c)),
             pl.BlockSpec((1, bc), lambda b, c: (0, c)),
         ],
-        out_specs=pl.BlockSpec((1, H, W, bc), lambda b, c: (b, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((B, H, W, C), jnp.float32),
+        out_specs=pl.BlockSpec((1, HO, WO, bc), lambda b, c: (b, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, HO, WO, C), jnp.float32),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,

@@ -52,6 +52,22 @@ def dispatch_enabled() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def conv_dispatch_enabled() -> bool:
+    """Should nn.conv2d route QTensor convolutions through the Pallas
+    kernels (PWConv -> m2q/int8/int4 matmul, depthwise -> dwconv_w4)?
+
+    ``REPRO_PALLAS_CONV_DISPATCH=1/0`` overrides just the conv paths;
+    otherwise the global :func:`dispatch_enabled` switch applies.  Note the
+    quantized 1x1 PWConv never falls back to a dequantized-weight f32
+    convolution: with dispatch off it still runs the pure-XLA QTensor
+    *matmul* path (see nn.layers.conv2d).
+    """
+    env = os.environ.get("REPRO_PALLAS_CONV_DISPATCH")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false")
+    return dispatch_enabled()
+
+
 def kernel_supported(qt) -> bool:
     """True when the fused kernel computes the SAME function as the XLA
     QTensor path for this leaf (2-D weight, identical activation handling
@@ -213,8 +229,8 @@ def m2q_matmul_op(x, act_scale, payload, u_scale, u_zp, a_scale,
                      interpret)
 
 
-@partial(jax.jit, static_argnames=("bc", "interpret"))
-def _dwconv_core(x, packed, scale, zero_point, bc, interpret):
+@partial(jax.jit, static_argnames=("kh", "kw", "stride", "bc", "interpret"))
+def _dwconv_core(x, packed, scale, zero_point, kh, kw, stride, bc, interpret):
     C = x.shape[-1]
     pc = (-C) % bc
     if pc:
@@ -222,7 +238,8 @@ def _dwconv_core(x, packed, scale, zero_point, bc, interpret):
         packed = jnp.pad(packed, ((0, 0), (0, pc // 2)))
         scale = jnp.pad(scale, (0, pc))
         zero_point = jnp.pad(zero_point, (0, pc))
-    y = dwconv_w4(x, packed, scale, zero_point, bc=bc, interpret=interpret)
+    y = dwconv_w4(x, packed, scale, zero_point, kh=kh, kw=kw, stride=stride,
+                  bc=bc, interpret=interpret)
     return y[..., :C]
 
 
@@ -232,29 +249,32 @@ def _dwconv_bc(bn: int, C: int) -> int:
     return max(bc - (bc % 2), 2)
 
 
-def dwconv_w4_op(x, packed, scale, zero_point,
-                 interpret: Optional[bool] = None,
+def dwconv_w4_op(x, packed, scale, zero_point, kh: int = 3, kw: int = 3,
+                 stride: int = 1, interpret: Optional[bool] = None,
                  blocks: Optional[Tuple[int, int, int]] = None):
+    """x (B,H,W,C) float; packed (kh*kw, C/2) nibbles; SAME padding."""
     interpret = _interpret_default() if interpret is None else interpret
     B, H, W, C = x.shape
+    taps = kh * kw
     if blocks is None:
         # candidates are benched with the SAME adjusted bc that executes;
         # only bn matters here, so dedupe triples by their effective bc
         seen, cands = set(), []
-        for c in autotune.candidate_blocks(B * H * W, C, 9):
+        for c in autotune.candidate_blocks(B * H * W, C, taps):
             bc = _dwconv_bc(c[1], C)
             if bc not in seen:
                 seen.add(bc)
                 cands.append(c)
         _, bn, _ = autotune.blocks_for(
-            "dwconv_w4", B * H * W, C, 9, interpret=interpret,
-            candidates=cands,
+            "dwconv_w4", B * H * W // (stride * stride), C, taps,
+            interpret=interpret, candidates=cands,
             bench_fn=lambda b: _dwconv_core(x, packed, scale, zero_point,
+                                            kh, kw, stride,
                                             _dwconv_bc(b[1], C), interpret))
     else:
         bn = blocks[1]
-    return _dwconv_core(x, packed, scale, zero_point, _dwconv_bc(bn, C),
-                        interpret)
+    return _dwconv_core(x, packed, scale, zero_point, kh, kw, stride,
+                        _dwconv_bc(bn, C), interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -285,3 +305,33 @@ def qtensor_matmul(x: jax.Array, qt, interpret: Optional[bool] = None):
     else:
         raise TypeError(type(qt))
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+
+
+def dwconv_kernel_supported(qt, x, stride: int, groups: int,
+                            padding: str) -> bool:
+    """True when the packed-w4 depthwise kernel computes the same function
+    as the dequantized-weight XLA conv for this leaf: a weights-only 4-bit
+    QUniform whose HWIO shape is depthwise (cin-per-group == 1), flattened
+    to a (kh*kw, C/2) payload by core.apply, under SAME padding."""
+    if not isinstance(qt, QUniform) or qt.bits != 4 or qt.act_scale is not None:
+        return False
+    # axis must be the flattened payload's column (channel) axis, else the
+    # (C,)-shaped scale/zp reshape feeds the kernel a per-row layout
+    if qt.payload.ndim != 2 or qt.axis != 1:
+        return False
+    if len(qt.shape) != 4 or qt.shape[2] != 1:
+        return False
+    kh, kw, _, c = qt.shape
+    return (padding == "SAME" and stride >= 1 and groups == c
+            and x.shape[-1] == c and qt.payload.shape[0] == kh * kw)
+
+
+def qtensor_dwconv(x: jax.Array, qt, stride: int = 1,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Kernel-backed depthwise conv for a 4-bit QUniform conv leaf (payload
+    (kh*kw, C/2) packed nibbles, shape aux = the original HWIO filter)."""
+    kh, kw = int(qt.shape[0]), int(qt.shape[1])
+    y = dwconv_w4_op(x.astype(jnp.float32), qt.payload,
+                     qt.scale.reshape(-1), qt.zero_point.reshape(-1),
+                     kh=kh, kw=kw, stride=stride, interpret=interpret)
+    return y.astype(x.dtype)

@@ -69,15 +69,21 @@ def m2q_merged_ref(x: jax.Array, act_scale: jax.Array, payload: jax.Array,
 
 
 def dwconv_w4_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
-                  zero_point: jax.Array) -> jax.Array:
-    """Depthwise 3x3, stride 1, SAME. x (B,H,W,C); packed (3,3,C/2) uint8;
-    scale/zp (C,) f32 (per-filter = per-channel for DWConv)."""
-    q = packing.unpack_int4(packed.reshape(9, -1)).astype(jnp.float32)
-    w = ((q - zero_point[None, :]) * scale[None, :]).reshape(3, 3, -1)
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+                  zero_point: jax.Array, kh: int = 3, kw: int = 3,
+                  stride: int = 1) -> jax.Array:
+    """Depthwise kh x kw, SAME padding. x (B,H,W,C); packed (kh*kw, C/2)
+    uint8; scale/zp (C,) f32 (per-filter = per-channel for DWConv)."""
+    from .dwconv_w4 import same_padding
+    q = packing.unpack_int4(packed.reshape(kh * kw, -1)).astype(jnp.float32)
+    w = ((q - zero_point[None, :]) * scale[None, :]).reshape(kh, kw, -1)
     H, W = x.shape[1], x.shape[2]
-    out = jnp.zeros_like(x, dtype=jnp.float32)
-    for i in range(3):
-        for j in range(3):
-            out = out + xp[:, i:i + H, j:j + W].astype(jnp.float32) * w[i, j]
+    xp = jnp.pad(x, ((0, 0), same_padding(H, kh, stride),
+                     same_padding(W, kw, stride), (0, 0)))
+    HO, WO = -(-H // stride), -(-W // stride)
+    out = jnp.zeros((x.shape[0], HO, WO, x.shape[-1]), jnp.float32)
+    s = stride
+    for i in range(kh):
+        for j in range(kw):
+            tap = xp[:, i:i + (HO - 1) * s + 1:s, j:j + (WO - 1) * s + 1:s]
+            out = out + tap.astype(jnp.float32) * w[i, j]
     return out

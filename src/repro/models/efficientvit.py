@@ -25,8 +25,11 @@ from .config import ArchConfig
 
 QUANT_RULES = [
     (r"(ln|norm|gamma|bias|b$)", pol.KIND_SKIP),
-    (r"w_dw", pol.KIND_DWCONV),
-    (r"(w_pw\d?|w_in|w_out|w_qkv|w_proj|w_agg)", pol.KIND_DENSE),
+    # every (kh,kw,1,C) depthwise filter is memory-intensive (Sec. III-A):
+    # the MBConv 3x3 (w_dw) AND the MSA 5x5 aggregation (w_agg) — w_agg was
+    # historically mis-filed under KIND_DENSE despite its depthwise shape
+    (r"(w_dw|w_agg)", pol.KIND_DWCONV),
+    (r"(w_pw\d?|w_in|w_out|w_qkv|w_proj)", pol.KIND_DENSE),
     (r"head/w", pol.KIND_DENSE),
 ]
 
@@ -80,7 +83,10 @@ def init(cfg: ArchConfig, key) -> dict:
     for si, (w, d) in enumerate(zip(widths, depths)):
         blocks = []
         for bi in range(d):
-            stride_block = bi == 0 and si > 0
+            # stage-entry blocks (bi==0, si>0) run their depthwise conv at
+            # stride 2 — decided in forward(); _init_mbconv is stride-
+            # agnostic because only w_dw sees the stride and the residual
+            # is gated on stride==1 AND matching channels in _mbconv
             blk = {"mb": _init_mbconv(keys[next(ki)], cin, w)}
             if si >= len(widths) - 2:  # last two stages get MSA (transformer)
                 blk["msa"] = _init_msa(keys[next(ki)], w, cfg.dim_per_head)

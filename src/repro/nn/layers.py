@@ -115,15 +115,60 @@ def _conv_weight(w, dtype):
     if isinstance(w, CalibTensor):
         return w.w.astype(dtype)
     if is_qtensor(w):
-        return w.dequant(dtype)
+        # quantized conv leaves store a flattened 2-D payload; the aux
+        # ``shape`` remembers the original HWIO filter
+        return w.dequant(dtype).reshape(w.shape)
     return w.astype(dtype)
+
+
+def _qconv2d(x: jax.Array, w, stride: int, groups: int, padding: str):
+    """Quantized-conv hot path (the M2Q conv execution domain).
+
+    * 1x1 stride-1 un-grouped PWConv == a matmul over B*H*W pixel rows:
+      fused Pallas kernels when kernels.ops.conv_dispatch_enabled() and the
+      leaf's kernel computes the identical function, else the pure-XLA
+      QTensor matmul — either way the weight bytes stay quantized in HBM
+      and no f32 dequantized-weight convolution is emitted.
+    * 4-bit depthwise filters run the packed-w4 Pallas conv kernel when
+      dispatch is enabled.
+    Returns None when only the dequantized-weight XLA convolution (the
+    fallback and parity reference) applies.
+    """
+    from ..kernels import ops as _kops
+    shape = tuple(w.shape)
+    ints = getattr(w, "payload", None)
+    if ints is None:
+        ints = getattr(w, "codes", None)
+    if len(shape) != 4 or ints is None or ints.ndim != 2:
+        return None
+    if shape[:2] == (1, 1) and stride == 1 and groups == 1:
+        # padding is irrelevant for 1x1 stride-1: SAME == VALID
+        if _kops.conv_dispatch_enabled() and _kops.kernel_supported(w):
+            return _kops.qtensor_matmul(x, w)
+        return qmatmul(x, w)
+    if _kops.conv_dispatch_enabled() and \
+            _kops.dwconv_kernel_supported(w, x, stride, groups, padding):
+        return _kops.qtensor_dwconv(x, w, stride=stride)
+    return None
 
 
 def conv2d(x: jax.Array, w, b=None, stride: int = 1, groups: int = 1,
            padding: str = "SAME") -> jax.Array:
-    """x: (B,H,W,Cin); w: (kh,kw,Cin//groups,Cout)."""
+    """x: (B,H,W,Cin); w: (kh,kw,Cin//groups,Cout).
+
+    QTensor leaves route through :func:`_qconv2d` (quantized PWConv matmuls
+    + the packed-w4 depthwise kernel); everything else — float, calibration,
+    and unsupported quantized shapes — runs the XLA convolution (quantized
+    weights dequantized through their HWIO shape).
+    """
     if isinstance(w, CalibTensor):
         w.record(x)
+    elif is_qtensor(w):
+        y = _qconv2d(x, w, stride=stride, groups=groups, padding=padding)
+        if y is not None:
+            if b is not None:
+                y = y + b.astype(y.dtype)
+            return y
     wv = _conv_weight(w, x.dtype)
     y = jax.lax.conv_general_dilated(
         x, wv, window_strides=(stride, stride), padding=padding,

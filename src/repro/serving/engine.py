@@ -148,59 +148,67 @@ class Engine:
         self.cache = jax.tree.map(put, self.cache, group_cache)
 
     def _admit(self):
-        free = [i for i, r in enumerate(self.slots) if r is None]
-        n = min(len(free), len(self.queue))
-        if n == 0:
-            return
-        slots, reqs = free[:n], self.queue[:n]
+        # Free slots are recomputed on every pass: the in-loop
+        # _finish_done() (max_new_tokens==1 completing at prefill) frees
+        # slots that queued requests can take within the SAME admit call —
+        # computing ``free`` once left them idle until the next step.
+        while True:
+            free = [i for i, r in enumerate(self.slots) if r is None]
+            n = min(len(free), len(self.queue))
+            if n == 0:
+                return
+            slots, reqs = free[:n], self.queue[:n]
+            if self._ragged:
+                gslots, greqs = slots, reqs
+            else:  # exact-length bucket: recurrent states must not see
+                # padding; one bucket per pass, the rest re-enter next pass
+                by_len: Dict[int, list] = {}
+                for s, r in zip(slots, reqs):
+                    by_len.setdefault(len(r.prompt), []).append((s, r))
+                gslots, greqs = map(list,
+                                    zip(*next(iter(by_len.values()))))
+            self._prefill_group(list(gslots), list(greqs))
+
+    def _prefill_group(self, gslots: List[int], greqs: List[Request]):
+        taken = {id(r) for r in greqs}
+        self.queue = [r for r in self.queue if id(r) not in taken]
+        lens = np.asarray([len(r.prompt) for r in greqs], np.int32)
+        pmax = int(lens.max())
         if self._ragged:
-            groups = [(slots, reqs)]
-        else:  # exact-length buckets: recurrent states must not see padding
-            by_len: Dict[int, list] = {}
-            for s, r in zip(slots, reqs):
-                by_len.setdefault(len(r.prompt), []).append((s, r))
-            groups = [tuple(zip(*g)) for g in by_len.values()]
-        for gslots, greqs in groups:
-            gslots, greqs = list(gslots), list(greqs)
-            taken = {id(r) for r in greqs}
-            self.queue = [r for r in self.queue if id(r) not in taken]
-            lens = np.asarray([len(r.prompt) for r in greqs], np.int32)
-            pmax = int(lens.max())
-            if self._ragged:
-                # bucket the padded length to a power of two (capped at
-                # max_len): bounds XLA recompiles of the prefill graph to
-                # O(B * log T) shape variants instead of one per distinct
-                # prompt length; lengths mask the extra pad columns
-                b = 8
-                while b < pmax:
-                    b *= 2
-                pmax = min(b, self.T)
-            toks = np.zeros((len(greqs), pmax), np.int32)
-            for i, r in enumerate(greqs):
-                toks[i, : len(r.prompt)] = r.prompt
-            sc = self.model.init_cache(self.cfg, len(greqs), self.T,
-                                       dtype=jnp.float32)
-            temps = jnp.asarray([r.temperature for r in greqs], jnp.float32)
-            self.key, k = jax.random.split(self.key)
-            if self._ragged:
-                first, sc = self._prefill_sample_ragged(
-                    self.params, sc, jnp.asarray(toks), jnp.asarray(lens),
-                    temps, k)
-            else:
-                first, sc = self._prefill_sample(self.params, sc,
-                                                 jnp.asarray(toks), temps, k)
-            self._write_slots(gslots, sc)
-            idx = jnp.asarray(gslots, jnp.int32)
-            self._pending = self._pending.at[idx].set(first)
-            self._temps = self._temps.at[idx].set(temps)
-            self._outbuf = self._outbuf.at[idx, 0].set(first)
-            self._counts = self._counts.at[idx].set(1)
-            for s, r in zip(gslots, greqs):
-                self.slots[s] = r
-                self._emitted[s] = 1
-            self.stats.prefills += len(greqs)
-            self.stats.prefill_batches += 1
-            self._finish_done()  # max_new_tokens == 1 finishes at prefill
+            # bucket the padded length to a power of two (capped at
+            # max_len): bounds XLA recompiles of the prefill graph to
+            # O(B * log T) shape variants instead of one per distinct
+            # prompt length; lengths mask the extra pad columns
+            b = 8
+            while b < pmax:
+                b *= 2
+            pmax = min(b, self.T)
+        toks = np.zeros((len(greqs), pmax), np.int32)
+        for i, r in enumerate(greqs):
+            toks[i, : len(r.prompt)] = r.prompt
+        sc = self.model.init_cache(self.cfg, len(greqs), self.T,
+                                   dtype=jnp.float32)
+        temps = jnp.asarray([r.temperature for r in greqs], jnp.float32)
+        self.key, k = jax.random.split(self.key)
+        if self._ragged:
+            first, sc = self._prefill_sample_ragged(
+                self.params, sc, jnp.asarray(toks), jnp.asarray(lens),
+                temps, k)
+        else:
+            first, sc = self._prefill_sample(self.params, sc,
+                                             jnp.asarray(toks), temps, k)
+        self._write_slots(gslots, sc)
+        idx = jnp.asarray(gslots, jnp.int32)
+        self._pending = self._pending.at[idx].set(first)
+        self._temps = self._temps.at[idx].set(temps)
+        self._outbuf = self._outbuf.at[idx, 0].set(first)
+        self._counts = self._counts.at[idx].set(1)
+        for s, r in zip(gslots, greqs):
+            self.slots[s] = r
+            self._emitted[s] = 1
+        self.stats.prefills += len(greqs)
+        self.stats.prefill_batches += 1
+        self._finish_done()  # max_new_tokens == 1 finishes at prefill
 
     def _finish_done(self):
         """Retire completed slots; the ONLY per-request device->host read."""

@@ -1,0 +1,104 @@
+"""Batched vision inference (images in, logits out) over M2Q backbones.
+
+The token engine (serving.engine) is slot-structured because decode is
+stateful; image classification is stateless, so its serving shape is a
+*batcher*: requests accumulate, and each flush pads the pending batch up to
+a power-of-two bucket before running ONE jitted forward.  Pow2 bucketing
+bounds XLA recompilation to O(log2 max_batch) graph variants regardless of
+the traffic's batch-size distribution — the same trick the token engine
+applies to ragged prefill lengths.
+
+With QTensor params (core.quantize_model) the jitted forward executes the
+quantized conv/matmul hot path end to end: stride-1 1x1 PWConvs run the
+fused m2q/int8 matmul kernels, depthwise filters the packed-w4 conv kernel
+(kernels.ops.conv_dispatch_enabled), with the pure-XLA QTensor paths as
+fallback — no f32 dequantized-weight convolutions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+from ..models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class VisionStats:
+    images: int = 0
+    batches: int = 0
+    padded_images: int = 0  # pad rows added by bucketing (wasted compute)
+    buckets_used: Set[int] = dataclasses.field(default_factory=set)
+
+
+class VisionEngine:
+    """Micro-batching classifier: submit images, flush to get logits."""
+
+    def __init__(self, cfg: ArchConfig, params, max_batch: int = 64,
+                 min_bucket: int = 1):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.B = max_batch
+        self.min_bucket = max(1, min_bucket)
+        self.stats = VisionStats()
+        self._pending: List[np.ndarray] = []
+        self._fwd = jax.jit(self._fwd_impl)
+
+    def _fwd_impl(self, params, images):
+        return self.model.forward(self.cfg, params, images)
+
+    def bucket(self, n: int) -> int:
+        """Smallest power-of-two >= n (floored at min_bucket, capped at
+        max_batch) — the batch shape actually compiled and executed."""
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.B)
+
+    # -- request API ---------------------------------------------------------
+    def submit(self, image: np.ndarray) -> int:
+        """Queue one (H, W, 3) image; returns its index in the next flush."""
+        img = np.asarray(image)
+        if img.shape != (self.cfg.img_res, self.cfg.img_res, 3):
+            raise ValueError(
+                f"expected ({self.cfg.img_res}, {self.cfg.img_res}, 3), "
+                f"got {img.shape}")
+        self._pending.append(img)
+        return len(self._pending) - 1
+
+    def flush(self) -> Optional[np.ndarray]:
+        """Run all pending images; returns (n_pending, n_classes) logits."""
+        if not self._pending:
+            return None
+        out = self.classify(np.stack(self._pending))
+        self._pending = []
+        return out
+
+    def classify(self, images) -> np.ndarray:
+        """(N, H, W, 3) images -> (N, n_classes) logits, any N >= 1."""
+        images = np.asarray(images, np.float32)
+        n = images.shape[0]
+        if n == 0:
+            return np.zeros((0, self.cfg.n_classes), np.float32)
+        outs = []
+        for start in range(0, n, self.B):
+            chunk = images[start:start + self.B]
+            b = self.bucket(chunk.shape[0])
+            pad = b - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((pad,) + chunk.shape[1:], np.float32)])
+            logits = self._fwd(self.params, jnp.asarray(chunk))
+            outs.append(np.asarray(logits)[: b - pad])
+            self.stats.batches += 1
+            self.stats.padded_images += pad
+            self.stats.buckets_used.add(b)
+        self.stats.images += n
+        return np.concatenate(outs)

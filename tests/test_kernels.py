@@ -186,20 +186,33 @@ def test_m2q_hlo_emits_no_gather_or_concat():
 
 @pytest.mark.parametrize("B,H,W,C", [(2, 8, 8, 32), (1, 14, 14, 64),
                                      (3, 7, 9, 16), (1, 16, 16, 130)])
-def test_dwconv_w4_vs_ref(B, H, W, C):
+@pytest.mark.parametrize("kh,kw,stride", [(3, 3, 1), (5, 5, 1), (3, 3, 2),
+                                          (5, 5, 2), (3, 5, 1)])
+def test_dwconv_w4_vs_ref(B, H, W, C, kh, kw, stride):
+    """Generalized window/stride sweep (MBConv 3x3 incl. stride-2 stage
+    entries, MSA 5x5 aggregation), triangulated kernel == ref == XLA conv."""
     C = C + (C % 2)
-    rng = _rng(B + H + W + C)
-    w = rng.normal(0, 0.2, (3, 3, C)).astype(np.float32)
+    rng = _rng(B + H + W + C + 7 * kh + stride)
+    w = rng.normal(0, 0.2, (kh, kw, C)).astype(np.float32)
     u = uniform_quantize(jnp.asarray(w), bits=4, axis=-1)
-    packed = pack_int4(u.q.reshape(9, C))
+    packed = pack_int4(u.q.reshape(kh * kw, C))
     scale = u.scale.reshape(-1)
     zp = u.zero_point.reshape(-1)
     x = rng.normal(0, 1, (B, H, W, C)).astype(np.float32)
-    y_ker = ops.dwconv_w4_op(jnp.asarray(x), packed, scale, zp,
-                             interpret=True)
-    y_ref = ref.dwconv_w4_ref(jnp.asarray(x), packed, scale, zp)
+    y_ker = ops.dwconv_w4_op(jnp.asarray(x), packed, scale, zp, kh=kh, kw=kw,
+                             stride=stride, interpret=True)
+    y_ref = ref.dwconv_w4_ref(jnp.asarray(x), packed, scale, zp, kh=kh,
+                              kw=kw, stride=stride)
     np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
+    # triangulate against the dequantized-weight XLA conv (SAME semantics)
+    wd = ((u.q.astype(np.float32) - np.asarray(u.zero_point))
+          * np.asarray(u.scale)).reshape(kh, kw, 1, C)
+    y_xla = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(wd), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=C)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_xla),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_qtensor_matmul_dispatch_uniform4_apot():

@@ -82,6 +82,26 @@ def test_pot_paper_worked_example():
     assert abs(w_hat[0, 0] - (-0.25)) < 1e-6
 
 
+def test_pot_denormal_weights_do_not_overflow_int8_exponent():
+    """Regression: bits=8 gives the paper clip bound -255, but p is stored
+    int8 — a subnormal-tiny weight (log2 ~ -149) used to wrap to a POSITIVE
+    exponent and explode dequant to >> scale.  The exponent clamp must keep
+    every stored p in int8 range and the reconstruction <= the scale."""
+    w = jnp.asarray([[1e-40, -3e-39, 1e-30, 0.5, -1.0]], jnp.float32)
+    t = pot_quantize(w, bits=8, axis=None)
+    assert int(np.asarray(t.p).min()) >= -127
+    assert int(np.asarray(t.p).max()) <= 0
+    w_hat = np.asarray(pot_dequantize(t))
+    assert np.all(np.isfinite(w_hat))
+    assert np.all(np.abs(w_hat) <= float(np.asarray(t.scale)) * (1 + 1e-6))
+    # tiny magnitudes reconstruct to (essentially) zero, not garbage
+    assert np.all(np.abs(w_hat[0, :3]) < 1e-6)
+    # and normal magnitudes still land on their nearest PoT level (the
+    # worst-case relative error of a power-of-two grid is ~1/3)
+    assert abs(w_hat[0, 3] - 0.5) <= 0.5 / 3 + 1e-6
+    assert abs(w_hat[0, 4] + 1.0) <= 1.0 / 3 + 1e-6
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=30, deadline=None)
     @given(w=w_arrays())
@@ -256,7 +276,8 @@ def test_int8_path_close_to_dequant_path():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "dbrx-132b", "rwkv6-3b"])
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "dbrx-132b", "rwkv6-3b",
+                                  "efficientvit-b1-r224"])
 def test_abstract_quantize_matches_concrete(arch):
     from repro.configs.registry import REDUCED
     from repro.models import get_model

@@ -191,3 +191,50 @@ def test_grad_compression_error_feedback():
     # residual holds exactly what was lost
     np.testing.assert_allclose(np.asarray(comp["w"] + res2["w"]),
                                np.asarray(g["w"]), rtol=1e-5, atol=1e-8)
+
+
+def test_admit_refills_slots_freed_within_the_same_call():
+    """Regression: a slot freed by the in-loop _finish_done (max_new_tokens
+    == 1 completing at prefill) must be re-admitted within the SAME _admit
+    call — computing the free list once left it idle for a full step."""
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=1, max_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, 4, dtype=np.int32),
+                       max_new_tokens=1) for _ in range(3)]
+    eng._admit()  # ONE admit call drains the whole queue through slot 0
+    assert all(r.done and len(r.out_tokens) == 1 for r in reqs)
+    assert eng.stats.finished == 3 and not eng.queue
+    assert eng.stats.prefill_batches == 3  # one slot -> three passes
+
+
+def test_vision_engine_pow2_buckets_and_parity():
+    from repro.serving.vision import VisionEngine
+    cfg = REDUCED["efficientvit-b1-r224"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    eng = VisionEngine(cfg, params, max_batch=8)
+    assert [eng.bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 8]
+    rng = np.random.default_rng(0)
+    imgs = rng.normal(0, 1, (5, cfg.img_res, cfg.img_res, 3)).astype(
+        np.float32)
+    out = eng.classify(imgs)
+    ref = np.asarray(model.forward(cfg, params, jnp.asarray(imgs)))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    assert out.shape == (5, cfg.n_classes)
+    assert eng.stats.buckets_used == {8} and eng.stats.padded_images == 3
+    # a multi-chunk ragged batch: 11 -> chunks of 8 + 3 (bucket 4)
+    out2 = eng.classify(rng.normal(
+        0, 1, (11, cfg.img_res, cfg.img_res, 3)).astype(np.float32))
+    assert out2.shape == (11, cfg.n_classes)
+    assert eng.stats.buckets_used == {4, 8}
+    # submit/flush micro-batching agrees with classify
+    for i in range(3):
+        eng.submit(imgs[i])
+    flushed = eng.flush()
+    np.testing.assert_allclose(flushed, ref[:3], rtol=1e-4, atol=1e-4)
+    assert eng.flush() is None
+    with pytest.raises(ValueError, match="expected"):
+        eng.submit(np.zeros((4, 4, 3), np.float32))
