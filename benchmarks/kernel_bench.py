@@ -133,9 +133,12 @@ def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
 
     # --- quantized conv dispatch: fused / XLA-QTensor / f32-fallback -------
     # PWConv (B1/B2 late-stage widths) + depthwise (3x3 MBConv, 5x5 MSA agg)
-    # at a 7x7 late-stage map.  The fused and XLA-QTensor paths must emit
-    # ZERO convolution ops (PWConv is a matmul; dwconv runs the packed-w4
-    # kernel); the dequantized-f32 fallback they replaced shows the conv.
+    # at a 7x7 late-stage map.  Each variant is the SAME nn.conv2d call
+    # under a scoped kernels.ops.DispatchConfig — programmatic, per-row
+    # dispatch control instead of flipping process-global env vars.  The
+    # fused and XLA-QTensor paths must emit ZERO convolution ops (PWConv is
+    # a matmul; dwconv runs the packed-w4 kernel); the dequantized-f32
+    # fallback they replaced shows the conv.
     import dataclasses
     from repro import nn
 
@@ -148,12 +151,12 @@ def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
                            act_max_abs=jnp.float32(3.0))
         qc = dataclasses.replace(qc, shape=wc4.shape)
         xc4 = jnp.asarray(rng.normal(0, 1, (1, 7, 7, cin)).astype(np.float32))
-        report["conv"][f"{name}/fused"] = _bench_one(
-            name, lambda xx, q=qc: ops.qtensor_matmul(xx, q,
-                                                      interpret=interpret),
-            (xc4,), iters)
-        report["conv"][f"{name}/xla_qtensor"] = _bench_one(
-            name, lambda xx, q=qc: nn.conv2d(xx, q), (xc4,), iters)
+        with ops.dispatch(dense=True, conv=True):
+            report["conv"][f"{name}/fused"] = _bench_one(
+                name, lambda xx, q=qc: nn.conv2d(xx, q), (xc4,), iters)
+        with ops.dispatch(dense=False, conv=False):
+            report["conv"][f"{name}/xla_qtensor"] = _bench_one(
+                name, lambda xx, q=qc: nn.conv2d(xx, q), (xc4,), iters)
         report["conv"][f"{name}/f32_dequant_conv"] = _bench_one(
             name, lambda xx, q=qc: jax.lax.conv_general_dilated(
                 xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",
@@ -166,10 +169,9 @@ def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
                        zero_point=udw.zero_point, act_scale=None, bits=4,
                        axis=1, shape=(k, k, 1, ch))
         xdw = jnp.asarray(rng.normal(0, 1, (1, 7, 7, ch)).astype(np.float32))
-        report["conv"][f"{name}/fused"] = _bench_one(
-            name, lambda xx, q=qdw: ops.qtensor_dwconv(xx, q,
-                                                       interpret=interpret),
-            (xdw,), iters)
+        with ops.dispatch(conv=True):
+            report["conv"][f"{name}/fused"] = _bench_one(
+                name, lambda xx, q=qdw: nn.dwconv2d(xx, q), (xdw,), iters)
         report["conv"][f"{name}/f32_dequant_conv"] = _bench_one(
             name, lambda xx, q=qdw: jax.lax.conv_general_dilated(
                 xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",

@@ -1,17 +1,21 @@
 """The paper's own pipeline end to end on EfficientViT: train a (reduced)
 hybrid ViT on the synthetic vision task, then run REAL two-level mixed
-quantization exactly as Sec. III prescribes — PTQ activation calibration,
-per-filter MSE scheme selection (Eq. 6), QTensor weights (mixed
-uniform8/APoT on PWConv/MatMul, packed 4-bit on DWConvs) — and serve the
-quantized model through the batched vision engine.  The quantized forward
+quantization exactly as Sec. III prescribes — through the one-call recipe
+API: ``quantize()`` bundles PTQ activation calibration, per-filter MSE
+scheme selection (Eq. 6), and QTensor weights (mixed uniform8/APoT on
+PWConv/MatMul, packed 4-bit on DWConvs) into a persistable
+``QuantizedModel`` artifact, which is saved, reloaded (no re-quantization),
+and served through the batched vision engine.  The quantized forward
 executes the M2Q conv/matmul hot path (fused Pallas kernels on TPU /
-REPRO_PALLAS_DISPATCH=1; pure-XLA QTensor int paths otherwise — never a
-f32 dequantized-weight convolution for PWConvs).  Finally the result is
-priced on the calibrated accelerator simulator (Tables III/V scope).
+REPRO_PALLAS_DISPATCH=1 / a scoped kernels.ops.DispatchConfig; pure-XLA
+QTensor int paths otherwise — never a f32 dequantized-weight convolution
+for PWConvs).  Finally the result is priced on the calibrated accelerator
+simulator (Tables III/V scope).
 
   PYTHONPATH=src:. python examples/quantize_efficientvit.py
 """
 import sys
+import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
@@ -21,51 +25,45 @@ import numpy as np
 
 from benchmarks import accel_sim as A
 from benchmarks.proxy_model import CFG, _data, accuracy, train_proxy
-from repro.core import M2QPolicy, ShapeCtx, quantize_model
-from repro.core.calibrate import (rule_matcher, run_calibration,
-                                  wrap_for_calibration)
-from repro.models import get_model
-from repro.serving.vision import VisionEngine
+from repro.recipe import QuantizedModel, quantize
 
 _CALIB_BATCHES = 4
 _BATCH = 32
 
 
 def main():
-    model = get_model(CFG)
-    print("[1/5] train (or load cached) proxy EfficientViT")
+    print("[1/6] train (or load cached) proxy EfficientViT")
     params = train_proxy()
     acc_fp = accuracy(params)
 
-    print("[2/5] PTQ activation calibration (paper Sec. V-A)")
-    wrapped, act_stats = wrap_for_calibration(params,
-                                              rule_matcher(model.QUANT_RULES))
+    print("[2/6] one-call M2Q: calibrate (Sec. V-A) + quantize (Sec. III)")
     ds = _data()
     batches = [jax.numpy.asarray(ds.batch(20_000 + i, _BATCH)[0])
                for i in range(_CALIB_BATCHES)]
-    run_calibration(lambda p, x: model.forward(CFG, p, x), wrapped, batches)
-    print(f"      recorded max-abs for {len(act_stats)} activation sites")
-
-    print("[3/5] apply M2Q (paper Sec. III) -> real QTensor weights")
-    # the reduced proxy's widths sit far below a v5e ridge point, so the
-    # intensity classifier is pinned to the paper's structural taxonomy
-    # (PWConv/MatMul -> mixed, DWConv -> 4-bit) with a low threshold
-    ctx = ShapeCtx(tokens_per_step=_BATCH * CFG.img_res * CFG.img_res)
-    policy = M2QPolicy(intensity_threshold=1.0)
-    qparams, report = quantize_model(params, model.QUANT_RULES, ctx, policy,
-                                     act_stats=act_stats)
-    n_mixed = sum(r.decision.startswith("mixed") for r in report)
-    n_lowbit = sum(r.decision == "lowbit" for r in report)
-    bits = [r.bits for r in report]
-    print(f"      {len(report)} quantized layers: {n_mixed} mixed "
+    qm = quantize(CFG, params, "m2q-w8a8", calib_batches=batches)
+    print(f"      recorded max-abs for {qm.provenance['calib_sites']} "
+          "activation sites")
+    n_mixed = sum(r.decision.startswith("mixed") for r in qm.report)
+    n_lowbit = sum(r.decision == "lowbit" for r in qm.report)
+    bits = [r.bits for r in qm.report]
+    print(f"      {len(qm.report)} quantized layers: {n_mixed} mixed "
           f"(uniform8/APoT), {n_lowbit} low-bit; "
           f"avg stored bits/weight {np.mean(bits):.2f}")
-    acc_q = accuracy(qparams)
+    acc_q = accuracy(qm.params)
     print(f"      top-1: float {acc_fp:.4f} -> M2Q {acc_q:.4f} "
           f"(drop {acc_fp - acc_q:+.4f}; paper reports ~0.29% avg)")
 
-    print("[4/5] batched vision serving (pow2 buckets) on the QTensor tree")
-    eng = VisionEngine(CFG, qparams, max_batch=_BATCH)
+    print("[3/6] save -> load the artifact (no re-quantization)")
+    with tempfile.TemporaryDirectory() as d:
+        qm.save(d)
+        qm2 = QuantizedModel.load(d)
+    same = all(jax.tree.leaves(jax.tree.map(
+        lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+        qm.params, qm2.params)))
+    print(f"      round-trip bitwise-identical tree: {same}")
+
+    print("[4/6] batched vision serving (pow2 buckets) on the loaded tree")
+    eng = qm2.serve(max_batch=_BATCH)
     rng = np.random.default_rng(0)
     for n in (3, 7, 12):  # ragged arrivals -> padded pow2 buckets
         logits = eng.classify(
@@ -75,7 +73,7 @@ def main():
           f"buckets {sorted(eng.stats.buckets_used)}, "
           f"{eng.stats.padded_images} pad rows")
 
-    print("[5/5] accelerator cost (calibrated cycle/energy model)")
+    print("[5/6] accelerator cost (calibrated cycle/energy model)")
     A.set_calibration()
     layers = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS["b1-r224"])
     trio = A.simulate(layers, "trio")
@@ -89,6 +87,7 @@ def main():
     edp_saving = 1 - ours.edp_mj_ms / 4.3  # paper-reported Trio EDP
     print(f"      EDP saving vs Trio-ViT: {100 * edp_saving:.0f}% "
           f"(paper: 80%)")
+    print("[6/6] done")
 
 
 if __name__ == "__main__":

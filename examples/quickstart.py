@@ -1,21 +1,20 @@
-"""Quickstart: the M2Q two-level mixed quantization pipeline in ~60 lines.
+"""Quickstart: the M2Q two-level mixed quantization pipeline in ~50 lines.
 
   PYTHONPATH=src python examples/quickstart.py
 
-1. build a small LM, 2. calibrate activations (PTQ), 3. apply M2Q
-(mixed uniform8/APoT on compute-intensive weights, 4-bit on
-memory-intensive ones), 4. compare float vs quantized outputs, 5. run the
-fused Pallas m2q kernel against its oracle.
+1. build a small LM, 2. one-call recipe quantization (PTQ calibration +
+mixed uniform8/APoT on compute-intensive weights + 4-bit on
+memory-intensive ones, bundled by the "m2q-w8a8" preset), 3. compare float
+vs quantized outputs, 4. run the fused Pallas m2q kernel against its
+oracle.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import REDUCED
-from repro.core import (M2QPolicy, ShapeCtx, quantize_model,
-                        wrap_for_calibration)
-from repro.core.calibrate import rule_matcher
 from repro.models import get_model
+from repro.recipe import quantize
 
 cfg = REDUCED["qwen1.5-0.5b"]
 model = get_model(cfg)
@@ -26,30 +25,24 @@ toks = jnp.asarray(np.random.default_rng(0).integers(
 # 1. float reference
 logits_fp = model.forward(cfg, params, toks)
 
-# 2. PTQ calibration (paper Sec. V-A: offline, no fine-tuning)
-wrapped, stats = wrap_for_calibration(params, rule_matcher(model.QUANT_RULES))
-model.forward(cfg, wrapped, toks, unroll=True)
-print(f"calibrated {len(stats)} activation ranges")
-
-# 3. M2Q: mixed schemes for compute-intensive, 4-bit for memory-intensive
-ctx = ShapeCtx(tokens_per_step=64)  # deployment shape drives the policy
-# NOTE: at this demo's tiny layer sizes everything is memory-bound; lower
-# the intensity threshold so the mixed-scheme path is visible (full-size
-# configs use the default threshold — see DESIGN.md §4)
-qparams, report = quantize_model(params, model.QUANT_RULES, ctx,
-                                 M2QPolicy(intensity_threshold=0.5),
-                                 act_stats=stats)
-for r in report[:4]:
+# 2. one call: PTQ calibration (paper Sec. V-A: offline, no fine-tuning)
+# + Eq. 6 scheme selection + QTensor quantization.  The recipe resolver
+# pins the mixed decision on this demo's tiny (memory-bound-everywhere)
+# widths, so the mixed-scheme path is visible without threshold hacks.
+qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[toks])
+print(f"calibrated {qm.provenance['calib_sites']} activation ranges")
+for r in qm.report[:4]:
     print(f"  {r.path:24s} {r.kind:10s} -> {r.decision:7s} "
           f"{r.bits:.1f} bits  (apot:{r.n_apot} uniform:{r.n_uniform})")
 
-# 4. quantized forward
-logits_q = model.forward(cfg, qparams, toks)
+# 3. quantized forward (artifact method; identical to model.forward on
+# qm.params)
+logits_q = qm.forward(toks)
 rel = float(jnp.linalg.norm(logits_q - logits_fp)
             / jnp.linalg.norm(logits_fp))
 print(f"quantized-vs-float relative error: {rel:.4f}")
 
-# 5. the fused mixed-scheme Pallas kernel vs its pure-jnp oracle.
+# 4. the fused mixed-scheme Pallas kernel vs its pure-jnp oracle.
 # The merged permutation-free layout: one byte per weight in original
 # filter order, float activations in (quantization fused into the kernel
 # prologue), one output array out — no concatenate/gather epilogue.

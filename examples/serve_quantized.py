@@ -13,7 +13,6 @@ import numpy as np
 from repro.configs.registry import REDUCED
 from repro.launch.serve import quantize_for_serving
 from repro.models import get_model
-from repro.serving.engine import Engine
 
 
 def main():
@@ -28,8 +27,9 @@ def main():
     print(f"[1/3] init {cfg.name}")
     params = model.init(cfg, jax.random.PRNGKey(0))
 
-    print("[2/3] PTQ: calibrate + apply M2Q")
-    qparams, report = quantize_for_serving(cfg, params)
+    print("[2/3] PTQ: calibrate + apply M2Q (one-call recipe API)")
+    qm = quantize_for_serving(cfg, params)
+    report = qm.report
     total_bits = sum(r.bits * np.prod(r.shape) for r in report)
     total_w = sum(np.prod(r.shape) for r in report)
     print(f"      {len(report)} layers quantized; "
@@ -38,7 +38,7 @@ def main():
           f"{sum(1 for r in report if r.decision == 'lowbit')} low-bit)")
 
     print("[3/3] serve with continuous batching")
-    eng = Engine(cfg, qparams, max_batch=4, max_len=96)
+    eng = qm.serve(max_batch=4, max_len=96)
     rng = np.random.default_rng(7)
     reqs = []
     for i in range(args.requests):

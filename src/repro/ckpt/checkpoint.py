@@ -124,6 +124,14 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_extra(ckpt_dir, step: int) -> dict:
+    """The manifest's ``extra`` payload, without touching the arrays —
+    keeps the on-disk layout (dir naming, manifest schema) private to this
+    module for callers that only need provenance (e.g. recipe artifacts)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / _MANIFEST).read_text())["extra"]
+
+
 def restore(ckpt_dir, step: int, template, shardings=None, verify: bool = True):
     """Restore into the structure of ``template`` (shapes/dtypes checked).
 

@@ -34,6 +34,7 @@ from .policy import (
     DECISION_MIXED,
     DECISION_SKIP,
     M2QPolicy,
+    PathOverride,
     ShapeCtx,
     decide,
     dense_intensity,

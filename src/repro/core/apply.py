@@ -1,14 +1,25 @@
 """quantize_model: rewrite a float param tree into M2Q QTensors.
 
+This is the MECHANISM layer.  The public entry point for consumers is
+:mod:`repro.recipe` — ``quantize(arch, params, recipe)`` resolves a
+declarative :class:`~repro.recipe.QuantRecipe` (policy + rules + FFN fold
+groups + per-path overrides + calibration spec, with named presets and
+per-arch defaults) and drives the calibrate -> scheme-select -> quantize
+pipeline below, returning a persistable ``QuantizedModel`` artifact.  Call
+sites should not re-wire this module by hand.
+
 Models declare *which* weights are quantizable and *what kind* they are via
 QUANT_RULES — an ordered list of ``(regex, kind)`` matched against the
 canonical tree path (first match wins; see core.policy for kinds).  The
-policy + deployment ShapeCtx then decide mixed-scheme vs low-bit per weight,
-and the MSE scheme selector (Eq. 6) splits mixed layers' filters between
-uniform-8bit and APoT.
+policy + deployment ShapeCtx then decide mixed-scheme vs low-bit per weight
+(optionally pinned per path by :class:`~repro.core.policy.PathOverride`
+regexes), and the MSE scheme selector (Eq. 6) splits mixed layers' filters
+between uniform-8bit and APoT.
 
 Returns (qparams, report) where report is a per-layer record used by the
-benchmarks and the accelerator simulator.
+benchmarks, the accelerator simulator, and the artifact save/load path
+(``abstract_quantize_model`` consumes the reported (n_uniform, n_apot)
+splits to rebuild exact treedefs without re-quantizing).
 """
 from __future__ import annotations
 
@@ -28,6 +39,93 @@ from .quant import (act_scale_from_stats, fake_quant_pot, fake_quant_apot,
                     fake_quant_uniform)
 
 Rule = Tuple[str, str]  # (path regex, layer kind)
+Override = Tuple[str, pol.PathOverride]  # (path regex, override)
+
+
+def _match_override(overrides: Optional[Sequence[Override]],
+                    path: str) -> Optional[pol.PathOverride]:
+    for pattern, ov in overrides or ():
+        if re.search(pattern, path):
+            return ov
+    return None
+
+
+def resolve_decision(key: str, kind: str, dec_shape: tuple,
+                     shape_ctx: pol.ShapeCtx, p: pol.M2QPolicy,
+                     overrides: Optional[Sequence[Override]] = None):
+    """(decision, effective_policy) for one leaf, honoring path overrides.
+
+    Shared by the concrete and abstract paths so they agree by construction.
+    ``scheme``/``bits`` overrides rewrite the policy for this leaf only;
+    a ``decision`` override replaces the intensity classification (but an
+    embedding can never be mixed — its gather path needs per-row uniform).
+    """
+    ov = _match_override(overrides, key)
+    p_leaf = p
+    if ov is not None and (ov.scheme is not None or ov.bits is not None):
+        p_leaf = dataclasses.replace(
+            p,
+            compute_scheme=ov.scheme if ov.scheme is not None
+            else p.compute_scheme,
+            memory_bits=ov.bits if ov.bits is not None else p.memory_bits)
+    decision = pol.decide(kind, dec_shape, shape_ctx, p_leaf)
+    if ov is not None and ov.decision is not None:
+        if ov.decision == pol.DECISION_MIXED and kind == pol.KIND_EMBEDDING:
+            raise ValueError(
+                f"override for {key!r}: an embedding cannot be mixed-scheme "
+                "(nn.embed gathers integer rows, which needs per-row "
+                "uniform quantization)")
+        decision = ov.decision
+    return decision, p_leaf
+
+
+def resolve_fold_groups(flat_shapes: Dict[str, tuple],
+                        ffn_groups: Optional[Sequence[tuple]],
+                        shape_ctx: pol.ShapeCtx, p: pol.M2QPolicy,
+                        overrides: Optional[Sequence[Override]] = None
+                        ) -> List[Tuple[str, Optional[str], str]]:
+    """Resolve which FFN groups WILL be perm-folded: (ku, kg|None, kd) key
+    triples.  Shared by quantize_model and abstract_quantize_model so group
+    membership agrees by construction — a group folds only when EVERY
+    quantized member (up AND gate) resolves to (mixed, m2q) under the
+    per-path overrides; a single diverging member drops the whole group
+    back to ordinary per-leaf quantization on both paths.
+
+    The FIRST group whose members all resolve to existing leaves CLAIMS
+    those keys whether or not it folds: a later (fallback) pattern must
+    never fold a subset of a gated group — permuting w_up's columns without
+    w_gate's misaligns the elementwise product in the forward."""
+    if not ffn_groups or p.compute_scheme != "m2q":
+        return []
+
+    def find(rx):
+        if rx is None:
+            return None
+        hits = [k for k in flat_shapes if re.search(rx, k)]
+        return hits[0] if len(hits) == 1 else None
+
+    out: List[Tuple[str, Optional[str], str]] = []
+    used_up, used_down = set(), set()
+    for up_re, gate_re, down_re in ffn_groups:
+        ku, kg, kd = find(up_re), find(gate_re), find(down_re)
+        if ku is None or kd is None or (gate_re and kg is None):
+            continue
+        if ku in used_up or kd in used_down:
+            continue  # claimed by an earlier (gated) group
+        used_up.add(ku)
+        if kg is not None:
+            used_up.add(kg)
+        used_down.add(kd)
+        members_ok = True
+        for k in (ku,) if kg is None else (ku, kg):
+            dec, pk = resolve_decision(k, pol.KIND_DENSE,
+                                       tuple(flat_shapes[k][-2:]),
+                                       shape_ctx, p, overrides)
+            if dec != pol.DECISION_MIXED or pk.compute_scheme != "m2q":
+                members_ok = False
+        if members_ok:
+            out.append((ku, kg, kd))
+    return out
 
 
 @dataclasses.dataclass
@@ -149,11 +247,14 @@ def quantize_model(
     m2q_policy: Optional[pol.M2QPolicy] = None,
     act_stats: Optional[Dict[str, float]] = None,
     ffn_groups: Optional[Sequence[tuple]] = None,
+    overrides: Optional[Sequence[Override]] = None,
 ):
     """Apply M2Q to ``params``. Non-matching leaves pass through unchanged.
 
     ``ffn_groups``: (up_re, gate_re_or_None, down_re) path-regex triples for
-    perm-folded FFN quantization (see _joint_group_quantize)."""
+    perm-folded FFN quantization (see _joint_group_quantize).
+    ``overrides``: ordered (path regex, PathOverride) pairs — first match
+    wins; see :func:`resolve_decision`."""
     p = m2q_policy or pol.M2QPolicy()
     act_stats = act_stats or {}
     report: List[LayerReport] = []
@@ -164,25 +265,13 @@ def quantize_model(
     if ffn_groups and p.compute_scheme == "m2q":
         flat = {path_str(path): leaf for path, leaf in
                 jax.tree_util.tree_flatten_with_path(params)[0]}
-
-        def find(rx):
-            if rx is None:
-                return None
-            hits = [k for k in flat if re.search(rx, k)]
-            return hits[0] if len(hits) == 1 else None
-
-        for up_re, gate_re, down_re in ffn_groups:
-            ku, kg, kd = find(up_re), find(gate_re), find(down_re)
-            if ku is None or kd is None or (gate_re and kg is None):
-                continue
-            if ku in pre or kd in permuted_down:
-                continue  # already folded by an earlier (gated) group
-            w_up = jnp.asarray(flat[ku], jnp.float32)
-            if pol.decide(pol.KIND_DENSE, tuple(w_up.shape[-2:]), shape_ctx,
-                          p) != pol.DECISION_MIXED:
-                continue
+        groups = resolve_fold_groups(
+            {k: tuple(l.shape) for k, l in flat.items()
+             if hasattr(l, "shape")},
+            ffn_groups, shape_ctx, p, overrides)
+        for ku, kg, kd in groups:
             q_up, q_gate, w_down = _joint_group_quantize(
-                w_up,
+                jnp.asarray(flat[ku], jnp.float32),
                 None if kg is None else jnp.asarray(flat[kg], jnp.float32),
                 jnp.asarray(flat[kd], jnp.float32), p.apot_ratio)
             pre[ku] = q_up
@@ -221,7 +310,8 @@ def quantize_model(
             dec_shape = tuple(leaf.shape[1:])
         else:
             dec_shape = tuple(leaf.shape)
-        decision = pol.decide(kind, dec_shape, shape_ctx, p)
+        decision, p_leaf = resolve_decision(key, kind, dec_shape, shape_ctx,
+                                            p, overrides)
         if decision == pol.DECISION_SKIP:
             return leaf
         # activation stats: plain key, or per-layer '@i' keys for stacked
@@ -229,11 +319,16 @@ def quantize_model(
         if ams is None and leaf.ndim >= 3 and not conv:
             per = [act_stats.get(f"{key}@{i}") for i in range(leaf.shape[0])]
             if all(v is not None for v in per):
-                ams = np.asarray(per, np.float32).reshape(leaf.shape[0], 1, 1)
+                # per-layer scalar stats broadcast over ALL trailing axes:
+                # (L,1,1) for stacked dense, (L,1,1,1) for stacked experts —
+                # must mirror the abstract twin's _act_shape exactly or the
+                # load-template treedef diverges on MoE artifacts
+                ams = np.asarray(per, np.float32).reshape(
+                    (leaf.shape[0],) + (1,) * (leaf.ndim - 1))
         w = jnp.asarray(leaf, jnp.float32)
         if conv:
             w = w.reshape(-1, w.shape[-1])
-        qt = _quantize_leaf(w, kind, decision, p, ams)
+        qt = _quantize_leaf(w, kind, decision, p_leaf, ams)
         if conv:
             qt = dataclasses.replace(qt, shape=tuple(leaf.shape))
         rep = LayerReport(path=key, kind=kind, decision=decision,
@@ -266,20 +361,35 @@ def abstract_quantize_model(
     m2q_policy: Optional[pol.M2QPolicy] = None,
     with_act_scales: bool = True,
     ffn_groups: Optional[Sequence[tuple]] = None,
+    overrides: Optional[Sequence[Override]] = None,
+    m2q_splits: Optional[Dict[str, Tuple[int, int]]] = None,
 ):
-    """Shape-only twin of quantize_model for the multi-pod dry-run: takes a
-    ShapeDtypeStruct param tree (jax.eval_shape of init) and returns QTensor
-    leaves whose payloads are ShapeDtypeStructs — the exact serving pytree,
-    no data, no allocation.  Decisions depend only on shapes, so this agrees
-    with the concrete path by construction (tested in test_quant.py)."""
+    """Shape-only twin of quantize_model for the multi-pod dry-run and the
+    QuantizedModel load path: takes a ShapeDtypeStruct param tree
+    (jax.eval_shape of init) and returns QTensor leaves whose payloads are
+    ShapeDtypeStructs — the exact serving pytree, no data, no allocation.
+    Decisions depend only on shapes, so this agrees with the concrete path
+    by construction (tested in test_quant.py).
+
+    ``m2q_splits``: path -> (n_uniform, n_apot) aux counts, e.g. recovered
+    from saved LayerReports.  Required for leaves whose concrete Eq. 6
+    split is data-dependent (``apot_ratio=None`` on a plain 2-D or conv
+    leaf) — without it those leaves raise instead of silently assuming the
+    1:1 default the concrete path would not have used."""
     from .quant import _reduction_axes  # shared stats-axis resolution
     p = m2q_policy or pol.M2QPolicy()
-    fold_res = []
-    if ffn_groups and p.compute_scheme == "m2q":
-        for up_re, gate_re, _ in ffn_groups:
-            fold_res.append(up_re)
-            if gate_re:
-                fold_res.append(gate_re)
+    # fold membership comes from the SAME group resolver as the concrete
+    # pre-pass (shapes suffice), so the two paths cannot disagree on which
+    # members are perm-folded even under per-path overrides
+    flat_shapes = {path_str(path): tuple(leaf.shape) for path, leaf in
+                   jax.tree_util.tree_flatten_with_path(params_abs)[0]
+                   if hasattr(leaf, "shape")}
+    fold_keys = set()
+    for ku, kg, _ in resolve_fold_groups(flat_shapes, ffn_groups, shape_ctx,
+                                         p, overrides):
+        fold_keys.add(ku)
+        if kg is not None:
+            fold_keys.add(kg)
 
     def _act_shape(shape, stacked):
         # stacked (scanned-over) leaves need a per-layer leading axis so the
@@ -308,18 +418,41 @@ def abstract_quantize_model(
                      if act else None,
                      shape=tuple(shape))
 
-    def q_m2q(shape, reduce_axes=None, act=False, stacked=False, cls=None):
+    def _m2q_split(key, n, data_dependent):
+        """(n_uniform, n_apot) aux counts mirroring select_schemes' floor
+        rule — from explicit m2q_splits when given, else the policy ratio.
+        ratio=None (Eq. 6 argmin) is data-dependent on plain 2-D and conv
+        leaves; batched/perm-folded leaves coerce None -> 0.5 concretely
+        (see _batched_m2q / _joint_group_quantize), so the twin does too."""
+        if m2q_splits and key in m2q_splits:
+            nu, na = int(m2q_splits[key][0]), int(m2q_splits[key][1])
+            if nu + na != n:
+                raise ValueError(
+                    f"m2q_splits[{key!r}] = ({nu}, {na}) does not sum to "
+                    f"the filter count {n}")
+            return nu, na
+        ratio = p.apot_ratio
+        if ratio is None:
+            if data_dependent:
+                raise ValueError(
+                    f"apot_ratio=None (Eq. 6 argmin) gives a data-dependent "
+                    f"uniform/APoT split for {key!r} that the shape-only "
+                    "twin cannot know; pass m2q_splits={path: (n_uniform, "
+                    "n_apot)} (e.g. from the saved LayerReports of a "
+                    "QuantizedModel artifact) or use a fixed apot_ratio")
+            ratio = 0.5
+        n_apot = int(n * ratio)
+        return n - n_apot, n_apot
+
+    def q_m2q(shape, reduce_axes=None, act=False, stacked=False, cls=None,
+              *, key, data_dependent=False):
         # merged permutation-free layout: one byte payload + three
         # zero-masked per-column scale rows (see core.qtensor).  The split
-        # counts live in treedef aux, so they must mirror select_schemes'
-        # floor rule under the policy's ratio.  ratio=None (Eq. 6 argmin)
-        # has a data-dependent split the shape-only twin cannot know; the
-        # 1:1 default is assumed there.
+        # counts live in treedef aux — resolved by _m2q_split above.
         red = _reduction_axes(len(shape), -1, reduce_axes)
         ks = _keepdims(shape, red)
         n = shape[-1]
-        ratio = p.apot_ratio if p.apot_ratio is not None else 0.5
-        n_apot = int(n * ratio)
+        n_uniform, n_apot = _m2q_split(key, n, data_dependent)
         if cls is None:
             cls = QM2Q if len(shape) == 2 else QExpertM2Q
         return cls(
@@ -327,7 +460,7 @@ def abstract_quantize_model(
             u_zp=_sds(ks, jnp.float32), a_scale=_sds(ks, jnp.float32),
             act_scale=_sds(_act_shape(shape, stacked), jnp.float32)
             if act else None,
-            shape=tuple(shape), n_uniform=n - n_apot, n_apot=n_apot)
+            shape=tuple(shape), n_uniform=n_uniform, n_apot=n_apot)
 
     def visit(path, leaf):
         if not hasattr(leaf, "shape"):
@@ -344,7 +477,10 @@ def abstract_quantize_model(
             dec_shape = shape[1:]
         else:
             dec_shape = shape
-        decision = pol.decide(kind, dec_shape, shape_ctx, p)
+        decision, p_leaf = resolve_decision(key, kind, dec_shape, shape_ctx,
+                                            p, overrides)
+        if decision == pol.DECISION_SKIP:
+            return leaf
         batched = (kind in (pol.KIND_DENSE, pol.KIND_HEAD, pol.KIND_EXPERT)
                    and ndim >= 3)
         act = with_act_scales and p.quantize_activations
@@ -353,39 +489,38 @@ def abstract_quantize_model(
         if ndim == 4 and kind in (pol.KIND_DENSE, pol.KIND_DWCONV):
             flat = (int(np.prod(shape[:-1])), int(shape[-1]))
             if decision == pol.DECISION_LOWBIT:
-                qt = q_uniform(flat, p.memory_bits, -1)
-            elif p.compute_scheme == "uniform8":
+                qt = q_uniform(flat, p_leaf.memory_bits, -1)
+            elif p_leaf.compute_scheme == "uniform8":
                 qt = q_uniform(flat, 8, -1, act=act)
-            elif p.compute_scheme == "apot":
+            elif p_leaf.compute_scheme == "apot":
                 qt = q_apot(flat, act=act)
             else:
-                qt = q_m2q(flat, None, act=act)
+                qt = q_m2q(flat, None, act=act, key=key, data_dependent=True)
             return dataclasses.replace(qt, shape=shape)
-        if decision == pol.DECISION_MIXED and p.compute_scheme == "m2q" and \
-                any(re.search(rx, key) for rx in fold_res):
+        if key in fold_keys:
             # perm-folded group member: merged [uniform | apot] column order,
             # no act scale (consumer rows were permuted offline); stacked
             # groups keep the QM2Q class (3-D children via tree.map stack)
             ra2 = (ndim - 2,) if ndim >= 3 else None
-            return q_m2q(shape, ra2, cls=QM2Q)
+            return q_m2q(shape, ra2, cls=QM2Q, key=key)
         if decision == pol.DECISION_LOWBIT:
             if kind == pol.KIND_EMBEDDING:
-                return q_uniform(shape, p.memory_bits, 0)
+                return q_uniform(shape, p_leaf.memory_bits, 0)
             ra = (ndim - 2,) if batched else None
-            return q_uniform(shape, p.memory_bits, -1, ra)
+            return q_uniform(shape, p_leaf.memory_bits, -1, ra)
         # 'stacked' = carries a scanned leading layer axis (dense 3-D or
         # expert 4-D); bare 3-D experts are vmapped over E, not scanned.
         stacked = (kind in (pol.KIND_DENSE, pol.KIND_HEAD) and ndim == 3) or \
             (kind == pol.KIND_EXPERT and ndim == 4)
         ra = (ndim - 2,) if batched else None
-        if p.compute_scheme == "uniform8":
+        if p_leaf.compute_scheme == "uniform8":
             return q_uniform(shape, 8, -1, ra, act=act, stacked=stacked)
-        if p.compute_scheme == "apot":
+        if p_leaf.compute_scheme == "apot":
             return q_apot(shape, ra, act=act, stacked=stacked)
-        # m2q: 1:1 split of the filter axis, merged byte layout
+        # m2q: ratio-governed split of the filter axis, merged byte layout
         if ndim == 2:
-            return q_m2q(shape, None, act=act)
-        return q_m2q(shape, (ndim - 2,), act=act, stacked=stacked)
+            return q_m2q(shape, None, act=act, key=key, data_dependent=True)
+        return q_m2q(shape, (ndim - 2,), act=act, stacked=stacked, key=key)
 
     return jax.tree_util.tree_map_with_path(visit, params_abs)
 

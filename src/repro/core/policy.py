@@ -59,6 +59,36 @@ class M2QPolicy:
     intensity_threshold: float = 64.0
 
 
+@dataclasses.dataclass(frozen=True)
+class PathOverride:
+    """Per-path quantization override (matched by regex in recipe/apply).
+
+    Any unset field falls through to the policy + intensity classifier.
+    ``decision`` pins the mixed/lowbit/skip choice for matching weights —
+    this is the principled replacement for steering ``intensity_threshold``
+    to force the paper's structural taxonomy onto reduced-size configs.
+    ``scheme`` / ``bits`` override the policy's ``compute_scheme`` /
+    ``memory_bits`` for matching leaves only.
+    """
+
+    decision: Optional[str] = None  # DECISION_MIXED | DECISION_LOWBIT | DECISION_SKIP
+    scheme: Optional[str] = None    # "m2q" | "uniform8" | "apot"
+    bits: Optional[int] = None      # low-bit width (3..8)
+
+    def __post_init__(self):
+        if self.decision not in (None, DECISION_MIXED, DECISION_LOWBIT,
+                                 DECISION_SKIP):
+            raise ValueError(f"unknown decision override {self.decision!r}")
+        if self.scheme not in (None, "m2q", "uniform8", "apot"):
+            # a typo here would raise at concrete quantize time but be
+            # silently treated as "m2q" by the abstract twin's else-branch
+            raise ValueError(f"unknown scheme override {self.scheme!r}")
+        if self.bits is not None and not 3 <= self.bits <= 8:
+            # >8 would wrap in the uint8 byte payload, <3 is not a sweep
+            # config — both corrupt weights silently downstream
+            raise ValueError(f"bits override {self.bits!r} outside 3..8")
+
+
 def dense_intensity(k: int, n: int, tokens: float, weight_bits: int = 8,
                     act_bytes: int = 2) -> float:
     """FLOPs/byte of y[T,N] = x[T,K] @ w[K,N]."""

@@ -423,9 +423,18 @@ def qmatmul(x: jax.Array, w) -> jax.Array:
 
 
 def weight_bits(qt) -> float:
-    """Average stored bits/weight (drives bandwidth modelling + reporting)."""
+    """Average STORED bits/weight (drives bandwidth modelling + reporting).
+
+    This is the width the serving path actually moves through HBM, not the
+    nominal quantization width: only bits=4 payloads are nibble-packed, so
+    the 3/5/6/7-bit Table II sweep configs occupy (and stream) one full
+    byte per weight and must report 8.0 — reporting the nominal width there
+    understated their bandwidth cost relative to the packed bits=4 case.
+    """
     if isinstance(qt, QUniform):
-        return float(qt.bits)
+        if qt.bits == 4:
+            return 4.0  # nibble-packed: stored == nominal
+        return 8.0 if qt.bits < 8 else float(qt.bits)  # byte-stored payloads
     if isinstance(qt, QAPoT):
         return 8.0  # one byte per code (7 useful bits)
     if isinstance(qt, (QM2Q, QExpertM2Q)):

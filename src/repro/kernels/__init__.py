@@ -6,7 +6,9 @@
 #   dwconv_w4   — 4-bit depthwise conv (the paper's memory-intensive case)
 # ops.py: jit'd wrappers (padding/dispatch); ref.py: pure-jnp oracles.
 from .ops import (
+    DispatchConfig,
     apot_matmul_op,
+    dispatch,
     dwconv_w4_op,
     int4_matmul_op,
     int8_matmul_op,

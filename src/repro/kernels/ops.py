@@ -14,9 +14,22 @@ original filter order, the fused kernel emits ONE output array, and the old
 concatenate + ``jnp.take`` inverse-permutation epilogue is gone.  Activation
 quantization is fused into the m2q/int8 kernel prologues, so these entry
 points take FLOAT activations plus a scalar scale.
+
+Dispatch control is LAYERED (see :class:`DispatchConfig`):
+
+1. a scoped :func:`dispatch` context (programmatic, nestable — what tests
+   and the serving engines use),
+2. the ``REPRO_PALLAS_DISPATCH`` / ``REPRO_PALLAS_CONV_DISPATCH`` env vars
+   (process-wide defaults; this module is the ONLY place they are read),
+3. the backend default (kernels on a real TPU, pure-XLA QTensor paths
+   elsewhere — the interpret path is a correctness harness, not a fast
+   path).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import dataclasses
 import os
 from functools import partial
 from typing import Optional, Tuple
@@ -38,17 +51,93 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Scoped kernel-dispatch switches; ``None`` inherits the next layer.
+
+    ``dense`` steers QTensor matmuls (nn.dense and quantized 1x1 PWConvs),
+    ``conv`` steers the conv paths specifically and follows ``dense`` when
+    unset — the same split the ``REPRO_PALLAS_DISPATCH`` /
+    ``REPRO_PALLAS_CONV_DISPATCH`` env vars expose.  The env vars are the
+    process-wide defaults consulted only when NO scope field applies: any
+    scoped field beats both env vars, so a scope with ``dense=True`` also
+    re-enables conv paths over ``REPRO_PALLAS_CONV_DISPATCH=0`` (pass
+    ``conv=False`` explicitly to keep conv pinned).  Enter a scope with
+    :func:`dispatch` (a nestable context manager), or hand the config to a
+    serving engine (``Engine``/``VisionEngine`` take ``dispatch=``) to pin
+    its traces regardless of ambient state.
+
+    NOTE: dispatch is consulted at TRACE time; a jit cache keyed only on
+    shapes will serve a stale trace if the config flips between calls of
+    the same function object (use fresh closures per scope, as the HLO
+    tests do).
+    """
+
+    dense: Optional[bool] = None
+    conv: Optional[bool] = None
+
+    def layered_over(self, base: "DispatchConfig") -> "DispatchConfig":
+        return DispatchConfig(
+            dense=self.dense if self.dense is not None else base.dense,
+            conv=self.conv if self.conv is not None else base.conv)
+
+
+_DISPATCH_SCOPE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dispatch_scope", default=DispatchConfig())
+
+
+def active_dispatch() -> DispatchConfig:
+    """The currently scoped DispatchConfig (all-None outside any scope)."""
+    return _DISPATCH_SCOPE.get()
+
+
+@contextlib.contextmanager
+def dispatch(config: Optional[DispatchConfig] = None, *,
+             dense: Optional[bool] = None, conv: Optional[bool] = None):
+    """Scope kernel dispatch programmatically (nestable; None inherits).
+
+        with ops.dispatch(dense=True):          # force kernels on
+            ...
+            with ops.dispatch(conv=False):      # ...but XLA conv paths here
+                ...
+
+    Takes an explicit :class:`DispatchConfig`, the ``dense=`` / ``conv=``
+    fields directly, or both — explicit fields layer over the config.  The
+    scope overrides the env-var process defaults; unset fields fall through
+    to the enclosing scope, then the env vars, then the backend default.
+    """
+    ov = DispatchConfig(dense, conv)
+    if config is not None:
+        ov = ov.layered_over(config)
+    token = _DISPATCH_SCOPE.set(ov.layered_over(_DISPATCH_SCOPE.get()))
+    try:
+        yield
+    finally:
+        _DISPATCH_SCOPE.reset(token)
+
+
+def _env_flag(name: str) -> Optional[bool]:
+    env = os.environ.get(name)
+    if env is None:
+        return None
+    return env.strip().lower() not in ("", "0", "false")
+
+
 def dispatch_enabled() -> bool:
     """Should nn.dense route QTensor matmuls through the Pallas kernels?
 
-    Default: only on a real TPU backend (the interpret path is a Python
-    correctness harness, ~1000x slower than XLA on CPU — wiring it into
-    serving would tank the engine).  ``REPRO_PALLAS_DISPATCH=1/0``
-    overrides either way (tests force it on to exercise the wiring).
+    Resolution order: active :func:`dispatch` scope -> the
+    ``REPRO_PALLAS_DISPATCH=1/0`` env var (process default; tests force it
+    on to exercise the wiring) -> backend default (only on a real TPU: the
+    interpret path is a Python correctness harness, ~1000x slower than XLA
+    on CPU — wiring it into serving would tank the engine).
     """
-    env = os.environ.get("REPRO_PALLAS_DISPATCH")
+    scoped = _DISPATCH_SCOPE.get().dense
+    if scoped is not None:
+        return scoped
+    env = _env_flag("REPRO_PALLAS_DISPATCH")
     if env is not None:
-        return env.strip().lower() not in ("", "0", "false")
+        return env
     return jax.default_backend() == "tpu"
 
 
@@ -56,15 +145,21 @@ def conv_dispatch_enabled() -> bool:
     """Should nn.conv2d route QTensor convolutions through the Pallas
     kernels (PWConv -> m2q/int8/int4 matmul, depthwise -> dwconv_w4)?
 
-    ``REPRO_PALLAS_CONV_DISPATCH=1/0`` overrides just the conv paths;
-    otherwise the global :func:`dispatch_enabled` switch applies.  Note the
-    quantized 1x1 PWConv never falls back to a dequantized-weight f32
-    convolution: with dispatch off it still runs the pure-XLA QTensor
-    *matmul* path (see nn.layers.conv2d).
+    Resolution order: active scope ``conv`` -> active scope ``dense`` ->
+    the ``REPRO_PALLAS_CONV_DISPATCH=1/0`` env var (conv-only process
+    default) -> :func:`dispatch_enabled`.  Note the quantized 1x1 PWConv
+    never falls back to a dequantized-weight f32 convolution: with dispatch
+    off it still runs the pure-XLA QTensor *matmul* path (see
+    nn.layers.conv2d).
     """
-    env = os.environ.get("REPRO_PALLAS_CONV_DISPATCH")
+    scope = _DISPATCH_SCOPE.get()
+    if scope.conv is not None:
+        return scope.conv
+    if scope.dense is not None:
+        return scope.dense
+    env = _env_flag("REPRO_PALLAS_CONV_DISPATCH")
     if env is not None:
-        return env.strip().lower() not in ("", "0", "false")
+        return env
     return dispatch_enabled()
 
 

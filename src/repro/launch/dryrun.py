@@ -26,9 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.registry import ARCHS, ASSIGNED
-from ..core.apply import abstract_quantize_model
-from ..core.policy import M2QPolicy, ShapeCtx
 from ..dist import sharding as shd
+from ..recipe import abstract_quantize
 from ..models import get_model
 from ..optim.adamw import AdamW
 from ..train.step import TrainStepConfig, make_train_step, make_serve_step
@@ -155,13 +154,9 @@ def build_cell(cfg, shape, mesh, quantize_serving=True, fsdp=True,
 
     # serving shapes: quantized weights (the paper's deployment scenario)
     tokens_per_step = shape.batch * (shape.seq if shape.kind == "prefill" else 1)
-    ctx = ShapeCtx(tokens_per_step=tokens_per_step,
-                   moe_top_k=max(cfg.moe_top_k, 1),
-                   moe_num_experts=max(cfg.moe_experts, 1))
     if quantize_serving:
-        qparams = abstract_quantize_model(
-            params_abs, model.QUANT_RULES, ctx, M2QPolicy(),
-            ffn_groups=getattr(model, "FFN_FOLD_GROUPS", None))
+        qparams = abstract_quantize(cfg, params_abs,
+                                    tokens_per_step=tokens_per_step)
     else:
         qparams = params_abs
     meta["serving_weight_bytes"] = sum(

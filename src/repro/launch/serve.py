@@ -7,39 +7,29 @@ requests through the continuous-batching engine.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs.registry import ARCHS, REDUCED
-from ..core import M2QPolicy, ShapeCtx, quantize_model, wrap_for_calibration
-from ..core.calibrate import rule_matcher
 from ..models import get_model
+from ..recipe import QuantizedModel, as_recipe, quantize
 from ..serving.engine import Engine
 
 
 def quantize_for_serving(cfg, params, batch: int = 2, calib_len: int = 32,
-                         policy: M2QPolicy = None):
-    """Offline PTQ: calibrate on random prompts, then apply M2Q."""
-    model = get_model(cfg)
-    wrapped, store = wrap_for_calibration(params, rule_matcher(model.QUANT_RULES))
-    rng = np.random.default_rng(0)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, calib_len),
-                                    dtype=np.int32))
-    model.forward(cfg, wrapped, toks, unroll=True)
-    ctx = ShapeCtx(tokens_per_step=batch,  # decode deployment shape
-                   moe_top_k=max(cfg.moe_top_k, 1),
-                   moe_num_experts=max(cfg.moe_experts, 1))
-    if policy is None and cfg.d_model <= 256:
-        # reduced demo configs: everything is memory-bound at tiny dims;
-        # lower the threshold so the mixed-scheme path is exercised
-        policy = M2QPolicy(intensity_threshold=0.5)
-    qparams, report = quantize_model(
-        params, model.QUANT_RULES, ctx, policy, act_stats=store,
-        ffn_groups=getattr(model, "FFN_FOLD_GROUPS", None))
-    return qparams, report
+                         recipe="m2q-w8a8") -> QuantizedModel:
+    """Offline PTQ via the recipe API: calibrate on random prompts, apply
+    M2Q, return the persistable artifact (reduced demo configs get the
+    taxonomy-pinning arch defaults from QuantRecipe.resolve).  Only the
+    prompt shape is overridden; the recipe's other CalibSpec fields
+    (batches, seed) are kept."""
+    rec = as_recipe(recipe)
+    rec = rec.replace(calib=dataclasses.replace(
+        rec.calib, batch_size=batch, seq_len=calib_len))
+    return quantize(cfg, params, rec)
 
 
 def main():
@@ -57,11 +47,14 @@ def main():
     model = get_model(cfg)
     params = model.init(cfg, jax.random.PRNGKey(0))
     if not args.no_quant:
-        params, report = quantize_for_serving(cfg, params)
-        bits = {r.path: r.bits for r in report}
-        print(f"[serve] quantized {len(report)} layers; "
+        qm = quantize_for_serving(cfg, params)
+        bits = {r.path: r.bits for r in qm.report}
+        print(f"[serve] quantized {len(qm.report)} layers; "
               f"avg bits={np.mean(list(bits.values())):.2f}")
-    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len)
+        eng = qm.serve(max_batch=args.max_batch, max_len=args.max_len)
+    else:
+        eng = Engine(cfg, params, max_batch=args.max_batch,
+                     max_len=args.max_len)
     rng = np.random.default_rng(1)
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))

@@ -33,6 +33,18 @@ QUANT_RULES = [
     (r"head/w", pol.KIND_DENSE),
 ]
 
+# Per-arch recipe defaults (see repro.recipe): the paper's Sec. III-A split
+# is STRUCTURAL — PWConv/MatMul are computation-intensive, DWConv memory-
+# intensive — independent of deployment shape, so pin every dense-kind path
+# to the mixed decision instead of steering intensity_threshold (the
+# reduced proxy's widths sit far below any MXU ridge point and would
+# otherwise classify memory-bound).  DWConv/embedding stay structurally
+# low-bit in policy.decide regardless of these overrides.
+QUANT_OVERRIDES = (
+    (r"(w_pw\d?|w_in|w_out|w_qkv|w_proj|head/w)",
+     pol.PathOverride(decision=pol.DECISION_MIXED)),
+)
+
 
 # ---------------------------------------------------------------------------
 # init

@@ -1,0 +1,504 @@
+"""One-call quantization API: ``QuantRecipe`` -> ``QuantizedModel`` artifact.
+
+This module is the single public entry point for the paper's M2Q flow
+(PTQ activation calibration -> Eq. 6 scheme selection -> mixed-precision /
+mixed-scheme quantization -> heterogeneous-engine execution).  Consumers
+declare *what* they want as a :class:`QuantRecipe` — policy, rules, FFN
+fold groups, per-path overrides, and a calibration spec, with named presets
+and per-arch defaults resolved from the model module + configs registry —
+and call :func:`quantize` once:
+
+    from repro.recipe import quantize
+
+    qm = quantize("qwen1.5-0.5b", params, "m2q-w8a8")
+    logits = qm.forward(tokens)
+    engine = qm.serve(max_batch=8)          # token or vision engine, by modality
+    qm.save("ckpts/qwen-m2q")               # persist: never re-quantizes
+    qm2 = QuantizedModel.load("ckpts/qwen-m2q")   # HLO-identical forward
+
+The artifact carries qparams + per-layer :class:`LayerReport`s + the recipe
++ activation-stats provenance, and round-trips through ``ckpt.checkpoint``
+via the abstract twin: ``core.apply.abstract_quantize_model`` rebuilds the
+exact serving treedef (including data-dependent Eq. 6 splits, recovered
+from the saved reports), so ``load`` restores bytes into structure without
+touching the float weights again.
+
+Kernel dispatch is scoped, not global: see ``kernels.ops.DispatchConfig``.
+Engines constructed via :meth:`QuantizedModel.serve` accept ``dispatch=``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from .core import apply as _apply
+from .core import policy as pol
+from .core.apply import LayerReport, abstract_quantize_model, quantize_model
+from .core.calibrate import rule_matcher, run_calibration, wrap_for_calibration
+from .core.policy import M2QPolicy, PathOverride, ShapeCtx
+from .ckpt import checkpoint as ckpt
+from .models import get_model
+from .models.config import ArchConfig
+
+# families whose calibration inputs quantize() can synthesize on its own
+_TOKEN_FAMILIES = ("dense_lm", "moe_lm", "rwkv", "recurrentgemma")
+
+
+# ---------------------------------------------------------------------------
+# recipe
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibSpec:
+    """PTQ calibration spec (paper Sec. V-A) for synthesized batches.
+
+    Used when :func:`quantize` is not handed explicit ``calib_batches``:
+    token families get ``batches`` random prompts of ``(batch_size,
+    seq_len)``; the vision family gets random ``(batch_size, res, res, 3)``
+    images.  ``batch_size`` also seeds the default deployment ShapeCtx.
+    """
+
+    batches: int = 4
+    batch_size: int = 2
+    seq_len: int = 32
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """Declarative description of one quantization run.
+
+    ``rules`` / ``ffn_groups`` default to the model module's QUANT_RULES /
+    FFN_FOLD_GROUPS; ``overrides`` are ordered ``(path regex,
+    PathOverride)`` pairs consulted before arch-default overrides (first
+    match wins) — the principled replacement for steering
+    ``intensity_threshold`` to pin the paper taxonomy on reduced configs.
+    ``tokens_per_step`` fixes the deployment ShapeCtx; None derives it from
+    the calibration batches (vision: batch * res^2 pixels; LM: decode
+    batch).
+    """
+
+    name: str = "m2q-w8a8"
+    policy: M2QPolicy = M2QPolicy()
+    rules: Optional[Tuple[_apply.Rule, ...]] = None
+    ffn_groups: Optional[Tuple[tuple, ...]] = None
+    overrides: Tuple[Tuple[str, PathOverride], ...] = ()
+    calib: CalibSpec = CalibSpec()
+    tokens_per_step: Optional[int] = None
+
+    def replace(self, **kw) -> "QuantRecipe":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self, abstract: bool = False) -> None:
+        """Fail fast on configurations that cannot do what's asked.
+
+        ``abstract=True``: the caller wants a shape-only twin (dry-run
+        compile, artifact save/load template).  ``apot_ratio=None`` (the
+        Eq. 6 argmin) makes the uniform/APoT split data-dependent, which a
+        shape-only tree cannot represent without per-layer split hints —
+        reject it here with a clear error instead of mis-building silently.
+        """
+        if self.policy.compute_scheme not in ("m2q", "uniform8", "apot"):
+            raise ValueError(
+                f"recipe {self.name!r}: unknown compute_scheme "
+                f"{self.policy.compute_scheme!r}")
+        if abstract and self.policy.compute_scheme == "m2q" \
+                and self.policy.apot_ratio is None:
+            raise ValueError(
+                f"recipe {self.name!r}: apot_ratio=None (Eq. 6 argmin) has "
+                "a data-dependent split and cannot produce an abstract "
+                "twin; use a fixed apot_ratio, or quantize concretely and "
+                "rebuild the treedef from the artifact's saved LayerReports "
+                "(QuantizedModel.abstract_params does this)")
+
+    def resolve(self, cfg: ArchConfig) -> "ResolvedRecipe":
+        """Bind the recipe to one architecture: fill rules/ffn_groups from
+        the model module, merge arch-default overrides, fix the ShapeCtx."""
+        model = get_model(cfg)
+        rules = tuple(self.rules if self.rules is not None
+                      else model.QUANT_RULES)
+        ffn_groups = self.ffn_groups
+        if ffn_groups is None:
+            ffn_groups = tuple(getattr(model, "FFN_FOLD_GROUPS", ()) or ())
+        overrides = tuple(self.overrides) + _arch_overrides(cfg, model, rules)
+        toks = self.tokens_per_step
+        if toks is None:
+            toks = _default_tokens_per_step(cfg, self.calib.batch_size)
+        ctx = ShapeCtx(tokens_per_step=toks,
+                       moe_top_k=max(cfg.moe_top_k, 1),
+                       moe_num_experts=max(cfg.moe_experts, 1))
+        return ResolvedRecipe(recipe=self, cfg=cfg, rules=rules,
+                              ffn_groups=ffn_groups, overrides=overrides,
+                              shape_ctx=ctx)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedRecipe:
+    """A QuantRecipe bound to one ArchConfig (all defaults filled in)."""
+
+    recipe: QuantRecipe
+    cfg: ArchConfig
+    rules: Tuple[_apply.Rule, ...]
+    ffn_groups: Tuple[tuple, ...]
+    overrides: Tuple[Tuple[str, PathOverride], ...]
+    shape_ctx: ShapeCtx
+
+    @property
+    def policy(self) -> M2QPolicy:
+        return self.recipe.policy
+
+
+def taxonomy_overrides(rules: Sequence[_apply.Rule]
+                       ) -> Tuple[Tuple[str, PathOverride], ...]:
+    """decision=mixed overrides for every compute-kind rule pattern — pins
+    the paper's STRUCTURAL taxonomy (PWConv/MatMul -> mixed, DWConv/embed ->
+    low-bit, enforced by kind in policy.decide) regardless of how far the
+    deployment shape sits below an MXU ridge point.  This is what the old
+    ``intensity_threshold=1.0`` / ``0.5`` call-site hacks approximated."""
+    return tuple(
+        (rx, PathOverride(decision=pol.DECISION_MIXED))
+        for rx, kind in rules
+        if kind in (pol.KIND_DENSE, pol.KIND_HEAD, pol.KIND_EXPERT))
+
+
+def _default_tokens_per_step(cfg: ArchConfig, batch: int) -> int:
+    if cfg.family == "efficientvit":
+        return batch * cfg.img_res * cfg.img_res  # pixels through a PWConv
+    return batch  # decode deployment shape (batch tokens per step)
+
+
+def _arch_overrides(cfg: ArchConfig, model, rules
+                    ) -> Tuple[Tuple[str, PathOverride], ...]:
+    """Per-arch default overrides: the model module's QUANT_OVERRIDES when
+    declared (efficientvit pins the paper taxonomy), else demo-size
+    steering for reduced LM configs whose every matmul is memory-bound at
+    tiny widths — without it the mixed-scheme path would never be exercised
+    in examples/tests (previously done by lowering intensity_threshold)."""
+    declared = getattr(model, "QUANT_OVERRIDES", None)
+    if declared is not None:
+        return tuple(declared)
+    if cfg.family != "efficientvit" and 0 < cfg.d_model <= 256:
+        return taxonomy_overrides(rules)
+    return ()
+
+
+# -- named presets -----------------------------------------------------------
+
+PRESETS: Dict[str, QuantRecipe] = {
+    # the paper's two-level flow: mixed uniform8/APoT on compute-intensive
+    # weights, 4-bit uniform on memory-intensive ones, W8A8 integer path
+    "m2q-w8a8": QuantRecipe(name="m2q-w8a8", policy=M2QPolicy()),
+    # single-scheme uniform W8A8 everywhere (the Trio-ViT baseline row)
+    "uniform8": QuantRecipe(
+        name="uniform8",
+        policy=M2QPolicy(compute_scheme="uniform8", memory_bits=8)),
+    # weights-only 4-bit (bandwidth play: no activation quantization, every
+    # quantizable weight low-bit regardless of intensity)
+    "w4-weights-only": QuantRecipe(
+        name="w4-weights-only",
+        policy=M2QPolicy(memory_bits=4, quantize_activations=False),
+        overrides=((r".", PathOverride(decision=pol.DECISION_LOWBIT)),)),
+}
+
+
+def as_recipe(recipe: Union[str, QuantRecipe]) -> QuantRecipe:
+    if isinstance(recipe, QuantRecipe):
+        return recipe
+    if recipe not in PRESETS:
+        raise KeyError(f"unknown recipe preset {recipe!r}; "
+                       f"available: {sorted(PRESETS)}")
+    return PRESETS[recipe]
+
+
+def _resolve_cfg(arch_or_cfg) -> ArchConfig:
+    if isinstance(arch_or_cfg, ArchConfig):
+        return arch_or_cfg
+    from .configs.registry import ARCHS, REDUCED
+    if arch_or_cfg in ARCHS:
+        return ARCHS[arch_or_cfg]
+    by_reduced_name = {c.name: c for c in REDUCED.values()}
+    if arch_or_cfg in by_reduced_name:
+        return by_reduced_name[arch_or_cfg]
+    raise KeyError(f"unknown arch {arch_or_cfg!r}")
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+def _synth_calib_batches(cfg: ArchConfig, spec: CalibSpec) -> List[np.ndarray]:
+    rng = np.random.default_rng(spec.seed)
+    if cfg.family == "efficientvit":
+        return [rng.normal(0, 1, (spec.batch_size, cfg.img_res, cfg.img_res,
+                                  3)).astype(np.float32)
+                for _ in range(spec.batches)]
+    if cfg.family in _TOKEN_FAMILIES:
+        return [rng.integers(0, cfg.vocab_size,
+                             (spec.batch_size, spec.seq_len),
+                             dtype=np.int32)
+                for _ in range(spec.batches)]
+    raise ValueError(
+        f"cannot synthesize calibration inputs for family {cfg.family!r} "
+        "(its forward needs more than one input tensor); pass explicit "
+        "calib_batches, or use a weights-only recipe")
+
+
+def _run_calibration(cfg: ArchConfig, model, params, rules, batches):
+    wrapped, store = wrap_for_calibration(params, rule_matcher(rules))
+    # unjitted + unrolled: CalibTensor observers are not traceable
+    run_calibration(
+        lambda p, *a, **kw: model.forward(cfg, p, *a, unroll=True, **kw),
+        wrapped, batches)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# the artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantizedModel:
+    """The persistable result of one :func:`quantize` call.
+
+    Carries the QTensor param tree, the per-layer reports, the (resolved)
+    recipe, and the activation-stats provenance.  ``save``/``load`` go
+    through ``ckpt.checkpoint``; the treedef on load comes from the
+    abstract twin (plus the reports' (n_uniform, n_apot) splits), so a
+    restore NEVER re-runs PTQ.
+    """
+
+    cfg: ArchConfig
+    recipe: QuantRecipe
+    params: object
+    report: List[LayerReport]
+    act_stats: Dict[str, float]
+    provenance: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    # -- execution ----------------------------------------------------------
+    @property
+    def model(self):
+        return get_model(self.cfg)
+
+    def forward(self, inputs, **kw):
+        """One forward pass on the quantized tree (images or tokens)."""
+        return self.model.forward(self.cfg, self.params, inputs, **kw)
+
+    def serve(self, dispatch=None, **engine_kw):
+        """A serving engine for this artifact, chosen by modality: the
+        batched VisionEngine for image backbones, the continuous-batching
+        token Engine otherwise.  ``dispatch``: optional
+        kernels.ops.DispatchConfig pinning kernel dispatch for the engine's
+        traces."""
+        if self.cfg.family == "efficientvit":
+            from .serving.vision import VisionEngine
+            return VisionEngine(self.cfg, self.params, dispatch=dispatch,
+                                **engine_kw)
+        from .serving.engine import Engine
+        return Engine(self.cfg, self.params, dispatch=dispatch, **engine_kw)
+
+    # -- abstract twin ------------------------------------------------------
+    def m2q_splits(self) -> Dict[str, Tuple[int, int]]:
+        """path -> (n_uniform, n_apot) from the saved reports — lets the
+        abstract twin reproduce data-dependent Eq. 6 splits exactly."""
+        return {r.path: (r.n_uniform, r.n_apot) for r in self.report
+                if r.n_uniform or r.n_apot}
+
+    def abstract_params(self):
+        """ShapeDtypeStruct twin of ``params`` (the load/restore template).
+
+        Act-scale leaves exist only where calibration recorded stats, and
+        the saved reports supply the (possibly data-dependent) m2q splits.
+        """
+        with_act = bool(self.act_stats) and \
+            self.recipe.policy.quantize_activations
+        return abstract_quantize(self.cfg, recipe=self.recipe,
+                                 with_act_scales=with_act,
+                                 m2q_splits=self.m2q_splits())
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path, step: int = 0):
+        """Atomic checkpoint of the QTensor tree + JSON provenance."""
+        extra = {
+            "kind": "quantized_model",
+            "cfg": _cfg_to_json(self.cfg),
+            "recipe": _recipe_to_json(self.recipe),
+            "report": [_report_to_json(r) for r in self.report],
+            "act_stats": {k: float(v) for k, v in self.act_stats.items()},
+            "provenance": self.provenance,
+        }
+        return ckpt.save(path, step, self.params, extra=extra)
+
+    @classmethod
+    def load(cls, path, step: Optional[int] = None) -> "QuantizedModel":
+        """Rebuild the artifact from disk WITHOUT re-quantizing: the
+        abstract twin provides the treedef, the checkpoint provides the
+        bytes, and the restored forward lowers to identical HLO."""
+        if step is None:
+            step = ckpt.latest_step(path)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {path!r}")
+        probe = ckpt.read_extra(path, step)
+        if probe.get("kind") != "quantized_model":
+            raise ValueError(f"{path!r} is not a QuantizedModel checkpoint")
+        out = cls(cfg=_cfg_from_json(probe["cfg"]),
+                  recipe=_recipe_from_json(probe["recipe"]),
+                  params=None,
+                  report=[_report_from_json(r) for r in probe["report"]],
+                  act_stats=dict(probe["act_stats"]),
+                  provenance=dict(probe.get("provenance", {})))
+        template = out.abstract_params()
+        out.params, _ = ckpt.restore(path, step, template)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# quantize: the one-call entry point
+# ---------------------------------------------------------------------------
+
+
+def quantize(arch_or_cfg, params,
+             recipe: Union[str, QuantRecipe] = "m2q-w8a8",
+             calib_batches: Optional[Iterable] = None) -> QuantizedModel:
+    """Calibrate -> scheme-select -> quantize, in one call.
+
+    ``arch_or_cfg``: an ArchConfig or a registry name (full-size archs and
+    reduced demo names both resolve).  ``params``: the float param tree.
+    ``recipe``: preset name or QuantRecipe.  ``calib_batches``: iterable of
+    model inputs for PTQ calibration; None synthesizes them per the
+    recipe's CalibSpec (token prompts / random images — other modalities
+    must pass their own).  Weights-only recipes skip calibration entirely.
+    """
+    cfg = _resolve_cfg(arch_or_cfg)
+    rec = as_recipe(recipe)
+    rec.validate()
+    resolved = rec.resolve(cfg)
+    model = get_model(cfg)
+
+    act_stats: Dict[str, float] = {}
+    n_calib = 0
+    if rec.policy.quantize_activations:
+        if calib_batches is None:
+            calib_batches = _synth_calib_batches(cfg, rec.calib)
+        calib_batches = list(calib_batches)
+        n_calib = len(calib_batches)
+        # derive the deployment ShapeCtx from the REAL calibration batch
+        # size when the recipe didn't pin one
+        if rec.tokens_per_step is None and calib_batches:
+            first = calib_batches[0]
+            if hasattr(first, "shape") and len(first.shape) >= 1:
+                toks = _default_tokens_per_step(cfg, int(first.shape[0]))
+                resolved = dataclasses.replace(
+                    resolved, shape_ctx=dataclasses.replace(
+                        resolved.shape_ctx, tokens_per_step=toks))
+        act_stats = _run_calibration(cfg, model, params, resolved.rules,
+                                     calib_batches)
+
+    qparams, report = quantize_model(
+        params, resolved.rules, resolved.shape_ctx, rec.policy,
+        act_stats=act_stats, ffn_groups=resolved.ffn_groups or None,
+        overrides=resolved.overrides)
+    # pin the EFFECTIVE deployment shape into the artifact's recipe: the
+    # abstract twin on load must re-derive the same mixed/lowbit decisions,
+    # and a tokens_per_step inferred from the real calibration batches
+    # would otherwise be lost (CalibSpec.batch_size may differ)
+    rec = rec.replace(tokens_per_step=resolved.shape_ctx.tokens_per_step)
+    return QuantizedModel(
+        cfg=cfg, recipe=rec, params=qparams, report=report,
+        act_stats=dict(act_stats),
+        provenance={"calib_batches": n_calib,
+                    "calib_sites": len(act_stats),
+                    "tokens_per_step": resolved.shape_ctx.tokens_per_step})
+
+
+def abstract_quantize(arch_or_cfg, params_abs=None,
+                      recipe: Union[str, QuantRecipe] = "m2q-w8a8",
+                      tokens_per_step: Optional[int] = None,
+                      with_act_scales: bool = True,
+                      m2q_splits: Optional[Dict[str, Tuple[int, int]]] = None):
+    """Shape-only twin of :func:`quantize` (dry-run compiles, sharding
+    specs, artifact load templates): returns the abstract QTensor tree for
+    ``arch_or_cfg`` under ``recipe``.  ``params_abs`` defaults to
+    ``jax.eval_shape`` of init; ``m2q_splits`` (path -> (n_uniform,
+    n_apot), e.g. from saved LayerReports) makes data-dependent Eq. 6
+    splits representable — without them apot_ratio=None is rejected."""
+    cfg = _resolve_cfg(arch_or_cfg)
+    rec = as_recipe(recipe)
+    if tokens_per_step is not None:
+        rec = rec.replace(tokens_per_step=tokens_per_step)
+    rec.validate(abstract=m2q_splits is None)
+    resolved = rec.resolve(cfg)
+    model = get_model(cfg)
+    if params_abs is None:
+        params_abs = jax.eval_shape(
+            lambda: model.init(cfg, jax.random.PRNGKey(0)))
+    return abstract_quantize_model(
+        params_abs, resolved.rules, resolved.shape_ctx, resolved.policy,
+        with_act_scales=with_act_scales,
+        ffn_groups=resolved.ffn_groups or None,
+        overrides=resolved.overrides,
+        m2q_splits=m2q_splits)
+
+
+# ---------------------------------------------------------------------------
+# JSON (de)serialization of the provenance payload
+# ---------------------------------------------------------------------------
+
+
+def _cfg_to_json(cfg: ArchConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def _cfg_from_json(d: dict) -> ArchConfig:
+    fields = {f.name: f for f in dataclasses.fields(ArchConfig)}
+    kw = {}
+    for k, v in d.items():
+        if k not in fields:
+            continue  # forward-compat: ignore unknown keys
+        kw[k] = tuple(v) if isinstance(v, list) else v
+    return ArchConfig(**kw)
+
+
+def _recipe_to_json(rec: QuantRecipe) -> dict:
+    return {
+        "name": rec.name,
+        "policy": dataclasses.asdict(rec.policy),
+        "rules": None if rec.rules is None else [list(r) for r in rec.rules],
+        "ffn_groups": None if rec.ffn_groups is None
+        else [list(g) for g in rec.ffn_groups],
+        "overrides": [[rx, dataclasses.asdict(ov)]
+                      for rx, ov in rec.overrides],
+        "calib": dataclasses.asdict(rec.calib),
+        "tokens_per_step": rec.tokens_per_step,
+    }
+
+
+def _recipe_from_json(d: dict) -> QuantRecipe:
+    return QuantRecipe(
+        name=d["name"],
+        policy=M2QPolicy(**d["policy"]),
+        rules=None if d["rules"] is None
+        else tuple(tuple(r) for r in d["rules"]),
+        ffn_groups=None if d["ffn_groups"] is None
+        else tuple(tuple(g) for g in d["ffn_groups"]),
+        overrides=tuple((rx, PathOverride(**ov))
+                        for rx, ov in d["overrides"]),
+        calib=CalibSpec(**d["calib"]),
+        tokens_per_step=d["tokens_per_step"])
+
+
+def _report_to_json(r: LayerReport) -> dict:
+    d = dataclasses.asdict(r)
+    d["shape"] = list(d["shape"])
+    return d
+
+
+def _report_from_json(d: dict) -> LayerReport:
+    d = dict(d)
+    d["shape"] = tuple(d["shape"])
+    return LayerReport(**d)

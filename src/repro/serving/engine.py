@@ -22,6 +22,7 @@ paths.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 from typing import Dict, List, Optional
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as _kops
 from ..models import get_model
 from ..models.config import ArchConfig
 
@@ -55,7 +57,11 @@ class EngineStats:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
-                 max_len: int = 256, seed: int = 0):
+                 max_len: int = 256, seed: int = 0,
+                 dispatch: Optional[_kops.DispatchConfig] = None):
+        # scoped kernels.ops.DispatchConfig pinning kernel dispatch for the
+        # engine's prefill/decode traces (None inherits env/backend default)
+        self.dispatch = dispatch
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
@@ -98,6 +104,10 @@ class Engine:
                       out_tokens=[])
         self.queue.append(req)
         return req
+
+    def _dispatch_scope(self):
+        return (_kops.dispatch(self.dispatch) if self.dispatch is not None
+                else contextlib.nullcontext())
 
     # -- jitted cores --------------------------------------------------------
     def _sample_tokens(self, logits, key, temps):
@@ -190,13 +200,14 @@ class Engine:
                                    dtype=jnp.float32)
         temps = jnp.asarray([r.temperature for r in greqs], jnp.float32)
         self.key, k = jax.random.split(self.key)
-        if self._ragged:
-            first, sc = self._prefill_sample_ragged(
-                self.params, sc, jnp.asarray(toks), jnp.asarray(lens),
-                temps, k)
-        else:
-            first, sc = self._prefill_sample(self.params, sc,
-                                             jnp.asarray(toks), temps, k)
+        with self._dispatch_scope():
+            if self._ragged:
+                first, sc = self._prefill_sample_ragged(
+                    self.params, sc, jnp.asarray(toks), jnp.asarray(lens),
+                    temps, k)
+            else:
+                first, sc = self._prefill_sample(self.params, sc,
+                                                 jnp.asarray(toks), temps, k)
         self._write_slots(gslots, sc)
         idx = jnp.asarray(gslots, jnp.int32)
         self._pending = self._pending.at[idx].set(first)
@@ -230,10 +241,11 @@ class Engine:
         live = [i for i in range(self.B) if live_mask[i]]
         if not live:
             return 0
-        self.cache, self._pending, self._outbuf, self._counts, self.key = \
-            self._decode_step(self.params, self.cache, self._pending,
-                              self._outbuf, self._counts, self._temps,
-                              jnp.asarray(live_mask), self.key)
+        with self._dispatch_scope():
+            self.cache, self._pending, self._outbuf, self._counts, self.key \
+                = self._decode_step(self.params, self.cache, self._pending,
+                                    self._outbuf, self._counts, self._temps,
+                                    jnp.asarray(live_mask), self.key)
         self.stats.steps += 1
         self.stats.decoded_tokens += len(live)
         for slot in live:

@@ -16,6 +16,7 @@ fallback — no f32 dequantized-weight convolutions.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import List, Optional, Set
 
@@ -23,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as _kops
 from ..models import get_model
 from ..models.config import ArchConfig
 
@@ -39,7 +41,8 @@ class VisionEngine:
     """Micro-batching classifier: submit images, flush to get logits."""
 
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 64,
-                 min_bucket: int = 1):
+                 min_bucket: int = 1,
+                 dispatch: Optional[_kops.DispatchConfig] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.cfg = cfg
@@ -50,6 +53,13 @@ class VisionEngine:
         self.stats = VisionStats()
         self._pending: List[np.ndarray] = []
         self._fwd = jax.jit(self._fwd_impl)
+        # pin kernel dispatch for every trace this engine owns (scoped
+        # kernels.ops.DispatchConfig; None inherits env/backend defaults)
+        self.dispatch = dispatch
+
+    def _dispatch_scope(self):
+        return (_kops.dispatch(self.dispatch) if self.dispatch is not None
+                else contextlib.nullcontext())
 
     def _fwd_impl(self, params, images):
         return self.model.forward(self.cfg, params, images)
@@ -95,7 +105,8 @@ class VisionEngine:
             if pad:
                 chunk = np.concatenate(
                     [chunk, np.zeros((pad,) + chunk.shape[1:], np.float32)])
-            logits = self._fwd(self.params, jnp.asarray(chunk))
+            with self._dispatch_scope():
+                logits = self._fwd(self.params, jnp.asarray(chunk))
             outs.append(np.asarray(logits)[: b - pad])
             self.stats.batches += 1
             self.stats.padded_images += pad

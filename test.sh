@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
 # Canonical tier-1 test entry point (documented in ROADMAP.md).
 #
+# Fast loop: ./test.sh -m "not slow"   (skips the subprocess dry-runs;
+# the suite includes the repo-hygiene check that fails on tracked
+# *.pyc/__pycache__ paths — see tests/test_recipe.py).
+#
 # Env setup follows SNIPPETS.md (olmax run.sh): fp64 is *allowed* but the
 # default dtype stays 32-bit, and the host platform exposes exactly one
 # virtual device (the sharded dry-run tests fork subprocesses that set

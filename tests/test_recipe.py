@@ -1,0 +1,393 @@
+"""The one-call quantization API: QuantRecipe -> QuantizedModel artifact.
+
+Covers: preset equivalence with the legacy hand-wired quantize_model path
+(efficientvit-b1 + one LM arch), the artifact lifecycle (quantize -> save
+-> load -> HLO-identical forward, reusing the test_conv_dispatch HLO
+assertions), the apot_ratio=None (Eq. 6 argmin) abstract-twin contract,
+the stored-width weight_bits regression for sub-byte sweep configs, scoped
+DispatchConfig resolution, and the repo-hygiene check on tracked bytecode.
+"""
+import dataclasses
+import subprocess
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.core import (M2QPolicy, PathOverride, QM2Q, QUniform, ShapeCtx,
+                        quantize_model, weight_bits)
+from repro.core.calibrate import (rule_matcher, run_calibration,
+                                  wrap_for_calibration)
+from repro.kernels import ops
+from repro.models import get_model
+from repro.recipe import (PRESETS, CalibSpec, QuantizedModel, abstract_quantize,
+                          quantize)
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _evit_setup(batch=2):
+    cfg = REDUCED["efficientvit-b1-r224"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    imgs = jnp.asarray(_rng(0).normal(
+        0, 1, (batch, cfg.img_res, cfg.img_res, 3)).astype(np.float32))
+    return cfg, model, params, imgs
+
+
+def _trees_identical(a, b):
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# preset equivalence with the legacy hand-wired path
+# ---------------------------------------------------------------------------
+
+
+def test_preset_matches_legacy_wiring_efficientvit():
+    """'m2q-w8a8' on efficientvit-b1 == the old wrap/calibrate/ShapeCtx/
+    intensity_threshold=1.0 incantation, leaf for leaf (bitwise)."""
+    cfg, model, params, imgs = _evit_setup()
+    # legacy wiring (what examples/quantize_efficientvit.py used to do)
+    wrapped, stats = wrap_for_calibration(params,
+                                          rule_matcher(model.QUANT_RULES))
+    run_calibration(lambda p, x: model.forward(cfg, p, x), wrapped, [imgs])
+    ctx = ShapeCtx(tokens_per_step=imgs.shape[0] * cfg.img_res * cfg.img_res)
+    legacy_qp, legacy_report = quantize_model(
+        params, model.QUANT_RULES, ctx, M2QPolicy(intensity_threshold=1.0),
+        act_stats=stats)
+    # one-call API
+    qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[imgs])
+    _trees_identical(qm.params, legacy_qp)
+    assert [(r.path, r.decision, r.bits) for r in qm.report] == \
+        [(r.path, r.decision, r.bits) for r in legacy_report]
+    assert qm.provenance["calib_sites"] == len(stats)
+
+
+def test_preset_matches_legacy_wiring_lm():
+    """'m2q-w8a8' on a reduced LM == the old launch.serve wiring (random-
+    prompt calibration + intensity_threshold=0.5 + FFN fold groups)."""
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(_rng(1).integers(0, cfg.vocab_size, (2, 32),
+                                        dtype=np.int32))
+    wrapped, stats = wrap_for_calibration(params,
+                                          rule_matcher(model.QUANT_RULES))
+    model.forward(cfg, wrapped, toks, unroll=True)
+    ctx = ShapeCtx(tokens_per_step=2, moe_top_k=max(cfg.moe_top_k, 1),
+                   moe_num_experts=max(cfg.moe_experts, 1))
+    legacy_qp, _ = quantize_model(
+        params, model.QUANT_RULES, ctx, M2QPolicy(intensity_threshold=0.5),
+        act_stats=stats, ffn_groups=model.FFN_FOLD_GROUPS)
+    qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[toks])
+    _trees_identical(qm.params, legacy_qp)
+    # the perm-folded FFN groups went through the recipe resolver
+    assert any(r.decision == "mixed(perm-folded)" for r in qm.report)
+
+
+def test_w4_weights_only_preset():
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    qm = quantize(cfg, params, "w4-weights-only")
+    assert qm.provenance["calib_batches"] == 0  # no calibration pass
+    qleaves = [l for l in jax.tree.leaves(
+        qm.params, is_leaf=lambda x: isinstance(x, QUniform))
+        if isinstance(l, QUniform)]
+    assert qleaves and all(q.bits == 4 and q.act_scale is None
+                           for q in qleaves)
+    assert all(r.decision == "lowbit" for r in qm.report)
+
+
+def test_path_override_validates_fields():
+    with pytest.raises(ValueError, match="decision"):
+        PathOverride(decision="mxied")
+    with pytest.raises(ValueError, match="scheme"):
+        PathOverride(scheme="unifrom8")  # would diverge concrete vs abstract
+    with pytest.raises(ValueError, match="bits"):
+        PathOverride(bits=9)  # would wrap in the uint8 byte payload
+    with pytest.raises(ValueError, match="bits"):
+        PathOverride(bits=2)
+
+
+def test_effective_tokens_per_step_pinned_in_artifact():
+    """The deployment shape inferred from real calibration batches is baked
+    into the artifact's recipe, so load()'s abstract twin re-derives the
+    SAME decisions (CalibSpec.batch_size may differ from the real data)."""
+    cfg, model, params, imgs = _evit_setup(batch=8)  # != CalibSpec default 2
+    qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[imgs])
+    expect = 8 * cfg.img_res * cfg.img_res
+    assert qm.provenance["tokens_per_step"] == expect
+    assert qm.recipe.tokens_per_step == expect
+    assert qm.recipe.resolve(cfg).shape_ctx.tokens_per_step == expect
+
+
+def test_fold_group_member_override_drops_whole_group(tmp_path):
+    """An override diverging ONE member of a perm-fold group (here: the
+    swiglu gate w3 forced lowbit) must drop the WHOLE group to ordinary
+    per-leaf quantization on both the concrete and abstract paths — and
+    must NOT let the gateless fallback pattern fold w1/w2 without w3
+    (misaligned elementwise product).  The saved artifact stays loadable."""
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(_rng(4).integers(0, cfg.vocab_size, (2, 16),
+                                        dtype=np.int32))
+    rec = PRESETS["m2q-w8a8"].replace(
+        overrides=((r"layers/mlp/w3$", PathOverride(decision="lowbit")),))
+    qm = quantize(cfg, params, rec, calib_batches=[toks])
+    by_path = {r.path: r for r in qm.report}
+    assert by_path["layers/mlp/w3"].decision == "lowbit"  # override honored
+    assert by_path["layers/mlp/w1"].decision == "mixed"   # NOT perm-folded
+    assert not any(r.decision == "mixed(perm-folded)" for r in qm.report)
+    qm.save(tmp_path / "ov")
+    qm2 = QuantizedModel.load(tmp_path / "ov")
+    _trees_identical(qm.params, qm2.params)
+    np.testing.assert_array_equal(np.asarray(qm.forward(toks)),
+                                  np.asarray(qm2.forward(toks)))
+
+
+def test_override_rejects_mixed_embedding():
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    rec = PRESETS["m2q-w8a8"].replace(
+        policy=M2QPolicy(quantize_activations=False),
+        overrides=((r"embed", PathOverride(decision="mixed")),))
+    with pytest.raises(ValueError, match="embedding"):
+        quantize(cfg, params, rec)
+
+
+# ---------------------------------------------------------------------------
+# artifact lifecycle: quantize -> save -> load -> HLO-identical forward
+# ---------------------------------------------------------------------------
+
+
+def _op_histogram(cfg, model, qp, imgs):
+    from repro.launch.hlo_analysis import op_histogram
+    txt = jax.jit(
+        lambda p, x: model.forward(cfg, p, x)).lower(qp, imgs).compile(
+    ).as_text()
+    return op_histogram(txt, include_fused=True)
+
+
+def test_artifact_save_load_hlo_identical(tmp_path, monkeypatch):
+    """load() rebuilds the tree through the abstract twin (no PTQ re-run);
+    the restored forward compiles to the same op mix as the fresh one and
+    keeps the M2Q hot-path invariants: with dispatch scoped ON the only
+    convolution is the unquantized stem, and there are no gathers/concats
+    from the (deleted) permutation epilogue."""
+    cfg, model, params, imgs = _evit_setup()
+    qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[imgs])
+    qm.save(tmp_path / "art")
+    qm2 = QuantizedModel.load(tmp_path / "art")
+    # bitwise-identical tree, same treedef (incl. n_uniform/n_apot aux)
+    _trees_identical(qm.params, qm2.params)
+    assert qm2.recipe == qm.recipe
+    assert [r.path for r in qm2.report] == [r.path for r in qm.report]
+    # numerics: fresh vs restored forward agree bitwise
+    y1 = np.asarray(qm.forward(imgs))
+    y2 = np.asarray(qm2.forward(imgs))
+    np.testing.assert_array_equal(y1, y2)
+    # HLO: identical op histograms + conv/gather/concat invariants
+    with ops.dispatch(dense=True, conv=True):
+        h1 = _op_histogram(cfg, model, qm.params, imgs)
+        h2 = _op_histogram(cfg, model, qm2.params, imgs)
+    assert h1 == h2
+    assert h1.get("convolution", 0) == 1  # only the unquantized stem
+    with ops.dispatch(dense=False, conv=False):
+        h1 = _op_histogram(cfg, model, qm.params, imgs)
+        h2 = _op_histogram(cfg, model, qm2.params, imgs)
+    assert h1 == h2
+    # PWConvs STILL lower to quantized matmuls with dispatch off; only the
+    # stem + the 7 weights-only depthwise fallbacks convolve
+    assert h1.get("convolution", 0) == 1 + 7
+
+
+def test_artifact_roundtrip_lm(tmp_path):
+    """Same lifecycle on a token LM: perm-folded FFN groups, stacked scan
+    leaves, and the quantized embedding all survive save -> load bitwise."""
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(_rng(1).integers(0, cfg.vocab_size, (2, 16),
+                                        dtype=np.int32))
+    qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[toks])
+    qm.save(tmp_path / "lm")
+    qm2 = QuantizedModel.load(tmp_path / "lm")
+    _trees_identical(qm.params, qm2.params)
+    np.testing.assert_array_equal(np.asarray(qm.forward(toks)),
+                                  np.asarray(qm2.forward(toks)))
+
+
+def test_artifact_roundtrip_moe(tmp_path):
+    """MoE regression: stacked-expert (L,E,K,N) leaves carry per-layer
+    act_scale broadcast over ALL trailing axes — the concrete reshape used
+    to emit (L,1,1) against the abstract twin's (L,1,1,1) template, making
+    every saved MoE artifact unloadable."""
+    cfg = REDUCED["llama4-scout-17b-a16e"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    qm = quantize(cfg, params, "m2q-w8a8")  # synthesized calibration
+    qm.save(tmp_path / "moe")
+    qm2 = QuantizedModel.load(tmp_path / "moe")
+    _trees_identical(qm.params, qm2.params)
+    toks = jnp.asarray(_rng(2).integers(0, cfg.vocab_size, (2, 8),
+                                        dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(qm.forward(toks)),
+                                  np.asarray(qm2.forward(toks)))
+
+
+def test_artifact_serve_picks_modality(tmp_path):
+    from repro.serving.engine import Engine
+    from repro.serving.vision import VisionEngine
+    cfg, model, params, imgs = _evit_setup()
+    qm = quantize(cfg, params, "m2q-w8a8", calib_batches=[imgs])
+    eng = qm.serve(max_batch=4, dispatch=ops.DispatchConfig(dense=False))
+    assert isinstance(eng, VisionEngine)
+    logits = eng.classify(np.asarray(imgs))
+    np.testing.assert_allclose(logits, np.asarray(qm.forward(imgs)),
+                               rtol=1e-5, atol=1e-5)
+
+    lm_cfg = REDUCED["qwen1.5-0.5b"]
+    lm = get_model(lm_cfg)
+    lm_params = lm.init(lm_cfg, jax.random.PRNGKey(0))
+    qlm = quantize(lm_cfg, lm_params, "w4-weights-only")
+    teng = qlm.serve(max_batch=2, max_len=32)
+    assert isinstance(teng, Engine)
+    req = teng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)
+    teng.run()
+    assert req.done and len(req.out_tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# apot_ratio=None (Eq. 6 argmin): data-dependent splits carried by the
+# artifact, rejected by the shape-only twin
+# ---------------------------------------------------------------------------
+
+
+def test_abstract_twin_rejects_ratio_none():
+    rec = PRESETS["m2q-w8a8"].replace(policy=M2QPolicy(apot_ratio=None))
+    with pytest.raises(ValueError, match="apot_ratio=None"):
+        abstract_quantize(REDUCED["efficientvit-b1-r224"], recipe=rec,
+                          tokens_per_step=64)
+
+
+def test_ratio_none_artifact_roundtrip(tmp_path):
+    """ratio=None quantizes data-dependently; the saved LayerReports carry
+    (n_uniform, n_apot), so load() rebuilds the EXACT treedef (the old
+    silent 1:1 assumption is gone)."""
+    cfg, model, params, imgs = _evit_setup()
+    rec = PRESETS["m2q-w8a8"].replace(policy=M2QPolicy(apot_ratio=None))
+    qm = quantize(cfg, params, rec, calib_batches=[imgs])
+    splits = {r.path: (r.n_uniform, r.n_apot) for r in qm.report
+              if r.decision.startswith("mixed")}
+    # the argmin split really is data-dependent (not always the 1:1 floor)
+    assert any(nu != na and nu + na > 0 for nu, na in splits.values())
+    qm.save(tmp_path / "art")
+    qm2 = QuantizedModel.load(tmp_path / "art")
+    _trees_identical(qm.params, qm2.params)
+    np.testing.assert_array_equal(np.asarray(qm.forward(imgs)),
+                                  np.asarray(qm2.forward(imgs)))
+
+
+# ---------------------------------------------------------------------------
+# weight_bits: stored width, not nominal width (sub-byte sweep regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,expected", [(3, 8.0), (4, 4.0), (5, 8.0),
+                                           (6, 8.0), (7, 8.0), (8, 8.0)])
+def test_weight_bits_reports_stored_width(bits, expected):
+    w = jnp.asarray(_rng(bits).normal(0, 0.05, (32, 16)).astype(np.float32))
+    qt = QUniform.quantize(w, bits=bits)
+    assert weight_bits(qt) == expected
+    # and the payload layout really is what the report claims: one byte per
+    # weight except the nibble-packed 4-bit case
+    expect_cols = 16 // 2 if bits == 4 else 16
+    assert qt.payload.shape == (32, expect_cols)
+
+
+# ---------------------------------------------------------------------------
+# scoped dispatch config
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_config_scoping(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_DISPATCH", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_CONV_DISPATCH", raising=False)
+    assert not ops.dispatch_enabled()  # CPU backend default
+    with ops.dispatch(dense=True):
+        assert ops.dispatch_enabled()
+        assert ops.conv_dispatch_enabled()  # conv follows dense
+        with ops.dispatch(conv=False):      # nested: conv off, dense kept
+            assert ops.dispatch_enabled()
+            assert not ops.conv_dispatch_enabled()
+        assert ops.conv_dispatch_enabled()
+    assert not ops.dispatch_enabled()
+    # explicit kwargs layer over a config passed positionally
+    with ops.dispatch(ops.DispatchConfig(dense=True, conv=True), conv=False):
+        assert ops.dispatch_enabled()
+        assert not ops.conv_dispatch_enabled()
+
+
+def test_dispatch_scope_overrides_env(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_DISPATCH", "1")
+    monkeypatch.delenv("REPRO_PALLAS_CONV_DISPATCH", raising=False)
+    assert ops.dispatch_enabled()
+    with ops.dispatch(dense=False):  # programmatic scope beats process env
+        assert not ops.dispatch_enabled()
+        assert not ops.conv_dispatch_enabled()
+    monkeypatch.setenv("REPRO_PALLAS_CONV_DISPATCH", "0")
+    assert ops.dispatch_enabled() and not ops.conv_dispatch_enabled()
+    with ops.dispatch(conv=True):
+        assert ops.conv_dispatch_enabled()
+
+
+def test_dispatch_scope_steers_real_matmul(monkeypatch):
+    """The scoped config and the env var drive the SAME nn.dense routing."""
+    from repro import nn
+    monkeypatch.delenv("REPRO_PALLAS_DISPATCH", raising=False)
+    rng = _rng(3)
+    w = jnp.asarray(rng.normal(0, 0.05, (64, 32)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (4, 64)).astype(np.float32))
+    qt = QM2Q.quantize(w, *_select(w), act_max_abs=jnp.max(jnp.abs(x)))
+    y_xla = nn.dense(x, qt)
+    with ops.dispatch(dense=True):
+        y_ker = nn.dense(x, qt)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_xla),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _select(w):
+    from repro.core import select_schemes
+    asn = select_schemes(w, ratio=0.5)
+    return asn.apot_idx, asn.uniform_idx
+
+
+# ---------------------------------------------------------------------------
+# repo hygiene: no tracked bytecode, ignore rules present
+# ---------------------------------------------------------------------------
+
+
+def test_no_tracked_bytecode_or_pycache():
+    out = subprocess.run(["git", "ls-files"], capture_output=True, text=True,
+                         cwd=_REPO_ROOT)
+    if out.returncode != 0:  # not a git checkout (e.g. sdist)
+        pytest.skip("git unavailable")
+    bad = [p for p in out.stdout.splitlines()
+           if "__pycache__" in p or p.endswith((".pyc", ".pyo"))]
+    assert not bad, f"tracked bytecode files: {bad}"
+    gi = (_REPO_ROOT / ".gitignore").read_text()
+    for pattern in ("__pycache__/", "*.pyc", "autotune.json"):
+        assert pattern in gi, f".gitignore missing {pattern!r}"
