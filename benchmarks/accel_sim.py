@@ -24,6 +24,9 @@ methodology:
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+from pathlib import Path
 from typing import List, Optional
 
 # ---------------------------------------------------------------------------
@@ -111,10 +114,81 @@ def _layer_cost(layer: Layer, method: str):
     raise ValueError(method)
 
 
+# ---------------------------------------------------------------------------
+# measured-kernel latency calibration (BENCH_kernels.json conv rows)
+# ---------------------------------------------------------------------------
+
+DEFAULT_KERNEL_BENCH = Path(__file__).resolve().parent / "BENCH_kernels.json"
+
+# which measured conv contrast calibrates which simulator layer kind: PWConvs
+# and the attention matmuls/head run the fused (m2q/int8) matmul kernels,
+# DWConvs the packed-w4 conv kernel
+_KIND_TO_BENCH = {"pw": "pw", "matmul": "pw", "head": "pw", "dw": "dw"}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCalibration:
+    """Measured fused-vs-f32-fallback conv speedups from kernel_bench.
+
+    The cycle model above assumes the quantized engines hit their ideal
+    mapping (e.g. a mixed PWConv finishes in half the uniform-baseline
+    cycles because MPMA and SAT run the two halves in parallel).  The
+    kernel microbenchmark records what the *implemented* hot path actually
+    achieves over the f32 dequantized-weight fallback; feeding that
+    contrast back derates any layer whose measured speedup falls short of
+    the ideal one (never crediting beyond the hardware model), so the
+    simulator's latency — and therefore its EDP rows — is calibrated
+    against measured kernel wall-clock instead of assuming perfection.
+    """
+
+    pw_speedup: float   # geomean fused-vs-f32 wall-clock ratio, PWConv rows
+    dw_speedup: float   # same, DWConv rows
+    backend: str = ""
+    source: str = ""
+
+    @classmethod
+    def from_bench_json(cls, path=None) -> "KernelCalibration":
+        path = Path(DEFAULT_KERNEL_BENCH if path is None else path)
+        data = json.loads(path.read_text())
+        conv = data.get("conv") or {}
+
+        def geomean_ratio(prefix: str) -> float:
+            logs = []
+            for name, row in conv.items():
+                base, _, variant = name.partition("/")
+                if not (base.startswith(prefix) and variant == "fused"):
+                    continue
+                ref = conv.get(f"{base}/f32_dequant_conv")
+                if ref and row.get("wall_s") and ref.get("wall_s"):
+                    logs.append(math.log(ref["wall_s"] / row["wall_s"]))
+            if not logs:
+                raise ValueError(
+                    f"{path} has no '{prefix}*' fused/f32_dequant_conv "
+                    "wall-clock pairs (re-run benchmarks.kernel_bench)")
+            return math.exp(sum(logs) / len(logs))
+
+        return cls(pw_speedup=geomean_ratio("pwconv"),
+                   dw_speedup=geomean_ratio("dwconv"),
+                   backend=str(data.get("backend", "")), source=str(path))
+
+    def derate(self, kind: str, ideal_speedup: float) -> float:
+        """Cycle multiplier for one layer: >1 when the measured kernel
+        speedup is below the cycle model's ideal, 1 otherwise (the model
+        never runs faster than its hardware mapping allows)."""
+        measured = (self.dw_speedup if _KIND_TO_BENCH.get(kind) == "dw"
+                    else self.pw_speedup)
+        return max(1.0, ideal_speedup / measured)
+
+
 def simulate(layers: List[Layer], method: str = "m2q",
              wbuf_per_bit: Optional[float] = None,
-             method_for=None) -> SimResult:
-    """method_for: optional per-layer override (Table IV ablations)."""
+             method_for=None,
+             kernel_cal: Optional[KernelCalibration] = None) -> SimResult:
+    """method_for: optional per-layer override (Table IV ablations).
+    kernel_cal: optional measured-kernel latency calibration — quantized
+    layers whose measured fused-kernel speedup trails the ideal engine
+    mapping take proportionally more cycles (energy is unchanged; latency,
+    throughput, and EDP move)."""
     eb = E_WBUF_PER_BIT if wbuf_per_bit is None else wbuf_per_bit
     per_layer = []
     total_macs = 0
@@ -123,14 +197,19 @@ def simulate(layers: List[Layer], method: str = "m2q",
         m_l = method_for(layer) if method_for is not None else method
         e, bits, c_mpma, c_sat = _layer_cost(layer, m_l)
         wj = bits * eb
-        per_layer.append(LayerEnergy(layer.name, e, wj,
-                                     c_mpma or 0.0, c_sat or 0.0))
         total_macs += layer.macs
         if c_mpma is None:  # fp32 reference: no engine mapping
+            per_layer.append(LayerEnergy(layer.name, e, wj, 0.0, 0.0))
             cycles += layer.macs / (MPMA_PAIRS * L_CORES)
-        else:
-            # Sec. IV execution flow: SAT and MPMA halves run in parallel
-            cycles += max(c_mpma, c_sat)
+            continue
+        # Sec. IV execution flow: SAT and MPMA halves run in parallel
+        c_l = max(c_mpma, c_sat)
+        if kernel_cal is not None and m_l in ("m2q", "autovit") and c_l > 0:
+            ideal = (layer.macs / (MPMA_PAIRS * L_CORES)) / c_l
+            scale = kernel_cal.derate(layer.kind, ideal)
+            c_mpma, c_sat, c_l = c_mpma * scale, c_sat * scale, c_l * scale
+        per_layer.append(LayerEnergy(layer.name, e, wj, c_mpma, c_sat))
+        cycles += c_l
     energy_j = sum(p.compute_j + p.wbuf_j for p in per_layer)
     latency_s = cycles / FREQ_HZ
     ops = 2 * total_macs

@@ -1,0 +1,249 @@
+"""Serving-runtime benchmark: both engines under synthetic arrival traffic.
+
+Emits ``BENCH_serving.json``: for several request arrival rates, the
+vision engine's imgs/s and the token engine's tok/s (real wall-clock of
+the executed work), plus the *policy-level* queue behavior — p50/p99 queue
+latency, batch occupancy, padded-work fraction, and the flush-reason mix
+(full batch vs deadline vs drain).
+
+Arrivals run on a VIRTUAL clock injected into the shared scheduler core
+(serving.scheduler takes ``clock=``), so the deadline-flush policy is
+exercised deterministically and independently of how slow this machine's
+forward pass happens to be: at low rates batches flush by deadline (queue
+latency ~= max_delay_ms, low occupancy); at high rates they flush full
+(latency -> 0, occupancy -> 1).  Execution wall time is measured
+separately with the real clock for the throughput columns.  The token
+engine advances the virtual clock by each decode step's measured wall
+time, so its queue latencies reflect real service times.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench [out.json]
+
+``collect(smoke=True)`` is the fast path the test suite exercises.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+DEFAULT_OUT = Path(__file__).resolve().parent / "BENCH_serving.json"
+
+
+class VirtualClock:
+    """Monotonic seconds under caller control (drives scheduler deadlines)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    def advance_to(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+
+def _arrival_times(n: int, rate_per_s: float, seed: int = 0) -> np.ndarray:
+    """Poisson arrivals: n cumulative exponential inter-arrival gaps (s)."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, n))
+
+
+def make_vision_engine(cfg, params, max_batch: int = 8,
+                       max_delay_ms: float = 10.0):
+    """One (clock, engine) pair reused across bench rows: jitted bucket
+    graphs compile once, stats/clock reset between rows."""
+    from repro.serving.vision import VisionEngine
+
+    clock = VirtualClock()
+    eng = VisionEngine(cfg, params, max_batch=max_batch,
+                       max_delay_ms=max_delay_ms, clock=clock.now)
+    return clock, eng
+
+
+def bench_vision(bench_engine, rate_per_s: float, n_images: int,
+                 seed: int = 0, warmup: bool = True) -> dict:
+    """``bench_engine``: the (clock, engine) pair from make_vision_engine —
+    the engine's own max_batch/max_delay_ms ARE the benched policy."""
+    clock, eng = bench_engine
+    max_batch, max_delay_ms = eng.B, eng.scheduler.policy.max_delay_ms
+    eng.stats.reset()
+    clock.t = 0.0
+    rng = np.random.default_rng(seed)
+    res = eng.cfg.img_res
+    img = rng.normal(0, 1, (res, res, 3)).astype(np.float32)
+    if warmup:
+        # compile every pow2 bucket shape, then zero the counters so the
+        # wall-clock columns measure steady-state execution
+        b = 1
+        while b <= max_batch:
+            eng.classify(np.broadcast_to(img, (b,) + img.shape))
+            b *= 2
+        eng.stats.reset()
+    wall = 0.0
+
+    def timed_poll():
+        nonlocal wall
+        t0 = time.perf_counter()
+        eng.poll()
+        wall += time.perf_counter() - t0
+
+    handles = []
+    for t in _arrival_times(n_images, rate_per_s, seed):
+        # honor deadlines that fire BETWEEN arrivals (a serving loop would
+        # sleep until scheduler.next_deadline(), not until the next request)
+        while True:
+            nd = eng.scheduler.next_deadline()
+            if nd is None or nd >= t:
+                break
+            clock.advance_to(nd)
+            timed_poll()
+        clock.advance_to(t)
+        timed_poll()
+        t0 = time.perf_counter()  # a full batch executes inline on submit
+        handles.append(eng.submit(img))
+        wall += time.perf_counter() - t0
+    # drain the tail through the DEADLINE, not an explicit flush
+    while eng.scheduler.pending:
+        nd = eng.scheduler.next_deadline()
+        clock.advance_to(nd if nd is not None else clock.now())
+        timed_poll()
+    assert all(h.done for h in handles)
+    s = eng.stats
+    return {
+        "engine": "vision", "arrival_rate_per_s": rate_per_s,
+        "n": n_images, "max_batch": max_batch, "max_delay_ms": max_delay_ms,
+        "imgs_per_s_wall": round(n_images / max(wall, 1e-9), 2),
+        **s.summary(),
+    }
+
+
+def make_token_engine(cfg, params, max_batch: int = 4, max_len: int = 64,
+                      max_delay_ms: float = 0.0):
+    from repro.serving.engine import Engine
+
+    clock = VirtualClock()
+    eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                 max_delay_ms=max_delay_ms, clock=clock.now)
+    return clock, eng
+
+
+def bench_token(bench_engine, rate_per_s: float, n_requests: int,
+                max_new: int = 8, seed: int = 0,
+                warmup: bool = True) -> dict:
+    """``bench_engine``: the (clock, engine) pair from make_token_engine —
+    the engine's own max_batch/max_delay_ms ARE the benched policy."""
+    clock, eng = bench_engine
+    max_batch = eng.B
+    max_delay_ms = eng.scheduler.policy.max_delay_ms
+    eng.stats.reset()
+    clock.t = 0.0
+    rng = np.random.default_rng(seed)
+    vocab = eng.cfg.vocab_size
+    arrivals = _arrival_times(n_requests, rate_per_s, seed)
+    prompts = [rng.integers(0, vocab, int(rng.integers(4, 17)),
+                            dtype=np.int32) for _ in range(n_requests)]
+    if warmup:
+        # compile both ragged-prefill pow2 buckets (<=8 and 16) and the
+        # decode step, then zero the counters for steady-state measurement
+        for wlen in (4, 16):
+            eng.submit(rng.integers(0, vocab, wlen, dtype=np.int32),
+                       max_new_tokens=2)
+            clock.advance(1.0)  # past any admission deadline
+            eng.run()
+        eng.stats.reset()
+        clock.t = 0.0
+    wall = 0.0
+    i = 0
+    while True:
+        while i < n_requests and arrivals[i] <= clock.now():
+            eng.submit(prompts[i], max_new_tokens=max_new)
+            i += 1
+        idle = eng.scheduler.pending == 0 and all(
+            s is None for s in eng.slots)
+        if idle:
+            if i >= n_requests:
+                break
+            clock.advance_to(arrivals[i])  # sleep until the next arrival
+            continue
+        t0 = time.perf_counter()
+        n_live = eng.step()
+        dt = time.perf_counter() - t0
+        if n_live:
+            wall += dt
+            clock.advance(dt)  # service time moves the virtual clock too
+        else:
+            # queued but not yet due: jump straight to the next event (the
+            # admission deadline or the next arrival) — an idle no-op spin
+            # is neither served work nor wall time
+            targets = [nd for nd in (eng.scheduler.next_deadline(),) if nd]
+            if i < n_requests:
+                targets.append(arrivals[i])
+            clock.advance_to(min(targets) if targets
+                             else clock.now() + 1e-3)
+    s = eng.stats
+    return {
+        "engine": "token", "arrival_rate_per_s": rate_per_s,
+        "n": n_requests, "max_batch": max_batch, "max_new": max_new,
+        "max_delay_ms": max_delay_ms,
+        "tok_per_s_wall": round(s.decoded_tokens / max(wall, 1e-9), 2),
+        "decoded_tokens": s.decoded_tokens, "engine_steps": s.steps,
+        "prefill_batches": s.prefill_batches,
+        **s.summary(),
+    }
+
+
+def collect(smoke: bool = False) -> dict:
+    """All rows.  ``smoke=True`` shrinks traffic to test-suite scale."""
+    import jax
+    from repro.configs.registry import REDUCED
+    from repro.models import get_model
+
+    vcfg = REDUCED["efficientvit-b1-r224"]
+    vparams = get_model(vcfg).init(vcfg, jax.random.PRNGKey(0))
+    tcfg = REDUCED["qwen1.5-0.5b"]
+    tparams = get_model(tcfg).init(tcfg, jax.random.PRNGKey(0))
+
+    n_img, n_req = (8, 5) if smoke else (64, 24)
+    warmup = not smoke  # smoke asserts structure, not steady-state timing
+    # rates straddle the deadline: ~1 req / max_delay at the low end (most
+    # batches flush by deadline), far above it at the high end (full)
+    vision_rates = (50.0, 5000.0) if smoke else (20.0, 400.0, 8000.0)
+    token_rates = (50.0, 2000.0) if smoke else (20.0, 200.0, 4000.0)
+
+    report = {"smoke": smoke, "unix_time": int(time.time()),
+              "backend": jax.default_backend(), "vision": [], "token": []}
+    veng = make_vision_engine(vcfg, vparams,
+                              max_batch=4 if smoke else 8,
+                              max_delay_ms=20.0)
+    for i, rate in enumerate(vision_rates):
+        report["vision"].append(
+            bench_vision(veng, rate, n_img, warmup=warmup and i == 0))
+    teng = make_token_engine(tcfg, tparams, max_batch=4, max_delay_ms=10.0)
+    for i, rate in enumerate(token_rates):
+        report["token"].append(
+            bench_token(teng, rate, n_req, max_new=3 if smoke else 8,
+                        warmup=warmup and i == 0))
+    return report
+
+
+def main(argv=None):
+    out = Path((argv or sys.argv[1:] or [DEFAULT_OUT])[0])
+    report = collect(smoke=False)
+    out.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    print(f"[serving_bench] wrote {out}")
+    for row in report["vision"] + report["token"]:
+        tput = row.get("imgs_per_s_wall", row.get("tok_per_s_wall"))
+        print(f"  {row['engine']:>6} rate={row['arrival_rate_per_s']:>7}/s "
+              f"tput={tput:>9} p50={row['p50_ms']:.2f}ms "
+              f"p99={row['p99_ms']:.2f}ms occ={row['batch_occupancy']:.2f} "
+              f"flushes={row['flush_reasons']}")
+
+
+if __name__ == "__main__":
+    main()

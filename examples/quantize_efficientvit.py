@@ -62,16 +62,24 @@ def main():
         qm.params, qm2.params)))
     print(f"      round-trip bitwise-identical tree: {same}")
 
-    print("[4/6] batched vision serving (pow2 buckets) on the loaded tree")
-    eng = qm2.serve(max_batch=_BATCH)
+    print("[4/6] async vision serving (deadline flush) on the loaded tree")
+    # the engine sits on the shared scheduler core: submit() returns a
+    # handle immediately, and batches execute when they FILL or when the
+    # oldest request's age exceeds max_delay_ms — no explicit flush()
+    eng = qm2.serve(max_batch=8, max_delay_ms=15.0)
     rng = np.random.default_rng(0)
-    for n in (3, 7, 12):  # ragged arrivals -> padded pow2 buckets
-        logits = eng.classify(
-            rng.normal(0, 1, (n, CFG.img_res, CFG.img_res, 3)))
-        assert logits.shape == (n, CFG.n_classes)
+    handles = [eng.submit(rng.normal(0, 1, (CFG.img_res, CFG.img_res, 3))
+                          .astype(np.float32)) for _ in range(12)]
+    while not all(h.done for h in handles):
+        eng.poll()  # full batches already ran inline; the tail of 4 images
+        #             executes here once the 15 ms deadline fires
+    logits = np.stack([h.result() for h in handles])
+    assert logits.shape == (12, CFG.n_classes)
     print(f"      {eng.stats.images} images in {eng.stats.batches} batches, "
           f"buckets {sorted(eng.stats.buckets_used)}, "
-          f"{eng.stats.padded_images} pad rows")
+          f"{eng.stats.padded_images} pad rows, "
+          f"flushes {eng.stats.flush_reasons}, "
+          f"queue p50 {eng.stats.p50_ms:.1f} ms")
 
     print("[5/6] accelerator cost (calibrated cycle/energy model)")
     A.set_calibration()
@@ -87,6 +95,14 @@ def main():
     edp_saving = 1 - ours.edp_mj_ms / 4.3  # paper-reported Trio EDP
     print(f"      EDP saving vs Trio-ViT: {100 * edp_saving:.0f}% "
           f"(paper: 80%)")
+    # calibrate the latency model against MEASURED kernel wall-clock
+    # (BENCH_kernels.json fused vs f32-fallback conv rows)
+    cal = A.KernelCalibration.from_bench_json()
+    ours_cal = A.simulate(layers, "m2q", kernel_cal=cal)
+    print(f"      measured-kernel calibration ({cal.backend}: "
+          f"pw x{cal.pw_speedup:.2f}, dw x{cal.dw_speedup:.2f}): "
+          f"{ours_cal.latency_ms:.3f} ms, EDP {ours_cal.edp_mj_ms:.2f} "
+          f"mJ*ms (ideal {ours.edp_mj_ms:.2f})")
     print("[6/6] done")
 
 

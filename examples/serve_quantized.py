@@ -1,6 +1,8 @@
 """END-TO-END DRIVER (the paper is an inference paper): PTQ-quantize a
 small LM with M2Q and serve a stream of batched requests through the
-continuous-batching engine — prefill, decode, slot reuse, sampling.
+continuous-batching engine — async admission queue (deadline-based prefill
+coalescing on the shared scheduler core), prefill, decode, slot reuse,
+sampling.
 
   PYTHONPATH=src python examples/serve_quantized.py [--arch qwen1.5-0.5b]
 """
@@ -20,6 +22,9 @@ def main():
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="admission deadline: requests coalesce into "
+                         "bigger prefill batches until the oldest ages out")
     args = ap.parse_args()
 
     cfg = REDUCED[args.arch]
@@ -37,25 +42,30 @@ def main():
           f"({sum(1 for r in report if r.decision == 'mixed')} mixed, "
           f"{sum(1 for r in report if r.decision == 'lowbit')} low-bit)")
 
-    print("[3/3] serve with continuous batching")
-    eng = qm.serve(max_batch=4, max_len=96)
+    print("[3/3] serve with continuous batching (async admission queue)")
+    eng = qm.serve(max_batch=4, max_len=96, max_delay_ms=args.max_delay_ms)
     rng = np.random.default_rng(7)
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
+        # submit returns immediately; each request also carries a handle
+        # (req.handle) that resolves when its tokens are ready
         reqs.append(eng.submit(
             rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
             max_new_tokens=args.max_new,
             temperature=0.8 if i % 2 else 0.0))
     t0 = time.time()
-    stats = eng.run()
+    stats = eng.run()  # admission flushes by deadline/full batch, no flush()
     dt = time.time() - t0
-    assert all(r.done for r in reqs)
+    assert all(r.done and r.handle.done for r in reqs)
     print(f"      served {stats.finished} requests, "
           f"{stats.decoded_tokens} tokens in {dt:.1f}s "
           f"({stats.decoded_tokens / dt:.1f} tok/s, "
           f"{stats.steps} engine steps)")
-    print("      sample:", reqs[0].out_tokens)
+    print(f"      queue p50={stats.p50_ms:.2f}ms p99={stats.p99_ms:.2f}ms "
+          f"prefill-occupancy={stats.batch_occupancy:.2f} "
+          f"flushes={stats.flush_reasons}")
+    print("      sample:", reqs[0].handle.result())
 
 
 if __name__ == "__main__":

@@ -289,18 +289,24 @@ class QuantizedModel:
         """One forward pass on the quantized tree (images or tokens)."""
         return self.model.forward(self.cfg, self.params, inputs, **kw)
 
-    def serve(self, dispatch=None, **engine_kw):
+    def serve(self, dispatch=None, mesh=None, **engine_kw):
         """A serving engine for this artifact, chosen by modality: the
         batched VisionEngine for image backbones, the continuous-batching
-        token Engine otherwise.  ``dispatch``: optional
+        token Engine otherwise.  Both run on the shared scheduler core
+        (``serving.scheduler``) and accept ``max_delay_ms`` for
+        deadline-based flushing.  ``dispatch``: optional
         kernels.ops.DispatchConfig pinning kernel dispatch for the engine's
-        traces."""
+        traces.  ``mesh``: optional jax Mesh enabling sharded execution —
+        the artifact's qparams are placed per ``dist.sharding.param_specs``
+        (vision additionally batches data-parallel, token decode caches
+        shard per ``cache_specs``)."""
         if self.cfg.family == "efficientvit":
             from .serving.vision import VisionEngine
             return VisionEngine(self.cfg, self.params, dispatch=dispatch,
-                                **engine_kw)
+                                mesh=mesh, **engine_kw)
         from .serving.engine import Engine
-        return Engine(self.cfg, self.params, dispatch=dispatch, **engine_kw)
+        return Engine(self.cfg, self.params, dispatch=dispatch, mesh=mesh,
+                      **engine_kw)
 
     # -- abstract twin ------------------------------------------------------
     def m2q_splits(self) -> Dict[str, Tuple[int, int]]:

@@ -1,0 +1,130 @@
+"""Shared batching math + unified serving statistics.
+
+Both serving front-ends (the continuous-batching token ``Engine`` and the
+stateless ``VisionEngine``) bound XLA recompilation the same way: batch
+shapes are rounded up to a power of two before execution, so the number of
+compiled graph variants is O(log2 max_batch) regardless of the traffic's
+size distribution.  The rounding lives here so the two engines cannot
+drift; so does :class:`ServeStats`, the one stats object the scheduler,
+the engines, and ``benchmarks/serving_bench.py`` all share — queue-latency
+percentiles, batch occupancy, and the padded-work fraction are defined
+once, identically, for both modalities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set
+
+
+def pow2_bucket(n: int, min_bucket: int = 1, cap: Optional[int] = None) -> int:
+    """Smallest power-of-two multiple of ``min_bucket`` >= ``n``.
+
+    ``min_bucket`` floors the result (it should itself be a power of two —
+    sharded engines floor at the data-axis size so every executed batch
+    stays divisible); ``cap`` bounds it (the engine's ``max_batch``, i.e.
+    the largest shape ever compiled).
+    """
+    if n < 0:
+        raise ValueError(f"bucket size for negative count {n}")
+    b = max(1, min_bucket)
+    while b < n:
+        b *= 2
+    return b if cap is None else min(b, cap)
+
+
+def _percentile(sorted_vals: List[float], pct: float) -> float:
+    """Nearest-rank percentile on a pre-sorted list (0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    k = max(0, min(len(sorted_vals) - 1,
+                   int(round(pct / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[k]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Unified serving counters (one definition for both engines).
+
+    * ``queue_ms`` — per-request time from ``submit()`` to the flush that
+      started executing it (recorded by the scheduler, measured on the
+      scheduler's clock so tests/benchmarks can drive virtual time).
+    * occupancy — real items per executed batch relative to the policy's
+      ``max_batch`` (``capacity_items`` accumulates per-batch capacity).
+    * padded-work fraction — pad rows (pow2 bucketing) or pad tokens
+      (ragged prefill) as a share of everything actually executed.
+    """
+
+    submitted: int = 0
+    items: int = 0            # real items executed through batches
+    batches: int = 0
+    padded_items: int = 0     # pad rows/tokens added (wasted compute)
+    capacity_items: int = 0   # sum of per-batch capacity (policy max_batch)
+    queue_ms: List[float] = dataclasses.field(default_factory=list)
+    flush_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+    buckets_used: Set[int] = dataclasses.field(default_factory=set)
+
+    # -- recording -----------------------------------------------------------
+    def record_batch(self, items: int, padded: int = 0,
+                     capacity: Optional[int] = None,
+                     bucket: Optional[int] = None) -> None:
+        self.items += items
+        self.batches += 1
+        self.padded_items += padded
+        self.capacity_items += capacity if capacity else items + padded
+        if bucket:
+            self.buckets_used.add(bucket)
+
+    def record_flush(self, reason: str) -> None:
+        self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
+
+    # long-lived engines must not leak: latency samples keep a sliding
+    # window (percentiles reflect recent traffic, memory stays bounded)
+    _MAX_LATENCY_SAMPLES = 16384
+
+    def record_latency(self, ms: float) -> None:
+        self.queue_ms.append(ms)
+        if len(self.queue_ms) > self._MAX_LATENCY_SAMPLES:
+            del self.queue_ms[: self._MAX_LATENCY_SAMPLES // 2]
+
+    def reset(self) -> None:
+        """Zero every counter in place (benchmark warmup; the scheduler
+        keeps its reference, so stats must reset without rebinding)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    f.default_factory() if f.default is dataclasses.MISSING
+                    else f.default)
+
+    # -- derived metrics -----------------------------------------------------
+    def latency_ms(self, pct: float) -> float:
+        return _percentile(sorted(self.queue_ms), pct)
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency_ms(50.0)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency_ms(99.0)
+
+    @property
+    def batch_occupancy(self) -> float:
+        return self.items / self.capacity_items if self.capacity_items else 0.0
+
+    @property
+    def padded_fraction(self) -> float:
+        total = self.items + self.padded_items
+        return self.padded_items / total if total else 0.0
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-ready snapshot (serving_bench rows, CLI reporting)."""
+        return {
+            "submitted": self.submitted,
+            "items": self.items,
+            "batches": self.batches,
+            "p50_ms": round(self.p50_ms, 4),
+            "p99_ms": round(self.p99_ms, 4),
+            "batch_occupancy": round(self.batch_occupancy, 4),
+            "padded_fraction": round(self.padded_fraction, 4),
+            "flush_reasons": dict(self.flush_reasons),
+            "buckets_used": sorted(self.buckets_used),
+        }

@@ -5,6 +5,14 @@ cache rows.  New requests prefill into free slots; every engine step decodes
 one token for all live slots; finished requests free their slot immediately
 (continuous batching — no head-of-line blocking on the longest request).
 
+Admission runs on the shared scheduler core (serving.scheduler): ``submit``
+enqueues onto a deadline-aware queue, and each step admits waiting requests
+when the flush policy fires — immediately whenever slots are free with the
+default ``max_delay_ms=0.0`` (regression-identical to the pre-scheduler
+engine), or coalesced into bigger prefill batches when a positive deadline
+is configured.  Queue latency, batch occupancy, and ragged-pad fractions
+land in the unified ``ServeStats`` both serving engines share.
+
 Device-resident decode loop: sampling (greedy AND temperature) runs inside
 the jitted decode step, the pending next-token vector and the per-slot
 output ring live on device, and the PRNG key threads through the jit — the
@@ -16,6 +24,12 @@ prompts with per-row lengths (``RAGGED_PREFILL``) admit every waiting
 request in one call; recurrent families are bucketed by exact prompt length
 so pad tokens never pollute their state.
 
+With ``mesh=`` the engine runs sharded: params are placed per
+``repro.dist.sharding.param_specs`` (QTensor payloads and scales co-shard),
+the decode cache per ``cache_specs`` (batch rows over ``data``, attention
+heads over ``model`` when divisible), and the decode step re-pins the cache
+sharding every step so placements stay exactly on-spec.
+
 This is the serving analogue of the paper's deployment: weights are the
 QTensor tree from core.quantize_model, executing the int8/APoT/packed-4bit
 paths.
@@ -24,8 +38,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import itertools
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +48,8 @@ import numpy as np
 from ..kernels import ops as _kops
 from ..models import get_model
 from ..models.config import ArchConfig
+from .batching import ServeStats, pow2_bucket
+from .scheduler import FlushPolicy, Handle, Scheduler
 
 
 @dataclasses.dataclass
@@ -44,10 +60,13 @@ class Request:
     temperature: float = 0.0  # 0 = greedy
     out_tokens: Optional[List[int]] = None
     done: bool = False
+    handle: Optional[Handle] = None  # scheduler future (resolves at finish)
 
 
 @dataclasses.dataclass
-class EngineStats:
+class EngineStats(ServeStats):
+    """Unified ServeStats + the token engine's decode-loop counters."""
+
     steps: int = 0
     decoded_tokens: int = 0
     prefills: int = 0
@@ -58,22 +77,42 @@ class EngineStats:
 class Engine:
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
                  max_len: int = 256, seed: int = 0,
-                 dispatch: Optional[_kops.DispatchConfig] = None):
+                 max_delay_ms: float = 0.0,
+                 dispatch: Optional[_kops.DispatchConfig] = None,
+                 mesh=None,
+                 clock: Callable[[], float] = time.monotonic):
         # scoped kernels.ops.DispatchConfig pinning kernel dispatch for the
         # engine's prefill/decode traces (None inherits env/backend default)
         self.dispatch = dispatch
         self.cfg = cfg
         self.model = get_model(cfg)
-        self.params = params
         self.B = max_batch
         self.T = max_len
-        self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.stats = EngineStats()
-        self._uids = itertools.count()  # monotonic: uids never collide
+        if max_delay_ms is None:
+            # None (the vision explicit-flush mode) would leave a sub-
+            # max_batch queue waiting forever: the token engine has no
+            # drain() path, so admission MUST have a deadline
+            raise ValueError(
+                "token engine admission needs a deadline: use "
+                "max_delay_ms=0.0 (admit whenever slots free) or > 0 "
+                "(coalesce prefills), not None")
+        # admission queue on the shared scheduler core; max_delay_ms=0.0
+        # admits whenever slots are free (the classic behavior), >0
+        # coalesces prefills until the batch fills or the deadline fires
+        self.scheduler = Scheduler(
+            policy=FlushPolicy(max_batch=max_batch,
+                               max_delay_ms=max_delay_ms),
+            stats=self.stats, clock=clock)
         self._ragged = bool(getattr(self.model, "RAGGED_PREFILL", False))
         self.cache = self.model.init_cache(cfg, max_batch, max_len,
                                            dtype=jnp.float32)
+        self.mesh = mesh
+        self._cache_shardings = None
+        if mesh is not None:
+            params, self.cache = self._shard(params, self.cache, mesh)
+        self.params = params
         # device-resident decode state
         self.key = jax.random.PRNGKey(seed)
         self._pending = jnp.zeros((max_batch,), jnp.int32)
@@ -87,22 +126,46 @@ class Engine:
         self._prefill_sample = jax.jit(self._prefill_sample_impl)
         self._prefill_sample_ragged = jax.jit(self._prefill_sample_ragged_impl)
 
-    # -- request API --------------------------------------------------------
+    def _shard(self, params, cache, mesh):
+        """Place params/cache per dist.sharding (decode caches shard over
+        the mesh; QTensor payload+scale children co-shard by spec)."""
+        from ..dist import sharding as shd
+        params = jax.device_put(
+            params, shd.shardings_from_specs(shd.param_specs(params, mesh),
+                                             mesh))
+        self._cache_shardings = shd.shardings_from_specs(
+            shd.cache_specs(cache, mesh, shard_model=True), mesh)
+        return params, jax.device_put(cache, self._cache_shardings)
+
+    # -- request API ---------------------------------------------------------
+    @property
+    def queue(self) -> List[Request]:
+        """Requests waiting for admission (FIFO), via the scheduler."""
+        return self.scheduler.pending_payloads()
+
     def submit(self, prompt, max_new_tokens: int = 16,
                temperature: float = 0.0) -> Request:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt: prefill needs at least one token")
+        if max_new_tokens < 1:
+            # a zero/negative budget would still burn a full prefill+sample
+            # (the first token IS sampled at prefill) and retire with empty
+            # output — reject instead of doing work the caller threw away
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens} (every "
+                "admitted request decodes at least its prefill-sampled "
+                "first token)")
         if len(prompt) + max_new_tokens > self.T:
             # the KV cache and the device output ring are both max_len wide;
             # silently clamping would truncate/corrupt the decoded stream
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
                 f" exceeds max_len ({self.T})")
-        req = Request(uid=next(self._uids), prompt=prompt,
-                      max_new_tokens=max_new_tokens, temperature=temperature,
-                      out_tokens=[])
-        self.queue.append(req)
+        req = Request(uid=0, prompt=prompt, max_new_tokens=max_new_tokens,
+                      temperature=temperature, out_tokens=[])
+        req.handle = self.scheduler.submit(req)
+        req.uid = req.handle.uid
         return req
 
     def _dispatch_scope(self):
@@ -130,6 +193,11 @@ class Engine:
         outbuf = outbuf.at[b, jnp.minimum(counts, self.T - 1)].set(
             jnp.where(live, tok, outbuf[b, jnp.minimum(counts, self.T - 1)]))
         counts = counts + live.astype(jnp.int32)
+        if self._cache_shardings is not None:
+            # pin the cache's dist.sharding placement through the step so
+            # the sharded decode loop stays exactly on-spec
+            cache = jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                                 self._cache_shardings)
         return cache, tok, outbuf, counts, key
 
     def _prefill_sample_impl(self, params, slot_cache, tokens, temps, key):
@@ -156,32 +224,39 @@ class Engine:
             return dst.at[:, idx].set(src)
 
         self.cache = jax.tree.map(put, self.cache, group_cache)
+        if self._cache_shardings is not None:
+            # eager .at[].set left the placement to XLA; re-pin to spec
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
 
     def _admit(self):
-        # Free slots are recomputed on every pass: the in-loop
-        # _finish_done() (max_new_tokens==1 completing at prefill) frees
-        # slots that queued requests can take within the SAME admit call —
-        # computing ``free`` once left them idle until the next step.
+        # Free slots and the due-check are recomputed on every pass: the
+        # in-loop _finish_done() (max_new_tokens==1 completing at prefill)
+        # frees slots that queued requests can take within the SAME admit
+        # call — computing ``free`` once left them idle until the next
+        # step.  With the default max_delay_ms=0.0 the scheduler is due
+        # whenever anything is pending (classic admit-on-free-slot); a
+        # positive deadline holds admission to coalesce prefill batches.
         while True:
             free = [i for i, r in enumerate(self.slots) if r is None]
-            n = min(len(free), len(self.queue))
-            if n == 0:
+            if not free:
                 return
-            slots, reqs = free[:n], self.queue[:n]
+            reason = self.scheduler.due()
+            if reason is None:
+                return
+            cands = self.scheduler.peek(len(free))
             if self._ragged:
-                gslots, greqs = slots, reqs
+                group = list(cands)
             else:  # exact-length bucket: recurrent states must not see
                 # padding; one bucket per pass, the rest re-enter next pass
-                by_len: Dict[int, list] = {}
-                for s, r in zip(slots, reqs):
-                    by_len.setdefault(len(r.prompt), []).append((s, r))
-                gslots, greqs = map(list,
-                                    zip(*next(iter(by_len.values()))))
-            self._prefill_group(list(gslots), list(greqs))
+                by_len: Dict[int, List[Handle]] = {}
+                for h in cands:
+                    by_len.setdefault(len(h.payload.prompt), []).append(h)
+                group = next(iter(by_len.values()))
+            self.scheduler.pop(group, reason)
+            self._prefill_group(free[: len(group)], group)
 
-    def _prefill_group(self, gslots: List[int], greqs: List[Request]):
-        taken = {id(r) for r in greqs}
-        self.queue = [r for r in self.queue if id(r) not in taken]
+    def _prefill_group(self, gslots: List[int], handles: List[Handle]):
+        greqs = [h.payload for h in handles]
         lens = np.asarray([len(r.prompt) for r in greqs], np.int32)
         pmax = int(lens.max())
         if self._ragged:
@@ -189,10 +264,7 @@ class Engine:
             # max_len): bounds XLA recompiles of the prefill graph to
             # O(B * log T) shape variants instead of one per distinct
             # prompt length; lengths mask the extra pad columns
-            b = 8
-            while b < pmax:
-                b *= 2
-            pmax = min(b, self.T)
+            pmax = pow2_bucket(pmax, 8, self.T)
         toks = np.zeros((len(greqs), pmax), np.int32)
         for i, r in enumerate(greqs):
             toks[i, : len(r.prompt)] = r.prompt
@@ -219,6 +291,11 @@ class Engine:
             self._emitted[s] = 1
         self.stats.prefills += len(greqs)
         self.stats.prefill_batches += 1
+        # unified queue-level accounting: real prompt tokens vs the padded
+        # (n, pmax) prefill actually executed
+        self.stats.record_batch(items=int(lens.sum()),
+                                padded=int(len(greqs) * pmax - lens.sum()),
+                                capacity=self.B * pmax)
         self._finish_done()  # max_new_tokens == 1 finishes at prefill
 
     def _finish_done(self):
@@ -230,6 +307,8 @@ class Engine:
                 jax.device_get(self._outbuf[slot, : req.max_new_tokens]))
             req.out_tokens = [int(t) for t in toks]
             req.done = True
+            if req.handle is not None:
+                req.handle.set_result(req.out_tokens)
             self.stats.finished += 1
             self.slots[slot] = None
             self._emitted[slot] = 0
@@ -255,7 +334,19 @@ class Engine:
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if self.scheduler.pending == 0 and all(
+                    s is None for s in self.slots):
                 break
-            self.step()
+            if self.step() == 0 and self.scheduler.pending \
+                    and self.scheduler.clock is time.monotonic:
+                # nothing live and the queue not yet due (max_delay_ms > 0
+                # holding admission): sleep toward the deadline instead of
+                # hot-spinning the step budget away.  Only on the REAL
+                # clock — sleeping cannot advance an injected virtual
+                # clock, whose driver steps the engine itself
+                nd = self.scheduler.next_deadline()
+                if nd is not None:
+                    delay = nd - self.scheduler.clock()
+                    if delay > 0:
+                        time.sleep(min(delay, 1e-3))
         return self.stats

@@ -1,0 +1,207 @@
+"""The shared async scheduler core behind both serving engines.
+
+One queue discipline for both modalities: requests enter through
+``submit()`` and get a :class:`Handle` back immediately (a future — the
+result is delivered when the batch holding the request executes).  A batch
+executes when the pluggable :class:`FlushPolicy` says so:
+
+* **full**      — ``max_batch`` requests are waiting, or
+* **deadline**  — the OLDEST waiting request's age exceeds
+  ``max_delay_ms`` (the latency guarantee: no request waits longer than
+  one deadline for admission, however quiet the traffic), or
+* **drain**     — an explicit ``drain()``/``flush()`` call.
+
+The clock is injectable (``clock=`` returns seconds, default
+``time.monotonic``) so tests and ``benchmarks/serving_bench.py`` drive
+deadline behavior with virtual time instead of sleeping.
+
+Two usage modes share the same core:
+
+* **executor mode** (VisionEngine): the scheduler owns execution — give it
+  an ``executor(handles, reason)`` callable and call :meth:`poll`
+  periodically; due batches run and deliver results into their handles.
+  ``submit()`` polls opportunistically, so a full batch executes inline.
+* **admission mode** (token Engine): the engine owns execution (slots,
+  prefill grouping, the decode loop) and uses :meth:`due` / :meth:`peek` /
+  :meth:`pop` to decide *when* and *which* waiting requests to admit —
+  queue latency and flush accounting still land in the shared
+  :class:`~repro.serving.batching.ServeStats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, List, Optional, Sequence
+
+from .batching import ServeStats
+
+# flush reasons (ServeStats.flush_reasons keys)
+FLUSH_FULL = "full"
+FLUSH_DEADLINE = "deadline"
+FLUSH_DRAIN = "drain"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushPolicy:
+    """When does a waiting batch execute?
+
+    ``max_delay_ms=None`` disables the deadline (only full batches and
+    explicit drains flush — the old explicit-flush batcher behavior);
+    ``max_delay_ms=0.0`` flushes whenever anything is pending (the token
+    engine's admit-on-free-slot behavior).
+    """
+
+    max_batch: int = 64
+    max_delay_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_delay_ms is not None and self.max_delay_ms < 0:
+            raise ValueError(
+                f"max_delay_ms must be >= 0 or None, got {self.max_delay_ms}")
+
+
+class Handle:
+    """A submitted request: resolved when its batch executes.
+
+    ``result()`` raises until the scheduler has flushed the request —
+    drive the scheduler (``poll()`` until the deadline passes, or
+    ``drain()``) to force delivery.
+    """
+
+    __slots__ = ("uid", "payload", "submitted_at", "done", "_result")
+
+    def __init__(self, uid: int, payload, submitted_at: float):
+        self.uid = uid
+        self.payload = payload
+        self.submitted_at = submitted_at
+        self.done = False
+        self._result = None
+
+    def set_result(self, result) -> None:
+        self._result = result
+        self.done = True
+
+    def result(self):
+        if not self.done:
+            raise RuntimeError(
+                f"request {self.uid} has no result yet: it is still queued "
+                "or executing; poll() until its deadline passes, or drain()")
+        return self._result
+
+    def __repr__(self):
+        state = "done" if self.done else "pending"
+        return f"Handle(uid={self.uid}, {state})"
+
+
+class Scheduler:
+    """Deadline-driven FIFO request queue (see module docstring)."""
+
+    def __init__(self, policy: FlushPolicy = FlushPolicy(),
+                 executor: Optional[Callable] = None,
+                 stats: Optional[ServeStats] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy
+        self.executor = executor
+        self.stats = stats if stats is not None else ServeStats()
+        self.clock = clock
+        self._q: List[Handle] = []
+        self._uids = itertools.count()  # monotonic: uids never collide
+
+    # -- queue state ---------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        return len(self._q)
+
+    def pending_payloads(self) -> list:
+        """Payloads still queued, FIFO order (diagnostics / engine compat)."""
+        return [h.payload for h in self._q]
+
+    def oldest_age_ms(self, now: Optional[float] = None) -> float:
+        if not self._q:
+            return 0.0
+        now = self.clock() if now is None else now
+        return (now - self._q[0].submitted_at) * 1000.0
+
+    def next_deadline(self) -> Optional[float]:
+        """Absolute clock time the oldest request becomes due (None if the
+        queue is empty or the policy has no deadline) — serving loops sleep
+        until this instead of busy-polling."""
+        if not self._q or self.policy.max_delay_ms is None:
+            return None
+        return self._q[0].submitted_at + self.policy.max_delay_ms / 1000.0
+
+    def due(self, now: Optional[float] = None) -> Optional[str]:
+        """The flush reason if the policy wants a batch executed now."""
+        if not self._q:
+            return None
+        if len(self._q) >= self.policy.max_batch:
+            return FLUSH_FULL
+        deadline = self.next_deadline()
+        if deadline is not None:
+            # compare against next_deadline()'s own arithmetic so a caller
+            # that slept exactly until the returned deadline IS due (an
+            # age-based >= check can miss it by one float ulp and spin)
+            now = self.clock() if now is None else now
+            if now >= deadline:
+                return FLUSH_DEADLINE
+        return None
+
+    # -- request API ---------------------------------------------------------
+    def submit(self, payload) -> Handle:
+        h = Handle(uid=next(self._uids), payload=payload,
+                   submitted_at=self.clock())
+        self._q.append(h)
+        self.stats.submitted += 1
+        if self.executor is not None:
+            self.poll()  # a now-full batch executes inline
+        return h
+
+    # -- admission mode (the engine owns execution) --------------------------
+    def peek(self, n: int) -> List[Handle]:
+        """Up to ``n`` oldest handles, not removed (the token engine groups
+        them by prompt length before committing to a prefill batch)."""
+        return self._q[: max(0, n)]
+
+    def pop(self, handles: Sequence[Handle], reason: str) -> List[Handle]:
+        """Remove ``handles`` from the queue; stamps each one's queue
+        latency and the batch's flush reason into the shared stats."""
+        now = self.clock()
+        taken = {id(h) for h in handles}
+        self._q = [h for h in self._q if id(h) not in taken]
+        for h in handles:
+            self.stats.record_latency((now - h.submitted_at) * 1000.0)
+        if handles:
+            self.stats.record_flush(reason)
+        return list(handles)
+
+    # -- executor mode (the scheduler owns execution) ------------------------
+    def poll(self, now: Optional[float] = None) -> int:
+        """Execute every batch the policy says is due.  Returns the number
+        of requests delivered.  No-op without an executor."""
+        if self.executor is None:
+            return 0
+        delivered = 0
+        while True:
+            reason = self.due(now)
+            if reason is None:
+                return delivered
+            handles = self.pop(self._q[: self.policy.max_batch], reason)
+            self.executor(handles, reason)
+            delivered += len(handles)
+
+    def drain(self) -> List[Handle]:
+        """Flush EVERYTHING pending regardless of policy (shutdown, or the
+        legacy explicit-flush API).  Returns the flushed handles in submit
+        order.  Requires an executor."""
+        if self.executor is None:
+            raise RuntimeError("drain() needs an executor; admission-mode "
+                               "callers pop() and execute themselves")
+        flushed: List[Handle] = []
+        while self._q:
+            handles = self.pop(self._q[: self.policy.max_batch], FLUSH_DRAIN)
+            self.executor(handles, FLUSH_DRAIN)
+            flushed.extend(handles)
+        return flushed

@@ -2,11 +2,20 @@
 
 The token engine (serving.engine) is slot-structured because decode is
 stateful; image classification is stateless, so its serving shape is a
-*batcher*: requests accumulate, and each flush pads the pending batch up to
-a power-of-two bucket before running ONE jitted forward.  Pow2 bucketing
-bounds XLA recompilation to O(log2 max_batch) graph variants regardless of
-the traffic's batch-size distribution — the same trick the token engine
-applies to ragged prefill lengths.
+*thin executor plugged into the shared scheduler core*
+(serving.scheduler): ``submit()`` enqueues one image and returns a
+:class:`~repro.serving.scheduler.Handle` immediately; the request executes
+when the flush policy fires — the batch fills to ``max_batch``, the oldest
+request's age exceeds ``max_delay_ms`` (checked by :meth:`poll`), or an
+explicit :meth:`flush` drains the queue — and the handle's ``result()``
+yields that image's logits row.
+
+Each executed batch pads up to a power-of-two bucket (shared
+``batching.pow2_bucket`` — the same trick the token engine applies to
+ragged prefill lengths) before running ONE jitted forward.  With ``mesh=``
+the engine runs data-parallel sharded execution: params are placed by
+``repro.dist.sharding.param_specs``, the bucket floor rises to the data
+axis size so every executed batch shards evenly over ``batch_specs``.
 
 With QTensor params (core.quantize_model) the jitted forward executes the
 quantized conv/matmul hot path end to end: stride-1 1x1 PWConvs run the
@@ -18,7 +27,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import List, Optional, Set
+import time
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,35 +37,75 @@ import numpy as np
 from ..kernels import ops as _kops
 from ..models import get_model
 from ..models.config import ArchConfig
+from .batching import ServeStats, pow2_bucket
+from .scheduler import FlushPolicy, Handle, Scheduler
 
 
 @dataclasses.dataclass
-class VisionStats:
-    images: int = 0
-    batches: int = 0
-    padded_images: int = 0  # pad rows added by bucketing (wasted compute)
-    buckets_used: Set[int] = dataclasses.field(default_factory=set)
+class VisionStats(ServeStats):
+    """Unified ServeStats + the vision-historical field names."""
+
+    @property
+    def images(self) -> int:
+        return self.items
+
+    @property
+    def padded_images(self) -> int:
+        return self.padded_items
 
 
 class VisionEngine:
-    """Micro-batching classifier: submit images, flush to get logits."""
+    """Deadline-batched classifier: submit images, poll (or flush) for
+    logits delivered through per-request handles."""
 
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 64,
                  min_bucket: int = 1,
-                 dispatch: Optional[_kops.DispatchConfig] = None):
+                 max_delay_ms: Optional[float] = None,
+                 dispatch: Optional[_kops.DispatchConfig] = None,
+                 mesh=None,
+                 clock: Callable[[], float] = time.monotonic):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.cfg = cfg
         self.model = get_model(cfg)
-        self.params = params
         self.B = max_batch
         self.min_bucket = max(1, min_bucket)
         self.stats = VisionStats()
-        self._pending: List[np.ndarray] = []
+        self.mesh = mesh
+        self._batch_spec = None
+        if mesh is not None:
+            params = self._shard(params, mesh)
+        self.params = params
+        self.scheduler = Scheduler(
+            policy=FlushPolicy(max_batch=max_batch,
+                               max_delay_ms=max_delay_ms),
+            executor=self._execute, stats=self.stats, clock=clock)
         self._fwd = jax.jit(self._fwd_impl)
         # pin kernel dispatch for every trace this engine owns (scoped
         # kernels.ops.DispatchConfig; None inherits env/backend defaults)
         self.dispatch = dispatch
+
+    def _shard(self, params, mesh):
+        """Place params per dist.sharding and raise the bucket floor to the
+        data-axis size so every pow2 batch shards evenly."""
+        from ..dist import sharding as shd
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = dict(mesh.shape)
+        data = int(axes.get("data", 1))
+        if data > 1:
+            if data & (data - 1):
+                raise ValueError(
+                    f"data axis size {data} is not a power of two; pow2 "
+                    "batch buckets cannot shard evenly over it")
+            if self.B % data:
+                raise ValueError(
+                    f"max_batch ({self.B}) must be divisible by the data "
+                    f"axis size ({data}) for sharded execution")
+            self.min_bucket = max(self.min_bucket, data)
+            self._batch_spec = NamedSharding(mesh, P("data", None, None, None))
+        return jax.device_put(
+            params, shd.shardings_from_specs(shd.param_specs(params, mesh),
+                                             mesh))
 
     def _dispatch_scope(self):
         return (_kops.dispatch(self.dispatch) if self.dispatch is not None
@@ -67,32 +117,64 @@ class VisionEngine:
     def bucket(self, n: int) -> int:
         """Smallest power-of-two >= n (floored at min_bucket, capped at
         max_batch) — the batch shape actually compiled and executed."""
-        b = self.min_bucket
-        while b < n:
-            b *= 2
-        return min(b, self.B)
+        return pow2_bucket(n, self.min_bucket, self.B)
+
+    # -- execution core ------------------------------------------------------
+    def _run_batch(self, images: np.ndarray, bucket: int) -> np.ndarray:
+        """Pad ``images`` (n <= bucket) up to ``bucket`` rows, run one
+        jitted forward, record batch stats, return the n real rows."""
+        n = images.shape[0]
+        pad = bucket - n
+        if pad:
+            images = np.concatenate(
+                [images, np.zeros((pad,) + images.shape[1:], np.float32)])
+        x = jnp.asarray(images)
+        if self._batch_spec is not None:
+            x = jax.device_put(x, self._batch_spec)
+        with self._dispatch_scope():
+            logits = self._fwd(self.params, x)
+        self.stats.record_batch(items=n, padded=pad, capacity=self.B,
+                                bucket=bucket)
+        return np.asarray(logits)[:n]
+
+    def _execute(self, handles: List[Handle], reason: str) -> None:
+        """Scheduler executor: one flushed batch -> per-handle logits."""
+        imgs = np.stack([h.payload for h in handles]).astype(np.float32)
+        out = self._run_batch(imgs, self.bucket(len(handles)))
+        for h, row in zip(handles, out):
+            h.set_result(row)
 
     # -- request API ---------------------------------------------------------
-    def submit(self, image: np.ndarray) -> int:
-        """Queue one (H, W, 3) image; returns its index in the next flush."""
+    def submit(self, image: np.ndarray) -> Handle:
+        """Queue one (H, W, 3) image; returns a handle whose ``result()``
+        (this image's (n_classes,) logits) is delivered at flush — when the
+        batch fills, the deadline fires, or ``flush()`` drains."""
         img = np.asarray(image)
         if img.shape != (self.cfg.img_res, self.cfg.img_res, 3):
             raise ValueError(
                 f"expected ({self.cfg.img_res}, {self.cfg.img_res}, 3), "
                 f"got {img.shape}")
-        self._pending.append(img)
-        return len(self._pending) - 1
+        return self.scheduler.submit(img)
+
+    def poll(self) -> int:
+        """Execute whatever the flush policy says is due (a full batch, or
+        pending requests older than ``max_delay_ms``).  Returns the number
+        of requests delivered.  Serving loops call this instead of
+        ``flush()``; ``scheduler.next_deadline()`` says how long they may
+        sleep first."""
+        return self.scheduler.poll()
 
     def flush(self) -> Optional[np.ndarray]:
-        """Run all pending images; returns (n_pending, n_classes) logits."""
-        if not self._pending:
+        """Drain ALL pending images regardless of policy; returns their
+        (n_pending, n_classes) logits in submit order (None if idle)."""
+        flushed = self.scheduler.drain()
+        if not flushed:
             return None
-        out = self.classify(np.stack(self._pending))
-        self._pending = []
-        return out
+        return np.stack([h.result() for h in flushed])
 
     def classify(self, images) -> np.ndarray:
-        """(N, H, W, 3) images -> (N, n_classes) logits, any N >= 1."""
+        """(N, H, W, 3) images -> (N, n_classes) logits, any N >= 1 — the
+        direct batch path, bypassing the queue (offline evaluation)."""
         images = np.asarray(images, np.float32)
         n = images.shape[0]
         if n == 0:
@@ -100,16 +182,8 @@ class VisionEngine:
         outs = []
         for start in range(0, n, self.B):
             chunk = images[start:start + self.B]
-            b = self.bucket(chunk.shape[0])
-            pad = b - chunk.shape[0]
-            if pad:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((pad,) + chunk.shape[1:], np.float32)])
-            with self._dispatch_scope():
-                logits = self._fwd(self.params, jnp.asarray(chunk))
-            outs.append(np.asarray(logits)[: b - pad])
-            self.stats.batches += 1
-            self.stats.padded_images += pad
-            self.stats.buckets_used.add(b)
-        self.stats.images += n
+            outs.append(self._run_batch(chunk, self.bucket(chunk.shape[0])))
+            # keep sum(flush_reasons) == batches across mixed direct/queued
+            # use (queued flushes record their reason in Scheduler.pop)
+            self.stats.record_flush("direct")
         return np.concatenate(outs)

@@ -1,0 +1,279 @@
+"""The shared scheduler core behind both serving engines: deadline-based
+flushing, handle-delivered results, unified ServeStats, and the token
+engine's scheduler-driven admission."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.models import get_model
+from repro.serving.batching import ServeStats, pow2_bucket
+from repro.serving.scheduler import (FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_FULL,
+                                     FlushPolicy, Scheduler)
+
+
+class FakeClock:
+    """Virtual seconds: tests drive deadlines without sleeping."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1000.0
+
+
+# ---------------------------------------------------------------------------
+# batching primitives
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (0, 1, 2, 3, 5, 8, 9)] == \
+        [1, 1, 2, 4, 8, 8, 16]
+    assert pow2_bucket(3, min_bucket=4) == 4      # sharded floor
+    assert pow2_bucket(9, cap=8) == 8             # max_batch cap
+    assert pow2_bucket(5, min_bucket=4, cap=32) == 8
+    with pytest.raises(ValueError):
+        pow2_bucket(-1)
+
+
+def test_servestats_percentiles_occupancy_padding():
+    s = ServeStats()
+    assert s.p50_ms == 0.0 and s.batch_occupancy == 0.0
+    s.queue_ms.extend(float(v) for v in range(1, 101))  # 1..100 ms
+    assert s.latency_ms(50) == pytest.approx(50.0, abs=1.0)
+    assert s.p99_ms == pytest.approx(99.0, abs=1.0)
+    s.record_batch(items=6, padded=2, capacity=8, bucket=8)
+    s.record_batch(items=2, padded=2, capacity=8, bucket=4)
+    assert s.batch_occupancy == pytest.approx(8 / 16)
+    assert s.padded_fraction == pytest.approx(4 / 12)
+    assert s.buckets_used == {4, 8}
+    s.record_flush("deadline")
+    s.record_flush("deadline")
+    assert s.flush_reasons == {"deadline": 2}
+    s.reset()
+    assert s.queue_ms == [] and s.batches == 0 and s.buckets_used == set()
+    assert s.flush_reasons == {}
+
+
+# ---------------------------------------------------------------------------
+# scheduler core (dummy executor)
+# ---------------------------------------------------------------------------
+
+
+def _echo_executor(record):
+    def run(handles, reason):
+        record.append((reason, [h.payload for h in handles]))
+        for h in handles:
+            h.set_result(h.payload * 10)
+    return run
+
+
+def test_scheduler_flush_policy_reasons():
+    clk = FakeClock()
+    ran = []
+    sched = Scheduler(policy=FlushPolicy(max_batch=3, max_delay_ms=50.0),
+                      executor=_echo_executor(ran), clock=clk)
+    h1 = sched.submit(1)
+    h2 = sched.submit(2)
+    assert sched.due() is None and not ran          # 2 < max_batch, young
+    sched.poll()
+    assert not ran and not h1.done
+    with pytest.raises(RuntimeError, match="no result yet"):
+        h1.result()
+    clk.advance_ms(49)
+    assert sched.due() is None
+    clk.advance_ms(2)                                # oldest age > 50 ms
+    assert sched.due() == FLUSH_DEADLINE
+    assert sched.poll() == 2
+    assert ran == [(FLUSH_DEADLINE, [1, 2])]
+    assert h1.result() == 10 and h2.result() == 20
+    # a full batch executes inline on submit, no poll needed
+    hs = [sched.submit(v) for v in (3, 4, 5)]
+    assert ran[-1] == (FLUSH_FULL, [3, 4, 5])
+    assert [h.result() for h in hs] == [30, 40, 50]
+    assert sched.stats.flush_reasons == {FLUSH_DEADLINE: 1, FLUSH_FULL: 1}
+
+
+def test_scheduler_drain_and_fifo_order():
+    clk = FakeClock()
+    ran = []
+    sched = Scheduler(policy=FlushPolicy(max_batch=4, max_delay_ms=None),
+                      executor=_echo_executor(ran), clock=clk)
+    handles = [sched.submit(v) for v in range(6)]   # 6 > max_batch: one
+    assert ran == [(FLUSH_FULL, [0, 1, 2, 3])]      # full flush fired inline
+    flushed = sched.drain()
+    assert [h.payload for h in flushed] == [4, 5]   # submit order
+    assert ran[-1] == (FLUSH_DRAIN, [4, 5])
+    assert all(h.done for h in handles)
+    assert sched.pending == 0
+    assert sched.drain() == []                      # idle drain is a no-op
+    # max_delay_ms=None never deadline-flushes
+    sched.submit(99)
+    clk.advance_ms(1e9)
+    assert sched.due() is None
+
+
+def test_scheduler_next_deadline_and_latency_recording():
+    clk = FakeClock()
+    sched = Scheduler(policy=FlushPolicy(max_batch=8, max_delay_ms=10.0),
+                      clock=clk)
+    assert sched.next_deadline() is None
+    clk.t = 1.0
+    h = sched.submit("x")
+    assert sched.next_deadline() == pytest.approx(1.010)
+    clk.advance_ms(25)
+    sched.pop([h], FLUSH_DEADLINE)
+    assert sched.stats.queue_ms[0] == pytest.approx(25.0)
+    assert sched.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# vision engine on the scheduler
+# ---------------------------------------------------------------------------
+
+
+def _vision_setup(max_batch=8, max_delay_ms=None, clock=None):
+    cfg = REDUCED["efficientvit-b1-r224"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    from repro.serving.vision import VisionEngine
+    kw = {} if clock is None else {"clock": clock}
+    eng = VisionEngine(cfg, params, max_batch=max_batch,
+                       max_delay_ms=max_delay_ms, **kw)
+    return cfg, model, params, eng
+
+
+def test_vision_deadline_flush_executes_without_explicit_flush():
+    """ISSUE 4 acceptance: a sub-max_batch batch executes once max_delay_ms
+    elapses — no flush() call anywhere."""
+    clk = FakeClock()
+    cfg, model, params, eng = _vision_setup(max_batch=8, max_delay_ms=15.0,
+                                            clock=clk)
+    rng = np.random.default_rng(0)
+    imgs = rng.normal(0, 1, (3, cfg.img_res, cfg.img_res, 3)).astype(
+        np.float32)
+    handles = [eng.submit(im) for im in imgs]
+    assert eng.poll() == 0 and not any(h.done for h in handles)
+    clk.advance_ms(14)
+    assert eng.poll() == 0                           # not due yet
+    clk.advance_ms(2)                                # oldest age > 15 ms
+    assert eng.poll() == 3
+    assert all(h.done for h in handles)
+    ref = np.asarray(model.forward(cfg, params, np.asarray(imgs)))
+    got = np.stack([h.result() for h in handles])
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+    assert eng.stats.flush_reasons == {"deadline": 1}
+    assert eng.stats.buckets_used == {4}             # 3 -> pow2 bucket 4
+    assert eng.stats.p99_ms >= 15.0
+
+
+def test_vision_full_batch_flushes_inline_on_submit():
+    clk = FakeClock()
+    cfg, model, params, eng = _vision_setup(max_batch=2, max_delay_ms=1e6,
+                                            clock=clk)
+    rng = np.random.default_rng(1)
+    imgs = rng.normal(0, 1, (2, cfg.img_res, cfg.img_res, 3)).astype(
+        np.float32)
+    h1 = eng.submit(imgs[0])
+    assert not h1.done
+    h2 = eng.submit(imgs[1])                         # fills the batch
+    assert h1.done and h2.done                       # executed inline
+    assert eng.stats.flush_reasons == {"full": 1}
+    ref = np.asarray(model.forward(cfg, params, np.asarray(imgs)))
+    np.testing.assert_allclose(np.stack([h1.result(), h2.result()]), ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vision_flush_drains_in_submit_order():
+    cfg, model, params, eng = _vision_setup(max_batch=8)
+    rng = np.random.default_rng(2)
+    imgs = rng.normal(0, 1, (3, cfg.img_res, cfg.img_res, 3)).astype(
+        np.float32)
+    handles = [eng.submit(im) for im in imgs]
+    out = eng.flush()
+    ref = np.asarray(model.forward(cfg, params, np.asarray(imgs)))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.stack([h.result() for h in handles]), ref,
+                               rtol=1e-4, atol=1e-4)
+    assert eng.flush() is None
+    assert eng.stats.flush_reasons == {"drain": 1}
+
+
+# ---------------------------------------------------------------------------
+# token engine admission on the scheduler
+# ---------------------------------------------------------------------------
+
+
+def _token_engine(max_batch=3, max_delay_ms=0.0, clock=None):
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    from repro.serving.engine import Engine
+    kw = {} if clock is None else {"clock": clock}
+    return cfg, Engine(cfg, params, max_batch=max_batch, max_len=64,
+                       max_delay_ms=max_delay_ms, **kw)
+
+
+def test_engine_rejects_max_new_tokens_below_one():
+    """ISSUE 4 satellite: max_new_tokens=0 used to burn a prefill+sample
+    and retire with empty output; now it is rejected up front."""
+    cfg, eng = _token_engine()
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+            eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=bad)
+    assert eng.scheduler.pending == 0                # nothing half-enqueued
+    req = eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=1)
+    eng.run()
+    assert req.done and len(req.out_tokens) == 1
+
+
+def test_engine_admission_deadline_coalesces_prefills():
+    """max_delay_ms > 0 holds admission until the deadline (or a full
+    batch), so two staggered arrivals share ONE prefill batch."""
+    clk = FakeClock()
+    cfg, eng = _token_engine(max_batch=3, max_delay_ms=50.0, clock=clk)
+    rng = np.random.default_rng(0)
+    r1 = eng.submit(rng.integers(0, cfg.vocab_size, 5, dtype=np.int32),
+                    max_new_tokens=2)
+    clk.advance_ms(5)
+    r2 = eng.submit(rng.integers(0, cfg.vocab_size, 7, dtype=np.int32),
+                    max_new_tokens=2)
+    assert eng.step() == 0                           # young queue: no admit
+    assert eng.stats.prefill_batches == 0 and len(eng.queue) == 2
+    clk.advance_ms(50)                               # oldest over deadline
+    assert eng.step() == 2                           # both admitted together
+    assert eng.stats.prefill_batches == 1
+    assert eng.stats.flush_reasons == {"deadline": 1}
+    eng.run()
+    assert r1.done and r2.done
+    # queue latency was recorded on the virtual clock at admission
+    assert sorted(round(q) for q in eng.stats.queue_ms) == [50, 55]
+
+
+def test_engine_full_batch_admits_before_deadline():
+    clk = FakeClock()
+    cfg, eng = _token_engine(max_batch=2, max_delay_ms=1e6, clock=clk)
+    rng = np.random.default_rng(1)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, 5, dtype=np.int32),
+                       max_new_tokens=2) for _ in range(2)]
+    assert eng.step() == 2                           # full: admits at once
+    assert eng.stats.flush_reasons == {"full": 1}
+    eng.run()
+    assert all(r.done for r in reqs)
+
+
+def test_engine_request_handle_resolves_on_completion():
+    cfg, eng = _token_engine(max_batch=2)
+    req = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=3)
+    assert req.handle is not None and not req.handle.done
+    eng.run()
+    assert req.handle.done
+    assert req.handle.result() == req.out_tokens
+    assert len(req.out_tokens) == 3
+    # unified stats: queue latency recorded, prefill occupancy tracked
+    assert len(eng.stats.queue_ms) == 1
+    assert 0 < eng.stats.batch_occupancy <= 1.0
