@@ -120,29 +120,34 @@ def _layer_cost(layer: Layer, method: str):
 
 DEFAULT_KERNEL_BENCH = Path(__file__).resolve().parent / "BENCH_kernels.json"
 
-# which measured conv contrast calibrates which simulator layer kind: PWConvs
-# and the attention matmuls/head run the fused (m2q/int8) matmul kernels,
-# DWConvs the packed-w4 conv kernel
-_KIND_TO_BENCH = {"pw": "pw", "matmul": "pw", "head": "pw", "dw": "dw"}
+# which measured contrast calibrates which simulator layer kind: PWConvs and
+# the head run the fused (m2q/int8) matmul kernels, DWConvs the packed-w4
+# conv kernel, and the attention MatMuls the fused relu_attn kernel (msa
+# rows of the bench's attn section)
+_KIND_TO_BENCH = {"pw": "pw", "matmul": "attn", "head": "pw", "dw": "dw"}
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelCalibration:
-    """Measured fused-vs-f32-fallback conv speedups from kernel_bench.
+    """Measured fused-vs-f32-fallback kernel speedups from kernel_bench.
 
     The cycle model above assumes the quantized engines hit their ideal
     mapping (e.g. a mixed PWConv finishes in half the uniform-baseline
     cycles because MPMA and SAT run the two halves in parallel).  The
     kernel microbenchmark records what the *implemented* hot path actually
-    achieves over the f32 dequantized-weight fallback; feeding that
-    contrast back derates any layer whose measured speedup falls short of
-    the ideal one (never crediting beyond the hardware model), so the
-    simulator's latency — and therefore its EDP rows — is calibrated
-    against measured kernel wall-clock instead of assuming perfection.
+    achieves over the f32 fallback; feeding that contrast back derates any
+    layer whose measured speedup falls short of the ideal one (never
+    crediting beyond the hardware model), so the simulator's latency — and
+    therefore its EDP rows — is calibrated against measured kernel
+    wall-clock instead of assuming perfection.  Conv rows calibrate the
+    pw/dw/head kinds; the attn section's MSA rows calibrate the attention
+    MatMul kind (decode rows are LM-serving shapes the vision inventory
+    never maps to, so they are reported but not consumed here).
     """
 
-    pw_speedup: float   # geomean fused-vs-f32 wall-clock ratio, PWConv rows
-    dw_speedup: float   # same, DWConv rows
+    pw_speedup: float    # geomean fused-vs-f32 wall-clock ratio, PWConv rows
+    dw_speedup: float    # same, DWConv rows
+    attn_speedup: float  # same, MSA relu-attention rows (attn section)
     backend: str = ""
     source: str = ""
 
@@ -151,32 +156,37 @@ class KernelCalibration:
         path = Path(DEFAULT_KERNEL_BENCH if path is None else path)
         data = json.loads(path.read_text())
         conv = data.get("conv") or {}
+        attn = data.get("attn") or {}
 
-        def geomean_ratio(prefix: str) -> float:
+        def geomean_ratio(rows, prefix: str, baseline: str) -> float:
             logs = []
-            for name, row in conv.items():
+            for name, row in rows.items():
                 base, _, variant = name.partition("/")
                 if not (base.startswith(prefix) and variant == "fused"):
                     continue
-                ref = conv.get(f"{base}/f32_dequant_conv")
+                ref = rows.get(f"{base}/{baseline}")
                 if ref and row.get("wall_s") and ref.get("wall_s"):
                     logs.append(math.log(ref["wall_s"] / row["wall_s"]))
             if not logs:
                 raise ValueError(
-                    f"{path} has no '{prefix}*' fused/f32_dequant_conv "
+                    f"{path} has no '{prefix}*' fused/{baseline} "
                     "wall-clock pairs (re-run benchmarks.kernel_bench)")
             return math.exp(sum(logs) / len(logs))
 
-        return cls(pw_speedup=geomean_ratio("pwconv"),
-                   dw_speedup=geomean_ratio("dwconv"),
+        return cls(pw_speedup=geomean_ratio(conv, "pwconv",
+                                            "f32_dequant_conv"),
+                   dw_speedup=geomean_ratio(conv, "dwconv",
+                                            "f32_dequant_conv"),
+                   attn_speedup=geomean_ratio(attn, "msa", "f32"),
                    backend=str(data.get("backend", "")), source=str(path))
 
     def derate(self, kind: str, ideal_speedup: float) -> float:
         """Cycle multiplier for one layer: >1 when the measured kernel
         speedup is below the cycle model's ideal, 1 otherwise (the model
         never runs faster than its hardware mapping allows)."""
-        measured = (self.dw_speedup if _KIND_TO_BENCH.get(kind) == "dw"
-                    else self.pw_speedup)
+        measured = {"pw": self.pw_speedup, "dw": self.dw_speedup,
+                    "attn": self.attn_speedup}[
+                        _KIND_TO_BENCH.get(kind, "pw")]
         return max(1.0, ideal_speedup / measured)
 
 

@@ -1,13 +1,17 @@
-"""Microbenchmarks for the five Pallas kernels + the M2Q dispatch chain.
+"""Microbenchmarks for the seven Pallas kernels + the M2Q dispatch chain.
 
 Emits ``BENCH_kernels.json``: per-kernel wall-clock and loop-aware HLO op
 counts (via repro.launch.hlo_analysis.op_histogram), plus a fused-vs-legacy
 comparison of the M2Q layer epilogue — the fused permutation-free path must
 show ZERO standalone gather/concatenate ops, the legacy concat+``take``
-epilogue it replaced shows both.  Wall-clocks on the CPU interpret path are
-not kernel latencies (the container has no TPU) but they pin the dispatch
-overhead trend from PR to PR; on a TPU backend the same harness times the
-real kernels with autotuned blocks.
+epilogue it replaced shows both.  The ``attn`` section contrasts the fused
+int8 attention kernels against the XLA-int8 and f32 paths for MSA shapes
+(B1/B2 at R224) and int8-KV decode shapes (serving batch sizes); its
+``msa*`` fused/f32 pairs feed ``accel_sim.KernelCalibration`` the same way
+the conv rows do.  Wall-clocks on the CPU interpret path are not kernel
+latencies (the container has no TPU) but they pin the dispatch overhead
+trend from PR to PR; on a TPU backend the same harness times the real
+kernels with autotuned blocks.
 
   PYTHONPATH=src python -m benchmarks.kernel_bench [out.json]
 """
@@ -45,6 +49,70 @@ def _bench_one(name, fn, args, iters=3):
         "ops_incl_fused": _hist_summary(
             op_histogram(txt, include_fused=True)),
     }
+
+
+def collect_attn(iters: int = 3, smoke: bool = False) -> dict:
+    """Attention rows: fused Pallas vs XLA-int8 vs f32.
+
+    ``msa_*`` rows are EfficientViT ReLU-linear-attention shapes (B1/B2
+    stage-3 token counts at R224; heads = C / dim_per_head); ``decode_*``
+    rows are int8-KV decode-attention shapes at serving batch sizes.  The
+    fused and xla_int8 variants compute the SAME int8 math (kernel vs
+    einsum); f32 is the unquantized baseline the accel-sim calibration
+    derates against.  ``smoke=True`` shrinks every shape for the test
+    suite's fast interpret-mode pass.
+    """
+    from repro import nn
+    from repro.kernels import ops, ref
+    from repro.core.quant import act_scale_from_stats
+
+    rng = np.random.default_rng(7)
+    rows = {}
+
+    msa_shapes = ([("msa_smoke", 1, 16, 2, 8)] if smoke else
+                  [("msa_b1_r224", 1, 196, 8, 16),
+                   ("msa_b2_r224", 1, 196, 6, 32)])
+    for name, B, N, H, D in msa_shapes:
+        q, k, v = (jnp.asarray(rng.normal(0, 1, (B, N, H, D))
+                               .astype(np.float32)) for _ in range(3))
+        with ops.dispatch(attn=True):
+            rows[f"{name}/fused"] = _bench_one(
+                name, lambda a, b, c: nn.relu_linear_attention(a, b, c),
+                (q, k, v), iters)
+        sq = act_scale_from_stats(jnp.maximum(jnp.max(q), 0.0))
+        sk = act_scale_from_stats(jnp.maximum(jnp.max(k), 0.0))
+        sv = act_scale_from_stats(jnp.max(jnp.abs(v)))
+        rows[f"{name}/xla_int8"] = _bench_one(
+            name, lambda a, b, c: ref.relu_attn_ref(a, b, c, sq, sk, sv),
+            (q, k, v), iters)
+        with ops.dispatch(attn=False):
+            rows[f"{name}/f32"] = _bench_one(
+                name, lambda a, b, c: nn.relu_linear_attention(a, b, c),
+                (q, k, v), iters)
+
+    decode_shapes = ([("decode_smoke", 2, 16, 4, 2, 8)] if smoke else
+                     [("decode_b4", 4, 256, 8, 4, 64),
+                      ("decode_b8", 8, 256, 8, 8, 64)])
+    for name, B, T, Hq, Hkv, D in decode_shapes:
+        q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)).astype(np.float32))
+        kc = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype(np.float32))
+        vc = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype(np.float32))
+        k8, ks = nn.quantize_kv_rows(kc)
+        v8, vs = nn.quantize_kv_rows(vc)
+        lengths = jnp.asarray(
+            rng.integers(T // 2, T + 1, (B,)).astype(np.int32))
+        with ops.dispatch(attn=True):
+            rows[f"{name}/fused"] = _bench_one(
+                name, lambda *a: nn.decode_attention_int8(*a),
+                (q, k8, v8, ks, vs, lengths), iters)
+        with ops.dispatch(attn=False):
+            rows[f"{name}/xla_int8"] = _bench_one(
+                name, lambda *a: nn.decode_attention_int8(*a),
+                (q, k8, v8, ks, vs, lengths), iters)
+        rows[f"{name}/f32"] = _bench_one(
+            name, lambda *a: nn.decode_attention(*a),
+            (q, kc, vc, lengths), iters)
+    return rows
 
 
 def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
@@ -177,6 +245,9 @@ def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
                 xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
                 feature_group_count=ch), (xdw,), iters)
+
+    # --- attention: fused Pallas vs XLA-int8 vs f32 ------------------------
+    report["attn"] = collect_attn(iters=iters)
     return report
 
 
@@ -194,15 +265,21 @@ def write_report(out_path=DEFAULT_OUT, shape=(128, 128, 128),
             assert name.startswith("pwconv") or convs >= 1, (name, rec)
         else:  # fused + XLA-QTensor quantized paths: no convolution op
             assert convs == 0, (name, rec)
+    # every attention base ships the full fused/xla_int8/f32 contrast (the
+    # accel-sim calibration divides fused by f32 per msa base)
+    attn_bases = {n.partition("/")[0] for n in report["attn"]}
+    for base in attn_bases:
+        for variant in ("fused", "xla_int8", "f32"):
+            assert report["attn"][f"{base}/{variant}"]["wall_s"] > 0, base
     Path(out_path).write_text(json.dumps(report, indent=1, sort_keys=True))
     return report
 
 
 def print_report(report) -> None:
     """CSV-ish summary lines (shared by this CLI and benchmarks.run)."""
-    for section in ("kernels", "m2q_paths", "conv"):
+    for section in ("kernels", "m2q_paths", "conv", "attn"):
         prefix = {"kernels": "kernel", "m2q_paths": "m2q_path",
-                  "conv": "conv"}[section]
+                  "conv": "conv", "attn": "attn"}[section]
         for name, rec in report.get(section, {}).items():
             o = rec["ops_incl_fused"]
             print(f"{prefix}/{name},{rec['wall_s']},"

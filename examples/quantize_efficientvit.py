@@ -96,11 +96,12 @@ def main():
     print(f"      EDP saving vs Trio-ViT: {100 * edp_saving:.0f}% "
           f"(paper: 80%)")
     # calibrate the latency model against MEASURED kernel wall-clock
-    # (BENCH_kernels.json fused vs f32-fallback conv rows)
+    # (BENCH_kernels.json fused-vs-f32 conv rows + MSA attention rows)
     cal = A.KernelCalibration.from_bench_json()
     ours_cal = A.simulate(layers, "m2q", kernel_cal=cal)
     print(f"      measured-kernel calibration ({cal.backend}: "
-          f"pw x{cal.pw_speedup:.2f}, dw x{cal.dw_speedup:.2f}): "
+          f"pw x{cal.pw_speedup:.2f}, dw x{cal.dw_speedup:.2f}, "
+          f"attn x{cal.attn_speedup:.2f}): "
           f"{ours_cal.latency_ms:.3f} ms, EDP {ours_cal.edp_mj_ms:.2f} "
           f"mJ*ms (ideal {ours.edp_mj_ms:.2f})")
     print("[6/6] done")

@@ -4,6 +4,18 @@ continuous-batching engine — async admission queue (deadline-based prefill
 coalescing on the shared scheduler core), prefill, decode, slot reuse,
 sampling.
 
+Kernel dispatch is controlled by three env-var process defaults, all read
+only in repro.kernels.ops (a scoped DispatchConfig / engine ``dispatch=``
+always wins over them):
+
+  REPRO_PALLAS_DISPATCH=1/0       QTensor matmuls (nn.dense + 1x1 PWConvs)
+  REPRO_PALLAS_CONV_DISPATCH=1/0  conv paths (falls back to the dense var)
+  REPRO_PALLAS_ATTN_DISPATCH=1/0  int8 attention kernels: the MSA ReLU
+                                  linear attention and, with an int8 KV
+                                  cache (--arch with kv_cache_dtype=int8),
+                                  this engine's per-step decode attention
+                                  (falls back to the dense var)
+
   PYTHONPATH=src python examples/serve_quantized.py [--arch qwen1.5-0.5b]
 """
 import argparse

@@ -1,13 +1,16 @@
 # Pallas TPU kernels for the compute classes the paper's accelerator serves:
-#   int8_matmul — MPMA merged mode (W8A8, zero-point folded epilogue)
-#   int4_matmul — MPMA single-mode bandwidth path (nibble-packed weights)
-#   apot_matmul — SAT engine (APoT byte codes decoded in VMEM)
-#   m2q_matmul  — fused MPMA+SAT (the two-level mixed layer, 1:1 split)
-#   dwconv_w4   — 4-bit depthwise conv (the paper's memory-intensive case)
+#   int8_matmul     — MPMA merged mode (W8A8, zero-point folded epilogue)
+#   int4_matmul     — MPMA single-mode bandwidth path (nibble-packed weights)
+#   apot_matmul     — SAT engine (APoT byte codes decoded in VMEM)
+#   m2q_matmul      — fused MPMA+SAT (the two-level mixed layer, 1:1 split)
+#   dwconv_w4       — 4-bit depthwise conv (the paper's memory-intensive case)
+#   relu_attn       — fused int8 ReLU linear attention (EfficientViT MSA)
+#   decode_attn_int8 — int8-KV decode attention (serving per-step hot loop)
 # ops.py: jit'd wrappers (padding/dispatch); ref.py: pure-jnp oracles.
 from .ops import (
     DispatchConfig,
     apot_matmul_op,
+    decode_attn_int8_op,
     dispatch,
     dwconv_w4_op,
     int4_matmul_op,
@@ -15,4 +18,5 @@ from .ops import (
     m2q_matmul_op,
     qtensor_dwconv,
     qtensor_matmul,
+    relu_attn_op,
 )

@@ -19,17 +19,27 @@ Dispatch control is LAYERED (see :class:`DispatchConfig`):
 
 1. a scoped :func:`dispatch` context (programmatic, nestable — what tests
    and the serving engines use),
-2. the ``REPRO_PALLAS_DISPATCH`` / ``REPRO_PALLAS_CONV_DISPATCH`` env vars
-   (process-wide defaults; this module is the ONLY place they are read),
+2. the ``REPRO_PALLAS_DISPATCH`` / ``REPRO_PALLAS_CONV_DISPATCH`` /
+   ``REPRO_PALLAS_ATTN_DISPATCH`` env vars (process-wide defaults; this
+   module is the ONLY place they are read),
 3. the backend default (kernels on a real TPU, pure-XLA QTensor paths
    elsewhere — the interpret path is a correctness harness, not a fast
    path).
+
+The ``attn`` axis steers the ACTIVATION-side int8 attention kernels
+(``relu_attn`` for EfficientViT's MSA token mixer, ``decode_attn_int8``
+for the serving engine's int8-KV decode step).  Unlike the dense/conv
+axes — where the kernel computes the identical function as the XLA
+QTensor path — turning ``attn`` on for the MSA path CHANGES numerics to
+int8-quantization tolerance (the f32 einsums it replaces never quantized
+activations), which is why it has its own switch.
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
 import dataclasses
+import math
 import os
 from functools import partial
 from typing import Optional, Tuple
@@ -41,10 +51,12 @@ from ..core.qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform
 from ..core.quant import act_scale_from_stats
 from . import autotune, ref
 from .apot_matmul import apot_matmul
+from .decode_attn_int8 import decode_attn_int8
 from .dwconv_w4 import dwconv_w4
 from .int4_matmul import int4_matmul
 from .int8_matmul import int8_matmul
 from .m2q_matmul import m2q_matmul
+from .relu_attn import relu_attn
 
 
 def _interpret_default() -> bool:
@@ -56,16 +68,18 @@ class DispatchConfig:
     """Scoped kernel-dispatch switches; ``None`` inherits the next layer.
 
     ``dense`` steers QTensor matmuls (nn.dense and quantized 1x1 PWConvs),
-    ``conv`` steers the conv paths specifically and follows ``dense`` when
-    unset — the same split the ``REPRO_PALLAS_DISPATCH`` /
-    ``REPRO_PALLAS_CONV_DISPATCH`` env vars expose.  The env vars are the
+    ``conv`` steers the conv paths specifically, and ``attn`` the int8
+    attention kernels (MSA ReLU linear attention + int8-KV decode); the
+    conv/attn axes follow ``dense`` when unset — the same split the
+    ``REPRO_PALLAS_DISPATCH`` / ``REPRO_PALLAS_CONV_DISPATCH`` /
+    ``REPRO_PALLAS_ATTN_DISPATCH`` env vars expose.  The env vars are the
     process-wide defaults consulted only when NO scope field applies: any
-    scoped field beats both env vars, so a scope with ``dense=True`` also
-    re-enables conv paths over ``REPRO_PALLAS_CONV_DISPATCH=0`` (pass
-    ``conv=False`` explicitly to keep conv pinned).  Enter a scope with
-    :func:`dispatch` (a nestable context manager), or hand the config to a
-    serving engine (``Engine``/``VisionEngine`` take ``dispatch=``) to pin
-    its traces regardless of ambient state.
+    scoped field beats the env vars, so a scope with ``dense=True`` also
+    re-enables conv/attn paths over a ``...=0`` env var (pass
+    ``conv=False`` / ``attn=False`` explicitly to keep an axis pinned).
+    Enter a scope with :func:`dispatch` (a nestable context manager), or
+    hand the config to a serving engine (``Engine``/``VisionEngine`` take
+    ``dispatch=``) to pin its traces regardless of ambient state.
 
     NOTE: dispatch is consulted at TRACE time; a jit cache keyed only on
     shapes will serve a stale trace if the config flips between calls of
@@ -75,11 +89,13 @@ class DispatchConfig:
 
     dense: Optional[bool] = None
     conv: Optional[bool] = None
+    attn: Optional[bool] = None
 
     def layered_over(self, base: "DispatchConfig") -> "DispatchConfig":
         return DispatchConfig(
             dense=self.dense if self.dense is not None else base.dense,
-            conv=self.conv if self.conv is not None else base.conv)
+            conv=self.conv if self.conv is not None else base.conv,
+            attn=self.attn if self.attn is not None else base.attn)
 
 
 _DISPATCH_SCOPE: contextvars.ContextVar = contextvars.ContextVar(
@@ -93,7 +109,8 @@ def active_dispatch() -> DispatchConfig:
 
 @contextlib.contextmanager
 def dispatch(config: Optional[DispatchConfig] = None, *,
-             dense: Optional[bool] = None, conv: Optional[bool] = None):
+             dense: Optional[bool] = None, conv: Optional[bool] = None,
+             attn: Optional[bool] = None):
     """Scope kernel dispatch programmatically (nestable; None inherits).
 
         with ops.dispatch(dense=True):          # force kernels on
@@ -101,12 +118,13 @@ def dispatch(config: Optional[DispatchConfig] = None, *,
             with ops.dispatch(conv=False):      # ...but XLA conv paths here
                 ...
 
-    Takes an explicit :class:`DispatchConfig`, the ``dense=`` / ``conv=``
-    fields directly, or both — explicit fields layer over the config.  The
-    scope overrides the env-var process defaults; unset fields fall through
-    to the enclosing scope, then the env vars, then the backend default.
+    Takes an explicit :class:`DispatchConfig`, the ``dense=`` / ``conv=`` /
+    ``attn=`` fields directly, or both — explicit fields layer over the
+    config.  The scope overrides the env-var process defaults; unset fields
+    fall through to the enclosing scope, then the env vars, then the
+    backend default.
     """
-    ov = DispatchConfig(dense, conv)
+    ov = DispatchConfig(dense, conv, attn)
     if config is not None:
         ov = ov.layered_over(config)
     token = _DISPATCH_SCOPE.set(ov.layered_over(_DISPATCH_SCOPE.get()))
@@ -158,6 +176,29 @@ def conv_dispatch_enabled() -> bool:
     if scope.dense is not None:
         return scope.dense
     env = _env_flag("REPRO_PALLAS_CONV_DISPATCH")
+    if env is not None:
+        return env
+    return dispatch_enabled()
+
+
+def attn_dispatch_enabled() -> bool:
+    """Should nn.attention route through the fused int8 attention kernels
+    (relu_linear_attention -> relu_attn, decode_attention_int8 ->
+    decode_attn_int8)?
+
+    Resolution order: active scope ``attn`` -> active scope ``dense`` ->
+    the ``REPRO_PALLAS_ATTN_DISPATCH=1/0`` env var (attention-only process
+    default) -> :func:`dispatch_enabled` — layered exactly like the conv
+    axis.  NOTE the MSA path quantizes activations the f32 einsums do not:
+    flipping this axis moves numerics by int8-quantization error, so
+    strict-parity tests pin ``attn`` explicitly.
+    """
+    scope = _DISPATCH_SCOPE.get()
+    if scope.attn is not None:
+        return scope.attn
+    if scope.dense is not None:
+        return scope.dense
+    env = _env_flag("REPRO_PALLAS_ATTN_DISPATCH")
     if env is not None:
         return env
     return dispatch_enabled()
@@ -373,6 +414,85 @@ def dwconv_w4_op(x, packed, scale, zero_point, kh: int = 3, kw: int = 3,
 
 
 # ---------------------------------------------------------------------------
+# fused int8 attention (MSA ReLU linear attention + int8-KV decode)
+# ---------------------------------------------------------------------------
+
+
+def _pad_axis(x, axis: int, mult: int):
+    p = (-x.shape[axis]) % mult
+    if p:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, p)
+        x = jnp.pad(x, pad)
+    return x
+
+
+@partial(jax.jit, static_argnames=("bn", "eps", "interpret"))
+def _relu_attn_core(q, k, v, bn, eps, interpret):
+    B, N, H, D = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # layer-wise max-abs act scales, computed on the post-ReLU range for
+    # q/k (scalar reduces fused into the graph; the int8 payloads only
+    # ever exist inside the kernel prologue — the PR 1 convention)
+    sq = act_scale_from_stats(jnp.maximum(jnp.max(qf), 0.0))
+    sk = act_scale_from_stats(jnp.maximum(jnp.max(kf), 0.0))
+    sv = act_scale_from_stats(jnp.max(jnp.abs(vf)))
+    bd = autotune.heuristic_block(D)
+    qp = _pad_axis(_pad_axis(qf, 1, bn), 3, bd)
+    kp = _pad_axis(_pad_axis(kf, 1, bn), 3, bd)
+    vp = _pad_axis(_pad_axis(vf, 1, bn), 3, bd)
+    y = relu_attn(qp, kp, vp, sq, sk, sv, bn=bn, eps=eps,
+                  interpret=interpret)
+    return y[:, :N, :, :D]
+
+
+def relu_attn_op(q, k, v, eps: float = 1e-6,
+                 interpret: Optional[bool] = None,
+                 blocks: Optional[Tuple[int, int, int]] = None):
+    """Fused int8 ReLU linear attention; q/k/v (B,N,H,D) float.
+
+    Padded k rows quantize to exact zeros (ReLU(0) -> 0) so padding never
+    changes the unpadded outputs; padded q rows are sliced away.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, N, H, D = q.shape
+    if blocks is None:
+        # only the q-row block matters (k/v/kv stay whole per (b, h));
+        # dedupe candidate triples by it, mirroring dwconv_w4_op
+        seen, cands = set(), []
+        for c in autotune.candidate_blocks(N, D, B * H):
+            if c[0] not in seen:
+                seen.add(c[0])
+                cands.append(c)
+        blocks = autotune.blocks_for(
+            "relu_attn", N, D, B * H, interpret=interpret, candidates=cands,
+            bench_fn=lambda b: _relu_attn_core(q, k, v, b[0], eps, interpret))
+    return _relu_attn_core(q, k, v, blocks[0], eps, interpret)
+
+
+def decode_attn_int8_op(q, k_q, v_q, k_scale, v_scale, lengths,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None,
+                        interpret: Optional[bool] = None):
+    """Pallas twin of nn.attention.decode_attention_int8 (same shapes, same
+    quantization definitions): q (B,1,Hq,D) float, int8 cache rows + per-row
+    scales, lengths (B,).  Runs per (batch, kv-head) in one VMEM pass."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, _, Hq, D = q.shape
+    Hkv = k_q.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    out = decode_attn_int8(qh, k_q, v_q, k_scale, v_scale,
+                           jnp.asarray(lengths, jnp.int32).reshape(B, 1),
+                           scale=float(scale), window=window,
+                           interpret=interpret)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # QTensor-level entry points (kernel-backed twins of core.qtensor methods)
 # ---------------------------------------------------------------------------
 
@@ -402,12 +522,21 @@ def qtensor_matmul(x: jax.Array, qt, interpret: Optional[bool] = None):
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
 
 
+# dwconv_w4 keeps H/W whole per grid block (no H-tiling yet), so the
+# per-block VMEM footprint scales with the padded input map.  Cap it at the
+# paper's largest edge resolution (224x224 input + a 5x5 SAME halo); bigger
+# maps fall back to the dequantized-weight XLA conv until H-tiling lands
+# (ROADMAP item, second half).
+_DWCONV_HW_BUDGET = (224 + 4) * (224 + 4)
+
+
 def dwconv_kernel_supported(qt, x, stride: int, groups: int,
                             padding: str) -> bool:
     """True when the packed-w4 depthwise kernel computes the same function
     as the dequantized-weight XLA conv for this leaf: a weights-only 4-bit
     QUniform whose HWIO shape is depthwise (cin-per-group == 1), flattened
-    to a (kh*kw, C/2) payload by core.apply, under SAME padding."""
+    to a (kh*kw, C/2) payload by core.apply, under SAME padding — and the
+    feature map fits the whole-H/W block budget (no H-tiling yet)."""
     if not isinstance(qt, QUniform) or qt.bits != 4 or qt.act_scale is not None:
         return False
     # axis must be the flattened payload's column (channel) axis, else the
@@ -417,6 +546,10 @@ def dwconv_kernel_supported(qt, x, stride: int, groups: int,
     if len(qt.shape) != 4 or qt.shape[2] != 1:
         return False
     kh, kw, _, c = qt.shape
+    # SAME pads at most (k - 1) per spatial dim, so this bounds the padded
+    # block the kernel would actually compile
+    if (x.shape[1] + kh - 1) * (x.shape[2] + kw - 1) > _DWCONV_HW_BUDGET:
+        return False
     return (padding == "SAME" and stride >= 1 and groups == c
             and x.shape[-1] == c and qt.payload.shape[0] == kh * kw)
 

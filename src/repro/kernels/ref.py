@@ -68,6 +68,37 @@ def m2q_merged_ref(x: jax.Array, act_scale: jax.Array, payload: jax.Array,
     return (yu + ya) * act_scale
 
 
+def relu_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  sq: jax.Array, sk: jax.Array, sv: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    """Int8 ReLU linear attention oracle (mirrors kernels.relu_attn).
+
+    q/k/v (B,N,H,D) FLOAT, sq/sk/sv scalar act scales — ReLU + int8
+    rounding are part of the contract (the kernel fuses them into its
+    prologue).  kv/ksum accumulate in int32; kv is requantized to int8
+    range per (b, h) so the numerator contraction is also integer; the
+    epilogue applies ``num / (den + eps)`` on the rescaled accumulators.
+    """
+    from ..core.quant import quantize_act
+    q8 = quantize_act(jax.nn.relu(q.astype(jnp.float32)), sq).astype(jnp.int32)
+    k8 = quantize_act(jax.nn.relu(k.astype(jnp.float32)), sk).astype(jnp.int32)
+    v8 = quantize_act(v.astype(jnp.float32), sv).astype(jnp.int32)
+    kv32 = jnp.einsum("bnhd,bnhe->bhde", k8, v8,
+                      preferred_element_type=jnp.int32)
+    ksum = jnp.sum(k8, axis=1)                                   # (B,H,D)
+    kv_f = kv32.astype(jnp.float32) * (sk * sv)
+    skv = jnp.maximum(jnp.max(jnp.abs(kv_f), axis=(-2, -1), keepdims=True)
+                      / 127.0, 1e-8)                             # (B,H,1,1)
+    kv8 = jnp.clip(jnp.round(kv_f / skv), -127, 127).astype(jnp.int32)
+    num = jnp.einsum("bnhd,bhde->bnhe", q8, kv8,
+                     preferred_element_type=jnp.int32)
+    den = jnp.einsum("bnhd,bhd->bnh", q8, ksum,
+                     preferred_element_type=jnp.int32)[..., None]
+    num_f = num.astype(jnp.float32) * (sq * skv.transpose(0, 2, 1, 3))
+    den_f = den.astype(jnp.float32) * (sq * sk)
+    return num_f / (den_f + eps)
+
+
 def dwconv_w4_ref(x: jax.Array, packed: jax.Array, scale: jax.Array,
                   zero_point: jax.Array, kh: int = 3, kw: int = 3,
                   stride: int = 1) -> jax.Array:

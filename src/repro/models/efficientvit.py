@@ -45,6 +45,23 @@ QUANT_OVERRIDES = (
      pol.PathOverride(decision=pol.DECISION_MIXED)),
 )
 
+# Opt-in int8 stem (ROADMAP item): the 3x3 cin=3 stem stays f32 by default
+# (QUANT_RULES does not match it), but a recipe may quantize it and run it
+# as an im2col + int8 matmul (nn.layers routes non-1x1 quantized filters
+# through patch extraction + the PWConv matmul hot path):
+#
+#     rec = PRESETS["m2q-w8a8"].replace(
+#         rules=tuple(QUANT_RULES) + (STEM_RULE,),
+#         overrides=(STEM_OVERRIDE,))
+#
+# The override pins uniform-8 W8A8 (the stem's 27-row filter is too small
+# for the intensity classifier to place reliably, and mixed-scheme buys
+# nothing at cin=3); recipe-level overrides precede QUANT_OVERRIDES, so the
+# taxonomy pins above are unaffected.
+STEM_RULE = (r"stem/w$", pol.KIND_DENSE)
+STEM_OVERRIDE = (r"stem/w$", pol.PathOverride(decision=pol.DECISION_MIXED,
+                                              scheme="uniform8"))
+
 
 # ---------------------------------------------------------------------------
 # init
@@ -140,6 +157,10 @@ def _msa(p, x, dim_per_head=16):
     qkv = nn.conv2d(_cln(x, p["ln"]), p["w_qkv"])  # (B,H,W,3C)
     qkv2 = nn.dwconv2d(qkv, p["w_agg"])  # second scale (5x5 aggregation)
     outs = []
+    # both token scales run through nn.relu_linear_attention, which routes
+    # to the fused int8 Pallas kernel under kernels.ops dispatch (the attn
+    # axis) — the accelerator's low-precision engines cover the MSA
+    # MatMuls, not just the conv halves
     for t in (qkv, qkv2):
         q, k, v = jnp.split(t.reshape(B, H * W, 3 * C), 3, axis=-1)
         nh = C // dim_per_head

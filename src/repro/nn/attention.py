@@ -247,7 +247,16 @@ def decode_attention_int8(
     quantized to int8 with the per-row V scales folded in, so PV is also an
     int8 dot.  The cache never dequantizes into an HBM temp — reads are
     1 byte/element.
+
+    With ``kernels.ops.attn_dispatch_enabled()`` the identical computation
+    runs as the fused Pallas kernel (one VMEM pass per (batch, kv-head),
+    no (B,Hkv,G,T) score round-trips through HBM); this XLA einsum chain
+    is the fallback and the kernel's parity oracle.
     """
+    from ..kernels import ops as _kops
+    if _kops.attn_dispatch_enabled():
+        return _kops.decode_attn_int8_op(q, k_q, v_q, k_scale, v_scale,
+                                         lengths, window=window, scale=scale)
     B, _, Hq, D = q.shape
     T, Hkv = k_q.shape[1], k_q.shape[2]
     G = Hq // Hkv
@@ -295,7 +304,17 @@ def relu_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     q,k,v: (B, N, H, D).  out = (q' (k'^T v)) / (q' sum(k')) with
     q' = relu(q), k' = relu(k) — the associative-property trick that makes
     EfficientViT linear in N.
+
+    With ``kernels.ops.attn_dispatch_enabled()`` the token mixer runs as
+    the fused int8 Pallas kernel instead (q/k/v quantized in the kernel
+    prologue, kv/ksum accumulated in int32, normalization in the
+    epilogue) — the low-precision engine path the M2-ViT accelerator
+    dedicates to the attention MatMuls.  NOTE this changes numerics to
+    int8-quantization tolerance; the f32 einsums below never quantize.
     """
+    from ..kernels import ops as _kops
+    if _kops.attn_dispatch_enabled():
+        return _kops.relu_attn_op(q, k, v, eps=eps).astype(q.dtype)
     qr = jax.nn.relu(q).astype(jnp.float32)
     kr = jax.nn.relu(k).astype(jnp.float32)
     vf = v.astype(jnp.float32)

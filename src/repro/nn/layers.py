@@ -121,6 +121,25 @@ def _conv_weight(w, dtype):
     return w.astype(dtype)
 
 
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int,
+            padding: str) -> jax.Array:
+    """(B,H,W,C) -> (B,HO,WO,kh*kw*C) patches, feature order (i, j, c) —
+    the row order of a flattened-HWIO quantized payload, so an im2col'd
+    conv is exactly ``patches @ payload``."""
+    from ..kernels.dwconv_w4 import same_padding
+    H, W = x.shape[1], x.shape[2]
+    if padding == "SAME":
+        x = jnp.pad(x, ((0, 0), same_padding(H, kh, stride),
+                        same_padding(W, kw, stride), (0, 0)))
+        HO, WO = -(-H // stride), -(-W // stride)
+    else:  # VALID
+        HO, WO = (H - kh) // stride + 1, (W - kw) // stride + 1
+    s = stride
+    taps = [x[:, i:i + (HO - 1) * s + 1:s, j:j + (WO - 1) * s + 1:s]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(taps, axis=-1)
+
+
 def _qconv2d(x: jax.Array, w, stride: int, groups: int, padding: str):
     """Quantized-conv hot path (the M2Q conv execution domain).
 
@@ -131,6 +150,10 @@ def _qconv2d(x: jax.Array, w, stride: int, groups: int, padding: str):
       and no f32 dequantized-weight convolution is emitted.
     * 4-bit depthwise filters run the packed-w4 Pallas conv kernel when
       dispatch is enabled.
+    * any other un-grouped KxK filter (the opt-in int8 stem — see
+      efficientvit.STEM_RULE) lowers to im2col + the same quantized
+      matmul path; the patch extraction materializes f32 activations but
+      the weight bytes never dequantize.
     Returns None when only the dequantized-weight XLA convolution (the
     fallback and parity reference) applies.
     """
@@ -149,6 +172,13 @@ def _qconv2d(x: jax.Array, w, stride: int, groups: int, padding: str):
     if _kops.conv_dispatch_enabled() and \
             _kops.dwconv_kernel_supported(w, x, stride, groups, padding):
         return _kops.qtensor_dwconv(x, w, stride=stride)
+    kh, kw, cin_g, _ = shape
+    if groups == 1 and padding in ("SAME", "VALID") \
+            and x.shape[-1] == cin_g:
+        cols = _im2col(x, kh, kw, stride, padding)
+        if _kops.conv_dispatch_enabled() and _kops.kernel_supported(w):
+            return _kops.qtensor_matmul(cols, w)
+        return qmatmul(cols, w)
     return None
 
 

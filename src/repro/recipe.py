@@ -296,7 +296,9 @@ class QuantizedModel:
         (``serving.scheduler``) and accept ``max_delay_ms`` for
         deadline-based flushing.  ``dispatch``: optional
         kernels.ops.DispatchConfig pinning kernel dispatch for the engine's
-        traces.  ``mesh``: optional jax Mesh enabling sharded execution —
+        traces — the ``dense``/``conv`` axes steer the QTensor matmul/conv
+        kernels and ``attn`` the int8 attention kernels (MSA ReLU linear
+        attention for vision, int8-KV decode attention for token decode).  ``mesh``: optional jax Mesh enabling sharded execution —
         the artifact's qparams are placed per ``dist.sharding.param_specs``
         (vision additionally batches data-parallel, token decode caches
         shard per ``cache_specs``)."""

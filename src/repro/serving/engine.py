@@ -16,7 +16,11 @@ land in the unified ``ServeStats`` both serving engines share.
 Device-resident decode loop: sampling (greedy AND temperature) runs inside
 the jitted decode step, the pending next-token vector and the per-slot
 output ring live on device, and the PRNG key threads through the jit — the
-host never reads a token mid-request.  The only device->host transfer is
+host never reads a token mid-request.  With an int8 KV cache the per-step
+attention runs fully integer, and under the ``attn`` dispatch axis
+(``DispatchConfig(attn=True)`` / ``REPRO_PALLAS_ATTN_DISPATCH``) it
+executes as the fused ``kernels.decode_attn_int8`` Pallas kernel — one
+VMEM pass per (batch, kv-head) instead of unfused XLA einsums.  The only device->host transfer is
 one fetch of a request's finished token row when it completes (completion
 itself is decided by host-side step counting, not by reading tokens).
 Prefill is batched over ragged prompts: families that support right-padded
@@ -82,7 +86,9 @@ class Engine:
                  mesh=None,
                  clock: Callable[[], float] = time.monotonic):
         # scoped kernels.ops.DispatchConfig pinning kernel dispatch for the
-        # engine's prefill/decode traces (None inherits env/backend default)
+        # engine's prefill/decode traces (None inherits env/backend
+        # default); the attn axis steers the int8-KV decode-attention
+        # kernel in every decode step
         self.dispatch = dispatch
         self.cfg = cfg
         self.model = get_model(cfg)

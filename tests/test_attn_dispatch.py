@@ -1,0 +1,325 @@
+"""The quantized attention hot path (ISSUE 5 tentpole).
+
+Covers: the third ``attn`` dispatch axis (scope/env layering exactly like
+the conv axis), the fused relu_attn kernel triangulated against the
+kernels/ref.py oracle and the f32 relu_linear_attention across (B,N,H,D)
+sweeps including non-multiple-of-block N, the decode_attn_int8 kernel vs
+the XLA int8 einsum path, property-style round-trip error bounds for
+``quantize_kv_rows``/``decode_attention_int8`` against the f32
+``decode_attention``, the HLO proof that the MSA kv/num/den contractions
+carry NO f32 dot with attn dispatch on, and the serving engine's int8-KV
+decode loop under a pinned attn DispatchConfig.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core.quant import act_scale_from_stats
+from repro.kernels import ops, ref
+from repro.launch.hlo_analysis import analyze
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _qkv(B, N, H, D, seed=0):
+    rng = _rng(seed)
+    return tuple(jnp.asarray(rng.normal(0, 1, (B, N, H, D))
+                             .astype(np.float32)) for _ in range(3))
+
+
+def _scales(q, k, v):
+    return (act_scale_from_stats(jnp.maximum(jnp.max(q), 0.0)),
+            act_scale_from_stats(jnp.maximum(jnp.max(k), 0.0)),
+            act_scale_from_stats(jnp.max(jnp.abs(v))))
+
+
+# ---------------------------------------------------------------------------
+# the attn dispatch axis: scope/env layering, exactly like the conv axis
+# ---------------------------------------------------------------------------
+
+
+def test_attn_dispatch_layering(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_DISPATCH", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_ATTN_DISPATCH", raising=False)
+    assert not ops.attn_dispatch_enabled()  # CPU backend default
+    with ops.dispatch(dense=True):          # attn follows dense when unset
+        assert ops.attn_dispatch_enabled()
+        with ops.dispatch(attn=False):      # nested: attn off, dense kept
+            assert ops.dispatch_enabled()
+            assert not ops.attn_dispatch_enabled()
+        assert ops.attn_dispatch_enabled()
+    # env var is the process default; any scoped field beats it
+    monkeypatch.setenv("REPRO_PALLAS_ATTN_DISPATCH", "1")
+    assert ops.attn_dispatch_enabled()
+    assert not ops.dispatch_enabled()       # attn env does NOT leak to dense
+    with ops.dispatch(attn=False):
+        assert not ops.attn_dispatch_enabled()
+    monkeypatch.setenv("REPRO_PALLAS_ATTN_DISPATCH", "0")
+    monkeypatch.setenv("REPRO_PALLAS_DISPATCH", "1")
+    assert not ops.attn_dispatch_enabled()  # attn-specific env wins over dense
+    with ops.dispatch(dense=True):          # ...but a scope wins over env
+        assert ops.attn_dispatch_enabled()
+    # DispatchConfig carries the third axis through layered_over
+    cfg = ops.DispatchConfig(attn=True).layered_over(
+        ops.DispatchConfig(dense=False, conv=True))
+    assert (cfg.dense, cfg.conv, cfg.attn) == (False, True, True)
+
+
+# ---------------------------------------------------------------------------
+# relu_attn: kernel == ref == f32 within int8 tolerance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,N,H,D", [
+    (2, 16, 2, 8),      # REDUCED MSA shape, block-aligned
+    (1, 196, 4, 16),    # B1-R224 stage-3 token count
+    (2, 37, 3, 8),      # non-multiple-of-block N (bn >= 8)
+    (1, 50, 5, 32),     # non-multiple N, wider head
+    (3, 9, 1, 8),       # N smaller than the minimum block
+])
+def test_relu_attn_kernel_vs_ref_vs_f32(B, N, H, D):
+    q, k, v = _qkv(B, N, H, D, seed=B * 1000 + N + H + D)
+    y_ker = ops.relu_attn_op(q, k, v, interpret=True)
+    sq, sk, sv = _scales(q, k, v)
+    y_ref = ref.relu_attn_ref(q, k, v, sq, sk, sv)
+    # kernel == oracle to float rounding (same int math, same order)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # vs the f32 path: error is int8-quantization-level, not path-level
+    with ops.dispatch(attn=False):
+        y_f32 = nn.relu_linear_attention(q, k, v)
+    rel = float(jnp.linalg.norm(y_ker - y_f32) / jnp.linalg.norm(y_f32))
+    assert rel < 0.05, rel
+    assert bool(jnp.all(jnp.isfinite(y_ker)))
+
+
+def test_relu_attn_autotune_blocks_and_fallback():
+    """Interpret mode takes the heuristic q-row block (no benching); an
+    explicit ``blocks`` triple pins it and computes the same values."""
+    from repro.kernels import autotune
+    q, k, v = _qkv(1, 40, 2, 8, seed=11)
+    assert autotune.blocks_for("relu_attn", 40, 8, 2, interpret=True) == \
+        autotune.heuristic_blocks(40, 8, 2)
+    y_auto = ops.relu_attn_op(q, k, v, interpret=True)
+    y_pinned = ops.relu_attn_op(q, k, v, interpret=True, blocks=(8, 8, 8))
+    np.testing.assert_allclose(np.asarray(y_pinned), np.asarray(y_auto),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_relu_attn_zero_inputs_are_finite():
+    """All-negative q/k ReLU to zero: den == eps must not NaN/Inf."""
+    B, N, H, D = 1, 12, 2, 8
+    q = -jnp.ones((B, N, H, D), jnp.float32)
+    k = -jnp.ones((B, N, H, D), jnp.float32)
+    v = jnp.ones((B, N, H, D), jnp.float32)
+    y = ops.relu_attn_op(q, k, v, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros_like(y))
+
+
+def test_relu_linear_attention_routes_through_kernel():
+    """nn.relu_linear_attention under dispatch(attn=True) IS the fused
+    kernel; with attn off it is the f32 einsum chain."""
+    q, k, v = _qkv(2, 20, 2, 8, seed=3)
+    y_op = ops.relu_attn_op(q, k, v, interpret=True)
+    with ops.dispatch(attn=True):
+        y_on = nn.relu_linear_attention(q, k, v)
+    np.testing.assert_array_equal(np.asarray(y_on), np.asarray(y_op))
+    with ops.dispatch(attn=False):
+        y_off = nn.relu_linear_attention(q, k, v)
+    assert float(jnp.max(jnp.abs(y_on - y_off))) > 0  # int8 vs f32 differ
+
+
+def test_msa_block_close_under_attn_dispatch():
+    """The full MSA block (qkv conv + 5x5 agg + two attention scales +
+    proj) stays close to its f32-attention twin when the token mixer runs
+    int8 — the model-level guard on the kernel's quantization error."""
+    from repro.configs.registry import REDUCED
+    from repro.models import efficientvit as evit
+    from repro.models import get_model
+    cfg = REDUCED["efficientvit-b1-r224"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    blk = params["stages"][-1][0]["msa"]
+    x = jnp.asarray(_rng(5).normal(0, 1, (2, 4, 4, 32)).astype(np.float32))
+    with ops.dispatch(attn=False):
+        y_f32 = evit._msa(blk, x, cfg.dim_per_head)
+    with ops.dispatch(attn=True):
+        y_int8 = evit._msa(blk, x, cfg.dim_per_head)
+    rel = float(jnp.linalg.norm(y_int8 - y_f32) / jnp.linalg.norm(y_f32))
+    assert rel < 0.05, rel
+
+
+# ---------------------------------------------------------------------------
+# decode_attn_int8: kernel == XLA int8 path, bounded error vs f32 decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("B,T,Hq,Hkv,D", [(3, 24, 4, 2, 16),
+                                          (2, 17, 6, 6, 8),
+                                          (1, 40, 8, 2, 32)])
+def test_decode_attn_kernel_matches_xla_int8(B, T, Hq, Hkv, D, window):
+    rng = _rng(B + T + Hq + D)
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, T, Hkv, D)).astype(np.float32))
+    lengths = jnp.asarray(rng.integers(1, T + 1, (B,)).astype(np.int32))
+    k8, ks = nn.quantize_kv_rows(k)
+    v8, vs = nn.quantize_kv_rows(v)
+    with ops.dispatch(attn=False):
+        y_xla = nn.decode_attention_int8(q, k8, v8, ks, vs, lengths,
+                                         window=window)
+    y_ker = ops.decode_attn_int8_op(q, k8, v8, ks, vs, lengths,
+                                    window=window, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+    with ops.dispatch(attn=True):
+        y_on = nn.decode_attention_int8(q, k8, v8, ks, vs, lengths,
+                                        window=window)
+    np.testing.assert_array_equal(np.asarray(y_on), np.asarray(y_ker))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_int8_kv_roundtrip_error_bounds(seed):
+    """Property-style bounds: (a) quantize_kv_rows reconstruction error is
+    at most half an int8 step per row; (b) BOTH int8 decode paths track the
+    f32 decode_attention within int8 tolerance on random caches/lengths."""
+    rng = _rng(100 + seed)
+    B, T, Hq, Hkv, D = 2, 24, 4, 2, 16
+    scale_mag = float(rng.uniform(0.1, 4.0))  # vary the dynamic range
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)).astype(np.float32))
+    k = jnp.asarray((rng.normal(0, scale_mag, (B, T, Hkv, D)))
+                    .astype(np.float32))
+    v = jnp.asarray((rng.normal(0, scale_mag, (B, T, Hkv, D)))
+                    .astype(np.float32))
+    lengths = jnp.asarray(rng.integers(1, T + 1, (B,)).astype(np.int32))
+    k8, ks = nn.quantize_kv_rows(k)
+    v8, vs = nn.quantize_kv_rows(v)
+    # (a) per-row reconstruction bound: |x - q*s| <= s/2 elementwise
+    k_hat = k8.astype(np.float32) * np.asarray(ks)[..., None]
+    bound = np.asarray(ks)[..., None] / 2 + 1e-6
+    assert np.all(np.abs(np.asarray(k) - k_hat) <= bound)
+    # (b) decode round-trip vs f32 attention
+    ref_f32 = nn.decode_attention(q, k, v, lengths)
+    with ops.dispatch(attn=False):
+        y_xla = nn.decode_attention_int8(q, k8, v8, ks, vs, lengths)
+    y_ker = ops.decode_attn_int8_op(q, k8, v8, ks, vs, lengths,
+                                    interpret=True)
+    for y in (y_xla, y_ker):
+        err = float(jnp.max(jnp.abs(y - ref_f32)))
+        assert err < 0.08 * max(scale_mag, 1.0), (seed, err)
+
+
+# ---------------------------------------------------------------------------
+# HLO: no f32 dot for the MSA kv/num/den contractions (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_msa_contractions_have_no_f32_dot():
+    """With attn dispatch on, the compiled ReLU linear attention carries
+    ONLY integer dots (kv, ksum, num, den all accumulate in int32); the
+    f32 path it replaces shows f32 dots (guards a vacuous check).  Same
+    property for the decode-attention kernel."""
+    q, k, v = _qkv(1, 49, 4, 16, seed=9)
+
+    def fused(q, k, v):
+        with ops.dispatch(attn=True):
+            return nn.relu_linear_attention(q, k, v)
+
+    def f32(q, k, v):
+        with ops.dispatch(attn=False):
+            return nn.relu_linear_attention(q, k, v)
+
+    txt = jax.jit(fused).lower(q, k, v).compile().as_text()
+    by_dtype = analyze(txt)["dot_flops_by_dtype"]
+    assert by_dtype.get("f32", 0.0) == 0.0, by_dtype
+    assert sum(by_dtype.values()) > 0  # the integer dots ARE there
+    txt0 = jax.jit(f32).lower(q, k, v).compile().as_text()
+    assert analyze(txt0)["dot_flops_by_dtype"].get("f32", 0.0) > 0
+
+    # decode attention: integer dots only as well
+    rng = _rng(10)
+    B, T, Hq, Hkv, D = 2, 32, 4, 2, 16
+    qd = jnp.asarray(rng.normal(0, 1, (B, 1, Hq, D)).astype(np.float32))
+    k8, ks = nn.quantize_kv_rows(jnp.asarray(
+        rng.normal(0, 1, (B, T, Hkv, D)).astype(np.float32)))
+    v8, vs = nn.quantize_kv_rows(jnp.asarray(
+        rng.normal(0, 1, (B, T, Hkv, D)).astype(np.float32)))
+    lengths = jnp.asarray([10, 32], jnp.int32)
+
+    def dec(qd, k8, v8, ks, vs, lengths):
+        with ops.dispatch(attn=True):
+            return nn.decode_attention_int8(qd, k8, v8, ks, vs, lengths)
+
+    txt = jax.jit(dec).lower(qd, k8, v8, ks, vs, lengths).compile().as_text()
+    by_dtype = analyze(txt)["dot_flops_by_dtype"]
+    assert by_dtype.get("f32", 0.0) == 0.0, by_dtype
+
+
+def test_quantized_msa_forward_hlo_no_f32_attention_dots(monkeypatch):
+    """Model-level acceptance: the jitted MSA block of the QUANTIZED
+    EfficientViT emits no f32 dot at all with dense+conv+attn dispatch on —
+    PWConv/dwconv run the integer conv kernels and the token mixer the
+    int8 attention kernel, so every remaining dot is integer.  (The m2q
+    mixed-scheme kernel keeps an f32 SAT-engine dot by design, so this
+    pins the MSA path on a uniform8 recipe where the property is total.)"""
+    from repro.configs.registry import REDUCED
+    from repro.models import efficientvit as evit
+    from repro.models import get_model
+    from repro.recipe import quantize
+    cfg = REDUCED["efficientvit-b1-r224"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    imgs = jnp.asarray(_rng(2).normal(
+        0, 1, (1, cfg.img_res, cfg.img_res, 3)).astype(np.float32))
+    qm = quantize(cfg, params, "uniform8", calib_batches=[imgs])
+    blk = qm.params["stages"][-1][0]["msa"]
+    x = jnp.asarray(_rng(3).normal(0, 1, (1, 4, 4, 32)).astype(np.float32))
+
+    def msa_fused(blk, x):
+        with ops.dispatch(dense=True, conv=True, attn=True):
+            return evit._msa(blk, x, cfg.dim_per_head)
+
+    txt = jax.jit(msa_fused).lower(blk, x).compile().as_text()
+    by_dtype = analyze(txt)["dot_flops_by_dtype"]
+    assert by_dtype.get("f32", 0.0) == 0.0, by_dtype
+    assert sum(by_dtype.values()) > 0
+
+    def msa_f32_attn(blk, x):
+        with ops.dispatch(dense=True, conv=True, attn=False):
+            return evit._msa(blk, x, cfg.dim_per_head)
+
+    txt0 = jax.jit(msa_f32_attn).lower(blk, x).compile().as_text()
+    assert analyze(txt0)["dot_flops_by_dtype"].get("f32", 0.0) > 0
+
+
+# ---------------------------------------------------------------------------
+# serving: the int8-KV decode loop under a pinned attn DispatchConfig
+# ---------------------------------------------------------------------------
+
+
+def test_engine_decode_with_attn_kernel():
+    """End-to-end: an Engine over an int8 KV cache with
+    DispatchConfig(attn=True) decodes through the Pallas kernel and
+    produces the same tokens as the XLA int8 path (greedy sampling)."""
+    from repro.configs.registry import REDUCED
+    from repro.models import get_model
+    from repro.serving.engine import Engine
+    cfg = REDUCED["granite-3-8b"].replace(kv_cache_dtype="int8")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    prompts = [np.arange(3, dtype=np.int32) + i for i in range(2)]
+
+    def run(dispatch):
+        eng = Engine(cfg, params, max_batch=2, max_len=16, dispatch=dispatch)
+        reqs = [eng.submit(p, max_new_tokens=3) for p in prompts]
+        eng.run()
+        return [r.out_tokens for r in reqs]
+
+    toks_xla = run(ops.DispatchConfig(attn=False))
+    toks_ker = run(ops.DispatchConfig(dense=False, conv=False, attn=True))
+    assert toks_xla == toks_ker

@@ -52,20 +52,21 @@ def test_simulator_reproduces_headline_claims():
     assert 0.7 <= edp_saving <= 0.95, edp_saving  # paper: 80%
 
 
-def test_accel_sim_consumes_kernel_bench_conv_rows():
-    """ISSUE 4 satellite: the committed BENCH_kernels.json conv rows feed
-    the simulator's latency model — quantized layers whose measured fused
-    kernel underperforms the ideal engine mapping take more cycles, so the
-    calibrated EDP rows move while energies and baselines stay put."""
+def test_accel_sim_consumes_kernel_bench_conv_and_attn_rows():
+    """ISSUE 4 + ISSUE 5: the committed BENCH_kernels.json conv rows AND
+    msa attention rows feed the simulator's latency model — quantized
+    layers whose measured fused kernel underperforms the ideal engine
+    mapping take more cycles, so the calibrated EDP rows move while
+    energies and baselines stay put."""
     cal = A.KernelCalibration.from_bench_json()
-    assert cal.pw_speedup > 0 and cal.dw_speedup > 0
+    assert cal.pw_speedup > 0 and cal.dw_speedup > 0 and cal.attn_speedup > 0
     A.set_calibration()
     layers = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS["b1-r224"])
     base = A.simulate(layers, "m2q")
     cald = A.simulate(layers, "m2q", kernel_cal=cal)
     # latency can only be derated (never credited beyond the cycle model)
     assert cald.latency_ms >= base.latency_ms
-    if cal.pw_speedup < 2.0 or cal.dw_speedup < 2.0:
+    if min(cal.pw_speedup, cal.dw_speedup, cal.attn_speedup) < 2.0:
         # some measured speedup trails the ideal 2x -> strict derate
         assert cald.latency_ms > base.latency_ms
         assert cald.edp_mj_ms > base.edp_mj_ms
@@ -76,9 +77,35 @@ def test_accel_sim_consumes_kernel_bench_conv_rows():
     assert A.simulate(layers, "trio",
                       kernel_cal=cal).latency_ms == trio.latency_ms
     # derate floor: a kind whose measured speedup exceeds ideal stays 1.0
-    fast = A.KernelCalibration(pw_speedup=100.0, dw_speedup=100.0)
+    fast = A.KernelCalibration(pw_speedup=100.0, dw_speedup=100.0,
+                               attn_speedup=100.0)
     assert A.simulate(layers, "m2q",
                       kernel_cal=fast).latency_ms == base.latency_ms
+    # the attention rows are consumed on their own axis: the MSA matmul
+    # layers take MORE cycles when only attn_speedup trails the ideal
+    slow_attn = A.KernelCalibration(pw_speedup=100.0, dw_speedup=100.0,
+                                    attn_speedup=0.5)
+    slow = A.simulate(layers, "m2q", kernel_cal=slow_attn)
+    assert slow.latency_ms > base.latency_ms
+    derated = {p.name for b, p in zip(base.per_layer, slow.per_layer)
+               if p.mpma_cycles > b.mpma_cycles}
+    assert derated and all(".attn_mm" in n for n in derated)
+
+
+def test_kernel_bench_attn_smoke_rows():
+    """ISSUE 5 satellite: the attention-row harness runs fast in interpret
+    mode and produces the full fused/xla_int8/f32 contrast for both MSA
+    and decode shapes."""
+    from benchmarks import kernel_bench
+    rows = kernel_bench.collect_attn(iters=1, smoke=True)
+    bases = {n.partition("/")[0] for n in rows}
+    assert any(b.startswith("msa") for b in bases)
+    assert any(b.startswith("decode") for b in bases)
+    for base in bases:
+        for variant in ("fused", "xla_int8", "f32"):
+            rec = rows[f"{base}/{variant}"]
+            assert rec["wall_s"] > 0, (base, variant)
+            assert rec["ops"]["total"] > 0, (base, variant)
 
 
 def test_serving_bench_smoke_rows():
