@@ -6,6 +6,13 @@ the executed work), plus the *policy-level* queue behavior — p50/p99 queue
 latency, batch occupancy, padded-work fraction, and the flush-reason mix
 (full batch vs deadline vs drain).
 
+The ``faults`` rows measure fault tolerance instead of raw throughput: the
+same traffic runs with a ``serving.faults`` spec injecting failures at a
+fixed rate (every Kth decode step / vision batch raising or NaN-poisoning),
+and the rows report GOODPUT (completed / submitted) and RECOVERY (the
+engine kept serving: every handle resolved, reconciling
+``submitted == completed + failed + ...`` with faults firing mid-stream).
+
 Arrivals run on a VIRTUAL clock injected into the shared scheduler core
 (serving.scheduler takes ``clock=``), so the deadline-flush policy is
 exercised deterministically and independently of how slow this machine's
@@ -113,7 +120,7 @@ def bench_vision(bench_engine, rate_per_s: float, n_images: int,
         nd = eng.scheduler.next_deadline()
         clock.advance_to(nd if nd is not None else clock.now())
         timed_poll()
-    assert all(h.done for h in handles)
+    assert all(h.done() for h in handles)
     s = eng.stats
     return {
         "engine": "vision", "arrival_rate_per_s": rate_per_s,
@@ -198,6 +205,51 @@ def bench_token(bench_engine, rate_per_s: float, n_requests: int,
     }
 
 
+def _fault_fields(eng, spec: str) -> dict:
+    """Goodput/recovery accounting appended to a fault-scenario row."""
+    s = eng.stats
+    return {
+        "fault_spec": spec,
+        "faults_fired": len(eng.faults.fired),
+        "fault_calls": dict(eng.faults.calls),
+        "goodput": round(s.completed / max(s.submitted, 1), 4),
+        # recovery = the loop survived the injected faults: faults actually
+        # fired, yet every submitted handle reached a terminal state
+        "recovered": bool(eng.faults.fired) and s.resolved == s.submitted,
+    }
+
+
+def bench_token_faults(cfg, params, spec: str, rate_per_s: float,
+                       n_requests: int, max_new: int = 8) -> dict:
+    """Token-engine traffic with an injected fault rate: same arrival loop
+    as bench_token, but decode steps raise/NaN-poison per ``spec`` and the
+    row reports goodput + recovery instead of steady-state throughput."""
+    from repro.serving.engine import Engine
+    from repro.serving.faults import FaultInjector
+
+    clock = VirtualClock()
+    eng = Engine(cfg, params, max_batch=4, max_len=64, max_delay_ms=0.0,
+                 clock=clock.now, faults=FaultInjector.parse(spec))
+    row = bench_token((clock, eng), rate_per_s, n_requests,
+                      max_new=max_new, warmup=False)
+    row.update(_fault_fields(eng, spec))
+    return row
+
+
+def bench_vision_faults(cfg, params, spec: str, rate_per_s: float,
+                        n_images: int) -> dict:
+    """Vision-engine traffic with an injected fault rate (see above)."""
+    from repro.serving.faults import FaultInjector
+    from repro.serving.vision import VisionEngine
+
+    clock = VirtualClock()
+    eng = VisionEngine(cfg, params, max_batch=4, max_delay_ms=20.0,
+                       clock=clock.now, faults=FaultInjector.parse(spec))
+    row = bench_vision((clock, eng), rate_per_s, n_images, warmup=False)
+    row.update(_fault_fields(eng, spec))
+    return row
+
+
 def collect(smoke: bool = False) -> dict:
     """All rows.  ``smoke=True`` shrinks traffic to test-suite scale."""
     import jax
@@ -229,6 +281,23 @@ def collect(smoke: bool = False) -> dict:
         report["token"].append(
             bench_token(teng, rate, n_req, max_new=3 if smoke else 8,
                         warmup=warmup and i == 0))
+    # fault-rate scenarios: every Kth executor call fails — rows report
+    # goodput (completed/submitted) and recovery (all handles resolved).
+    # K scales with traffic so the rate actually fires at smoke scale too
+    max_new = 3 if smoke else 8
+    # token K must exceed max_new: a decode-step raise fails every live
+    # slot, so K <= the steps-per-request would zero out goodput entirely
+    k_tok, k_vis = (2, 2) if smoke else (12, 3)
+    report["faults"] = [
+        bench_token_faults(tcfg, tparams, f"raise@decode:*/{k_tok}",
+                           token_rates[-1], n_req, max_new=max_new),
+        bench_token_faults(tcfg, tparams, f"nan@decode:*/{k_tok + 1}",
+                           token_rates[-1], n_req, max_new=max_new),
+        bench_vision_faults(vcfg, vparams, f"raise@vision:*/{k_vis}",
+                            vision_rates[-1], n_img),
+        bench_vision_faults(vcfg, vparams, f"nan@vision:*/{k_vis}",
+                            vision_rates[-1], n_img),
+    ]
     return report
 
 
@@ -243,6 +312,12 @@ def main(argv=None):
               f"tput={tput:>9} p50={row['p50_ms']:.2f}ms "
               f"p99={row['p99_ms']:.2f}ms occ={row['batch_occupancy']:.2f} "
               f"flushes={row['flush_reasons']}")
+    for row in report["faults"]:
+        print(f"  {row['engine']:>6} faults={row['fault_spec']:<18} "
+              f"goodput={row['goodput']:.2f} "
+              f"fired={row['faults_fired']} "
+              f"recovered={row['recovered']} "
+              f"(completed={row['completed']} failed={row['failed']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Pre-merge check: lint + the fast test suite in one command.
+#
+#   ./check.sh            lint src/ then run ./test.sh -m "not slow"
+#   ./check.sh --lint-only
+#
+# Lint = pyflakes over src/ (when installed — the container may not have
+# it; we do not install packages) plus a stdlib compileall pass, which
+# catches syntax errors in EVERY file including ones the fast suite never
+# imports.  The full tier-1 gate remains ./test.sh with no -m filter.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== compileall (syntax, all of src/ + tests/ + benchmarks/ + examples/)"
+python -m compileall -q src tests benchmarks examples
+
+if python -c "import pyflakes" 2>/dev/null; then
+    echo "== pyflakes src/"
+    python -m pyflakes src
+else
+    echo "== pyflakes not installed; skipping (compileall still ran)"
+fi
+
+if [[ "${1:-}" == "--lint-only" ]]; then
+    exit 0
+fi
+
+echo "== fast suite (./test.sh -m 'not slow')"
+exec ./test.sh -m "not slow"

@@ -70,7 +70,7 @@ def main():
     rng = np.random.default_rng(0)
     handles = [eng.submit(rng.normal(0, 1, (CFG.img_res, CFG.img_res, 3))
                           .astype(np.float32)) for _ in range(12)]
-    while not all(h.done for h in handles):
+    while not all(h.done() for h in handles):
         eng.poll()  # full batches already ran inline; the tail of 4 images
         #             executes here once the 15 ms deadline fires
     logits = np.stack([h.result() for h in handles])

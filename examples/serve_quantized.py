@@ -16,7 +16,17 @@ always wins over them):
                                   this engine's per-step decode attention
                                   (falls back to the dense var)
 
+Fault tolerance demo: pass ``--fault-spec`` (same grammar as the
+``REPRO_FAULT_SPEC`` env var, e.g. ``raise@decode:*/6``) to inject
+deterministic failures into the decode loop — affected requests fail
+through their handles, everything else completes, and the outcome
+counters reconcile at the end.  Prefer ``raise`` over ``nan`` here: this
+engine is fully quantized, and activation quantization can launder a
+cache NaN into finite garbage before the logits check sees it (see
+docs/serving.md, "Detection boundary").
+
   PYTHONPATH=src python examples/serve_quantized.py [--arch qwen1.5-0.5b]
+  PYTHONPATH=src python examples/serve_quantized.py --fault-spec raise@decode:*/6
 """
 import argparse
 import time
@@ -27,6 +37,7 @@ import numpy as np
 from repro.configs.registry import REDUCED
 from repro.launch.serve import quantize_for_serving
 from repro.models import get_model
+from repro.serving.faults import FaultInjector
 
 
 def main():
@@ -37,6 +48,9 @@ def main():
     ap.add_argument("--max-delay-ms", type=float, default=5.0,
                     help="admission deadline: requests coalesce into "
                          "bigger prefill batches until the oldest ages out")
+    ap.add_argument("--fault-spec", default=None,
+                    help="inject deterministic faults (KIND@SITE:WHEN, "
+                         "e.g. raise@decode:*/6) to demo containment")
     args = ap.parse_args()
 
     cfg = REDUCED[args.arch]
@@ -55,7 +69,10 @@ def main():
           f"{sum(1 for r in report if r.decision == 'lowbit')} low-bit)")
 
     print("[3/3] serve with continuous batching (async admission queue)")
-    eng = qm.serve(max_batch=4, max_len=96, max_delay_ms=args.max_delay_ms)
+    faults = (FaultInjector.parse(args.fault_spec)
+              if args.fault_spec else None)
+    eng = qm.serve(max_batch=4, max_len=96, max_delay_ms=args.max_delay_ms,
+                   faults=faults)
     rng = np.random.default_rng(7)
     reqs = []
     for i in range(args.requests):
@@ -69,7 +86,16 @@ def main():
     t0 = time.time()
     stats = eng.run()  # admission flushes by deadline/full batch, no flush()
     dt = time.time() - t0
-    assert all(r.done and r.handle.done for r in reqs)
+    # every handle must RESOLVE (succeed or fail) — the engine never wedges
+    assert all(r.handle.done() for r in reqs)
+    if faults is not None:
+        fired = ", ".join(f"{k}@{s}#{n}" for s, n, k in faults.fired)
+        print(f"      injected: {fired or '(no fault fired)'}")
+        print(f"      outcomes: {stats.completed} completed, "
+              f"{stats.failed} failed "
+              f"(resolved {stats.resolved}/{stats.submitted})")
+    else:
+        assert all(r.done for r in reqs)
     print(f"      served {stats.finished} requests, "
           f"{stats.decoded_tokens} tokens in {dt:.1f}s "
           f"({stats.decoded_tokens / dt:.1f} tok/s, "
@@ -77,7 +103,9 @@ def main():
     print(f"      queue p50={stats.p50_ms:.2f}ms p99={stats.p99_ms:.2f}ms "
           f"prefill-occupancy={stats.batch_occupancy:.2f} "
           f"flushes={stats.flush_reasons}")
-    print("      sample:", reqs[0].handle.result())
+    ok = [r for r in reqs if r.done]
+    if ok:
+        print("      sample:", ok[0].handle.result())
 
 
 if __name__ == "__main__":

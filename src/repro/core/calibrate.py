@@ -50,6 +50,15 @@ class CalibTensor:
                 "Calibration must run unjitted (CalibTensor saw a tracer). "
                 "Call the model apply function directly for PTQ calibration.")
         m = float(jnp.max(jnp.abs(x)))
+        if not np.isfinite(m):
+            # a NaN/Inf activation would silently bake a garbage scale into
+            # the QTensor (NaN scales poison EVERY later inference); name
+            # the offending layer so the bad calibration batch is findable
+            raise ValueError(
+                f"non-finite activation statistic at {self.key!r}: "
+                f"max|x| = {m} over shape {tuple(jnp.shape(x))}; "
+                "calibration inputs must be finite (check the calibration "
+                "batch and any upstream preprocessing)")
         self.store[self.key] = max(self.store.get(self.key, 0.0), m)
 
 

@@ -10,6 +10,12 @@ returned immediately and nothing is benchmarked or persisted.  The cache
 file location comes from ``REPRO_AUTOTUNE_CACHE`` (default
 ``~/.cache/repro/autotune.json``); writes are atomic (tmp + rename) so
 concurrent processes never observe a torn file.
+
+A corrupt cache file NEVER takes the process down: truncated JSON, a
+non-dict top level, or entries that are not three ints are dropped with a
+``RuntimeWarning`` and the cache rebuilds from scratch — a bad cache is a
+performance bug, not a correctness one, so crashing over it is the wrong
+trade.
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -65,8 +72,49 @@ def candidate_blocks(M: int, N: int, K: int) -> List[Blocks]:
     return sorted(cands)
 
 
+def _valid_entry(v) -> bool:
+    """A cache entry must be exactly three positive ints (a block triple);
+    anything else — strings, floats, wrong arity — is corruption."""
+    return (isinstance(v, (list, tuple)) and len(v) == 3
+            and all(isinstance(x, int) and not isinstance(x, bool) and x > 0
+                    for x in v))
+
+
+def _read_cache_file(path: str) -> Dict[str, list]:
+    """Read + sanitize one cache file.  NEVER raises on corruption:
+    unreadable/truncated JSON, a non-dict top level, or invalid entries
+    produce a ``RuntimeWarning`` naming the file and the salvageable
+    subset (usually empty -> the cache rebuilds)."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except OSError:
+        return {}  # no cache yet: the normal first-run case, no warning
+    except ValueError as e:
+        warnings.warn(
+            f"autotune cache {path!r} is not valid JSON ({e}); ignoring it "
+            "and rebuilding from scratch", RuntimeWarning, stacklevel=3)
+        return {}
+    if not isinstance(raw, dict):
+        warnings.warn(
+            f"autotune cache {path!r} top level is {type(raw).__name__}, "
+            "expected a JSON object; ignoring it and rebuilding from "
+            "scratch", RuntimeWarning, stacklevel=3)
+        return {}
+    data = {k: list(v) for k, v in raw.items() if _valid_entry(v)}
+    if len(data) != len(raw):
+        warnings.warn(
+            f"autotune cache {path!r}: dropped {len(raw) - len(data)} "
+            "corrupt entries (each must be three positive ints); keeping "
+            f"the {len(data)} valid ones", RuntimeWarning, stacklevel=3)
+    return data
+
+
 class AutotuneCache:
-    """JSON-backed {key: [bm, bn, bk]} map with atomic persistence."""
+    """JSON-backed {key: [bm, bn, bk]} map with atomic persistence.
+
+    Corruption-tolerant: see :func:`_read_cache_file` — a damaged file
+    warns and rebuilds instead of raising into kernel launches."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or default_cache_path()
@@ -75,13 +123,7 @@ class AutotuneCache:
 
     def load(self) -> "AutotuneCache":
         self._loaded = True
-        try:
-            with open(self.path) as f:
-                raw = json.load(f)
-            self._data = {k: list(v) for k, v in raw.items()
-                          if isinstance(v, (list, tuple)) and len(v) == 3}
-        except (OSError, ValueError):
-            self._data = {}
+        self._data = _read_cache_file(self.path)
         return self
 
     def get(self, key: str) -> Optional[Blocks]:
@@ -110,13 +152,7 @@ class AutotuneCache:
                 fcntl.flock(lf, fcntl.LOCK_EX)
             except OSError:
                 pass  # exotic filesystems: fall back to atomic replace only
-            try:
-                with open(self.path) as f:
-                    disk = json.load(f)
-                merged = {k: list(v) for k, v in disk.items()
-                          if isinstance(v, (list, tuple)) and len(v) == 3}
-            except (OSError, ValueError):
-                merged = {}
+            merged = _read_cache_file(self.path)
             merged.update(self._data)
             self._data = merged
             tmp = f"{self.path}.tmp.{os.getpid()}"

@@ -19,10 +19,16 @@ Dispatch control is LAYERED (see :class:`DispatchConfig`):
 
 1. a scoped :func:`dispatch` context (programmatic, nestable — what tests
    and the serving engines use),
-2. the ``REPRO_PALLAS_DISPATCH`` / ``REPRO_PALLAS_CONV_DISPATCH`` /
+2. the per-axis FAULT TRIP LATCH (:func:`trip_axis` /
+   :func:`axis_tripped`): once a :class:`FallbackGuard` catches a kernel
+   raise or non-finite kernel output on an axis, that axis resolves to
+   the XLA path process-wide until :func:`reset_trip_latch` — graceful
+   degradation that an explicit scope (a test forcing kernels on) still
+   overrides,
+3. the ``REPRO_PALLAS_DISPATCH`` / ``REPRO_PALLAS_CONV_DISPATCH`` /
    ``REPRO_PALLAS_ATTN_DISPATCH`` env vars (process-wide defaults; this
    module is the ONLY place they are read),
-3. the backend default (kernels on a real TPU, pure-XLA QTensor paths
+4. the backend default (kernels on a real TPU, pure-XLA QTensor paths
    elsewhere — the interpret path is a correctness harness, not a fast
    path).
 
@@ -141,18 +147,152 @@ def _env_flag(name: str) -> Optional[bool]:
     return env.strip().lower() not in ("", "0", "false")
 
 
+# ---------------------------------------------------------------------------
+# fault trip latch + FallbackGuard (graceful degradation to the XLA paths)
+# ---------------------------------------------------------------------------
+
+
+class NumericalError(RuntimeError):
+    """A compute path produced non-finite (NaN/Inf) outputs — poisoned
+    quantized forward, overflowing int accumulator, or a broken kernel.
+    Raised by :class:`FallbackGuard`'s finite check and by the serving
+    engines' decode-logits check (re-exported as
+    ``repro.serving.errors.NumericalError``)."""
+
+
+_TRIP_AXES = ("dense", "conv", "attn")
+_TRIP_LATCH: dict = {ax: 0 for ax in _TRIP_AXES}
+
+
+def trip_axis(axis: str) -> None:
+    """Latch one dispatch axis onto the XLA fallback path (process-wide
+    default; an explicit :func:`dispatch` scope still wins).  Raises
+    ``ValueError`` for an unknown axis."""
+    if axis not in _TRIP_LATCH:
+        raise ValueError(f"unknown dispatch axis {axis!r}; one of "
+                         f"{_TRIP_AXES}")
+    _TRIP_LATCH[axis] += 1
+
+
+def axis_tripped(axis: str) -> bool:
+    return _TRIP_LATCH.get(axis, 0) > 0
+
+
+def trip_counts() -> dict:
+    """Per-axis trip counters (how often a FallbackGuard latched each)."""
+    return dict(_TRIP_LATCH)
+
+
+def reset_trip_latch() -> None:
+    """Clear every axis latch (tests; or an operator re-arming kernels)."""
+    for ax in _TRIP_LATCH:
+        _TRIP_LATCH[ax] = 0
+
+
+def _tree_nonfinite(out) -> bool:
+    """True if any inexact-dtype array leaf holds a NaN/Inf (syncs)."""
+    for leaf in jax.tree_util.tree_leaves(out):
+        if (isinstance(leaf, jax.Array)
+                and jnp.issubdtype(leaf.dtype, jnp.inexact)
+                and not bool(jnp.all(jnp.isfinite(leaf)))):
+            return True
+    return False
+
+
+def _poison_tree(out):
+    """NaN-fill every inexact array leaf (the fault injector's kernel-site
+    poisoning: simulates a silently-corrupting kernel)."""
+    return jax.tree_util.tree_map(
+        lambda x: (jnp.full_like(x, jnp.nan)
+                   if isinstance(x, jax.Array)
+                   and jnp.issubdtype(x.dtype, jnp.inexact) else x), out)
+
+
+class FallbackGuard:
+    """Retry-once-on-XLA wrapper around a kernel-dispatched step.
+
+    ``run(fn, *args)`` calls ``fn(*args, fallback=False)``; if the call
+    raises, or (with ``check_finite``) returns non-finite outputs, the
+    guard records the trip, latches the configured dispatch axes onto the
+    XLA path (:func:`trip_axis`), and re-runs ``fn(*args, fallback=True)``
+    — the step's own XLA-path trace.  ``fn`` must take a STATIC
+    ``fallback`` keyword that pins the XLA path for its trace (a scoped
+    ``dispatch(dense=False, conv=False, attn=False)`` inside the traced
+    body): dispatch is resolved at trace time, so retrying the *same*
+    jitted trace under a different ambient scope would be a no-op.
+
+    After the first trip the guard is latched: subsequent ``run`` calls go
+    straight to the fallback path (no repeated failing-kernel attempts).
+    ``faults``: optional ``serving.faults.FaultInjector`` consulted at
+    ``site`` on every primary attempt — the harness provokes kernel
+    raises/NaN-poisoning deterministically to prove this guard recovers.
+    """
+
+    def __init__(self, check_finite: bool = True, faults=None,
+                 site: str = "kernel",
+                 axes: Tuple[str, ...] = _TRIP_AXES):
+        self.check_finite = check_finite
+        self.faults = faults
+        self.site = site
+        self.axes = axes
+        self.tripped = False
+        self.trips = 0
+        self.retries = 0
+        self.last_error: Optional[str] = None
+
+    def run(self, fn, *args):
+        if self.tripped:
+            self.retries += 1
+            return fn(*args, fallback=True)
+        act = self.faults.on_call(self.site) if self.faults is not None \
+            else None
+        try:
+            if act is not None:
+                act.fire()
+            out = fn(*args, fallback=False)
+            if act is not None and act.poison:
+                out = _poison_tree(out)
+            if self.check_finite and _tree_nonfinite(out):
+                raise NumericalError(
+                    f"non-finite output from kernel-dispatched step "
+                    f"(site {self.site!r}); retrying on the XLA path")
+            return out
+        except Exception as e:  # noqa: BLE001 — any failure degrades
+            self.trips += 1
+            self.tripped = True
+            self.last_error = repr(e)
+            for ax in self.axes:
+                trip_axis(ax)
+            self.retries += 1
+            return fn(*args, fallback=True)
+
+    def stats(self) -> dict:
+        return {"tripped": self.tripped, "trips": self.trips,
+                "retries": self.retries, "last_error": self.last_error}
+
+    def reset(self) -> None:
+        """Re-arm this guard (does NOT clear the process-wide axis latch;
+        see :func:`reset_trip_latch`)."""
+        self.tripped = False
+        self.last_error = None
+
+
 def dispatch_enabled() -> bool:
     """Should nn.dense route QTensor matmuls through the Pallas kernels?
 
-    Resolution order: active :func:`dispatch` scope -> the
-    ``REPRO_PALLAS_DISPATCH=1/0`` env var (process default; tests force it
-    on to exercise the wiring) -> backend default (only on a real TPU: the
-    interpret path is a Python correctness harness, ~1000x slower than XLA
-    on CPU — wiring it into serving would tank the engine).
+    Resolution order: active :func:`dispatch` scope -> the fault trip
+    latch (:func:`axis_tripped`: a tripped axis degrades to XLA
+    process-wide) -> the ``REPRO_PALLAS_DISPATCH=1/0`` env var (process
+    default; tests force it on to exercise the wiring) -> backend default
+    (only on a real TPU: the interpret path is a Python correctness
+    harness, ~1000x slower than XLA on CPU — wiring it into serving would
+    tank the engine).
     """
     scoped = _DISPATCH_SCOPE.get().dense
     if scoped is not None:
         return scoped
+    if axis_tripped("dense"):
+        return False
     env = _env_flag("REPRO_PALLAS_DISPATCH")
     if env is not None:
         return env
@@ -164,7 +304,8 @@ def conv_dispatch_enabled() -> bool:
     kernels (PWConv -> m2q/int8/int4 matmul, depthwise -> dwconv_w4)?
 
     Resolution order: active scope ``conv`` -> active scope ``dense`` ->
-    the ``REPRO_PALLAS_CONV_DISPATCH=1/0`` env var (conv-only process
+    the ``conv`` fault trip latch -> the
+    ``REPRO_PALLAS_CONV_DISPATCH=1/0`` env var (conv-only process
     default) -> :func:`dispatch_enabled`.  Note the quantized 1x1 PWConv
     never falls back to a dequantized-weight f32 convolution: with dispatch
     off it still runs the pure-XLA QTensor *matmul* path (see
@@ -175,6 +316,8 @@ def conv_dispatch_enabled() -> bool:
         return scope.conv
     if scope.dense is not None:
         return scope.dense
+    if axis_tripped("conv"):
+        return False
     env = _env_flag("REPRO_PALLAS_CONV_DISPATCH")
     if env is not None:
         return env
@@ -187,7 +330,8 @@ def attn_dispatch_enabled() -> bool:
     decode_attn_int8)?
 
     Resolution order: active scope ``attn`` -> active scope ``dense`` ->
-    the ``REPRO_PALLAS_ATTN_DISPATCH=1/0`` env var (attention-only process
+    the ``attn`` fault trip latch -> the
+    ``REPRO_PALLAS_ATTN_DISPATCH=1/0`` env var (attention-only process
     default) -> :func:`dispatch_enabled` — layered exactly like the conv
     axis.  NOTE the MSA path quantizes activations the f32 einsums do not:
     flipping this axis moves numerics by int8-quantization error, so
@@ -198,6 +342,8 @@ def attn_dispatch_enabled() -> bool:
         return scope.attn
     if scope.dense is not None:
         return scope.dense
+    if axis_tripped("attn"):
+        return False
     env = _env_flag("REPRO_PALLAS_ATTN_DISPATCH")
     if env is not None:
         return env

@@ -301,7 +301,16 @@ class QuantizedModel:
         attention for vision, int8-KV decode attention for token decode).  ``mesh``: optional jax Mesh enabling sharded execution —
         the artifact's qparams are placed per ``dist.sharding.param_specs``
         (vision additionally batches data-parallel, token decode caches
-        shard per ``cache_specs``)."""
+        shard per ``cache_specs``).
+
+        Fault tolerance kwargs forward to the engine: ``overload`` (an
+        ``OverloadPolicy`` bounding the admission queue — full queues
+        raise ``QueueFullError`` or shed the oldest request), ``faults``
+        (a ``FaultInjector`` for deterministic fault injection; defaults
+        to ``REPRO_FAULT_SPEC`` from the env), and ``check_numerics``.
+        ``submit(..., deadline_ms=)`` sets per-request deadlines.  A
+        failed request never raises out of the engine loop — it resolves
+        its own handle (see docs/serving.md for the failure semantics)."""
         if self.cfg.family == "efficientvit":
             from .serving.vision import VisionEngine
             return VisionEngine(self.cfg, self.params, dispatch=dispatch,

@@ -22,7 +22,8 @@ def pow2_bucket(n: int, min_bucket: int = 1, cap: Optional[int] = None) -> int:
     ``min_bucket`` floors the result (it should itself be a power of two —
     sharded engines floor at the data-axis size so every executed batch
     stays divisible); ``cap`` bounds it (the engine's ``max_batch``, i.e.
-    the largest shape ever compiled).
+    the largest shape ever compiled).  Raises ``ValueError`` for a
+    negative count.
     """
     if n < 0:
         raise ValueError(f"bucket size for negative count {n}")
@@ -52,6 +53,12 @@ class ServeStats:
       ``max_batch`` (``capacity_items`` accumulates per-batch capacity).
     * padded-work fraction — pad rows (pow2 bucketing) or pad tokens
       (ragged prefill) as a share of everything actually executed.
+    * outcome counters — every submitted handle resolves into exactly one
+      of ``completed`` / ``failed`` / ``cancelled`` / ``timed_out`` /
+      ``shed`` (recorded by the Handle state machine), so
+      ``submitted == resolved`` reconciles once traffic drains.
+      ``rejected`` counts submits the OverloadPolicy refused — those
+      never created a handle and are NOT part of ``submitted``.
     """
 
     submitted: int = 0
@@ -59,9 +66,19 @@ class ServeStats:
     batches: int = 0
     padded_items: int = 0     # pad rows/tokens added (wasted compute)
     capacity_items: int = 0   # sum of per-batch capacity (policy max_batch)
+    # terminal-outcome counters (see Handle state machine)
+    completed: int = 0        # handles resolved DONE
+    failed: int = 0           # executor/numerical failures -> FAILED
+    cancelled: int = 0        # caller cancel() -> CANCELLED
+    timed_out: int = 0        # per-request deadline expiry -> TIMED_OUT
+    shed: int = 0             # load shedding (FAILED w/ QueueFullError)
+    rejected: int = 0         # submits refused up front (no handle made)
     queue_ms: List[float] = dataclasses.field(default_factory=list)
     flush_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
     buckets_used: Set[int] = dataclasses.field(default_factory=set)
+
+    _OUTCOMES = ("completed", "failed", "cancelled", "timed_out", "shed",
+                 "rejected")
 
     # -- recording -----------------------------------------------------------
     def record_batch(self, items: int, padded: int = 0,
@@ -76,6 +93,15 @@ class ServeStats:
 
     def record_flush(self, reason: str) -> None:
         self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
+
+    def record_outcome(self, kind: str) -> None:
+        """Count one terminal request outcome (called by the Handle state
+        machine exactly once per handle).  Raises ``ValueError`` for a
+        kind outside the outcome-counter set."""
+        if kind not in self._OUTCOMES:
+            raise ValueError(f"unknown outcome {kind!r}; one of "
+                             f"{self._OUTCOMES}")
+        setattr(self, kind, getattr(self, kind) + 1)
 
     # long-lived engines must not leak: latency samples keep a sliding
     # window (percentiles reflect recent traffic, memory stays bounded)
@@ -115,12 +141,25 @@ class ServeStats:
         total = self.items + self.padded_items
         return self.padded_items / total if total else 0.0
 
+    @property
+    def resolved(self) -> int:
+        """Handles that reached a terminal state; equals ``submitted``
+        once all traffic has drained (the reconciliation invariant)."""
+        return (self.completed + self.failed + self.cancelled
+                + self.timed_out + self.shed)
+
     def summary(self) -> Dict[str, object]:
         """JSON-ready snapshot (serving_bench rows, CLI reporting)."""
         return {
             "submitted": self.submitted,
             "items": self.items,
             "batches": self.batches,
+            "completed": self.completed,
+            "failed": self.failed,
+            "cancelled": self.cancelled,
+            "timed_out": self.timed_out,
+            "shed": self.shed,
+            "rejected": self.rejected,
             "p50_ms": round(self.p50_ms, 4),
             "p99_ms": round(self.p99_ms, 4),
             "batch_occupancy": round(self.batch_occupancy, 4),

@@ -34,6 +34,23 @@ the decode cache per ``cache_specs`` (batch rows over ``data``, attention
 heads over ``model`` when divisible), and the decode step re-pins the cache
 sharding every step so placements stay exactly on-spec.
 
+Failure story (the fault-tolerance layer): executor exceptions are
+contained PER BATCH — a failing prefill fails only its group's handles, a
+failing decode step fails only the slots live in that step — and the
+engine loop keeps serving everything else.  Per-request deadlines
+(``submit(..., deadline_ms=)``) expire requests both queued and
+mid-decode (freeing their slots), ``Handle.cancel()`` does the same on
+the caller's initiative, and an ``OverloadPolicy`` bounds the admission
+queue.  Kernel-dispatch failures degrade gracefully: the decode/prefill
+steps run under a ``kernels.ops.FallbackGuard`` that retries a raising
+Pallas step once on the XLA path (and latches the dispatch axes off).
+Decode logits carry an in-graph finite check (a sticky per-slot flag,
+read only at completion, preserving the one-d2h-per-completion
+invariant): a NaN-poisoned request fails with ``NumericalError`` instead
+of delivering garbage tokens.  A ``serving.faults.FaultInjector``
+(``faults=`` or the ``REPRO_FAULT_SPEC`` env var) provokes all of the
+above deterministically at the ``prefill``/``decode`` sites.
+
 This is the serving analogue of the paper's deployment: weights are the
 QTensor tree from core.quantize_model, executing the int8/APoT/packed-4bit
 paths.
@@ -52,8 +69,11 @@ import numpy as np
 from ..kernels import ops as _kops
 from ..models import get_model
 from ..models.config import ArchConfig
+from . import faults as _faults
 from .batching import ServeStats, pow2_bucket
-from .scheduler import FlushPolicy, Handle, Scheduler
+from .errors import NumericalError, RequestTimedOut
+from .scheduler import (FlushPolicy, Handle, OverloadPolicy, Scheduler,
+                        TIMED_OUT)
 
 
 @dataclasses.dataclass
@@ -84,7 +104,10 @@ class Engine:
                  max_delay_ms: float = 0.0,
                  dispatch: Optional[_kops.DispatchConfig] = None,
                  mesh=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 overload: Optional[OverloadPolicy] = None,
+                 faults: Optional[_faults.FaultInjector] = None,
+                 check_numerics: bool = True):
         # scoped kernels.ops.DispatchConfig pinning kernel dispatch for the
         # engine's prefill/decode traces (None inherits env/backend
         # default); the attn axis steers the int8-KV decode-attention
@@ -106,11 +129,19 @@ class Engine:
                 "(coalesce prefills), not None")
         # admission queue on the shared scheduler core; max_delay_ms=0.0
         # admits whenever slots are free (the classic behavior), >0
-        # coalesces prefills until the batch fills or the deadline fires
+        # coalesces prefills until the batch fills or the deadline fires.
+        # overload= bounds it (QueueFullError / shed-oldest); faults= (or
+        # REPRO_FAULT_SPEC) provokes failures at the prefill/decode sites
+        self.faults = faults if faults is not None else _faults.from_env()
+        self.check_numerics = check_numerics
         self.scheduler = Scheduler(
             policy=FlushPolicy(max_batch=max_batch,
                                max_delay_ms=max_delay_ms),
-            stats=self.stats, clock=clock)
+            stats=self.stats, clock=clock, overload=overload)
+        # retry-once-on-XLA guard around the kernel-dispatched steps (no
+        # finite check here: that would force a device sync per decode
+        # step — numerics ride the in-graph sticky flag instead)
+        self.fallback_guard = _kops.FallbackGuard(check_finite=False)
         self._ragged = bool(getattr(self.model, "RAGGED_PREFILL", False))
         self.cache = self.model.init_cache(cfg, max_batch, max_len,
                                            dtype=jnp.float32)
@@ -125,12 +156,23 @@ class Engine:
         self._temps = jnp.zeros((max_batch,), jnp.float32)
         self._outbuf = jnp.zeros((max_batch, max_len), jnp.int32)
         self._counts = jnp.zeros((max_batch,), jnp.int32)
+        # sticky per-slot non-finite-logits flag, accumulated IN-GRAPH by
+        # the decode/prefill steps and read back only at completion (the
+        # one allowed d2h) — a poisoned request fails with NumericalError
+        # instead of delivering garbage tokens
+        self._nonfinite = jnp.zeros((max_batch,), bool)
         # host mirror of per-slot emitted-token counts (drives completion
         # without reading token values back)
         self._emitted = [0] * max_batch
-        self._decode_step = jax.jit(self._decode_step_impl)
-        self._prefill_sample = jax.jit(self._prefill_sample_impl)
-        self._prefill_sample_ragged = jax.jit(self._prefill_sample_ragged_impl)
+        # ``fallback`` is STATIC: dispatch is resolved at trace time, so
+        # the FallbackGuard's XLA retry needs its own trace, not a stale
+        # kernel-path trace replayed under a different ambient scope
+        self._decode_step = jax.jit(self._decode_step_impl,
+                                    static_argnames=("fallback",))
+        self._prefill_sample = jax.jit(self._prefill_sample_impl,
+                                       static_argnames=("fallback",))
+        self._prefill_sample_ragged = jax.jit(
+            self._prefill_sample_ragged_impl, static_argnames=("fallback",))
 
     def _shard(self, params, cache, mesh):
         """Place params/cache per dist.sharding (decode caches shard over
@@ -150,8 +192,39 @@ class Engine:
         return self.scheduler.pending_payloads()
 
     def submit(self, prompt, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> Request:
-        prompt = np.asarray(prompt, np.int32)
+               temperature: float = 0.0,
+               deadline_ms: Optional[float] = None) -> Request:
+        """Enqueue one request; returns a :class:`Request` whose
+        ``.handle`` resolves (or fails) at completion.
+
+        ``deadline_ms``: optional per-request deadline — the request
+        TIMES OUT (handle state ``TIMED_OUT``, slot freed) if it has not
+        completed within that many ms of submission, queued or mid-decode.
+
+        Raises ``ValueError`` on malformed payloads — validated UP FRONT
+        so bad inputs fail here with a clear message, not deep inside a
+        jitted prefill: non-1-D prompts, non-integer dtypes (embeddings
+        or logits passed by mistake), token ids outside the vocab, empty
+        prompts, ``max_new_tokens < 1``, or a request that cannot fit
+        ``max_len``.  Raises ``QueueFullError`` when a bounded queue
+        rejects the submit (see ``OverloadPolicy``).
+        """
+        arr = np.asarray(prompt)
+        if arr.ndim != 1:
+            raise ValueError(
+                f"prompt must be a 1-D vector of token ids, got shape "
+                f"{arr.shape}")
+        if arr.size and not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"prompt dtype must be integer token ids, got {arr.dtype} "
+                "— passing embeddings/logits (or float-typed ids) would "
+                "be silently truncated")
+        if arr.size and (int(arr.min()) < 0
+                         or int(arr.max()) >= self.cfg.vocab_size):
+            raise ValueError(
+                f"prompt token ids must be in [0, {self.cfg.vocab_size}), "
+                f"got range [{int(arr.min())}, {int(arr.max())}]")
+        prompt = arr.astype(np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt: prefill needs at least one token")
         if max_new_tokens < 1:
@@ -170,7 +243,7 @@ class Engine:
                 f" exceeds max_len ({self.T})")
         req = Request(uid=0, prompt=prompt, max_new_tokens=max_new_tokens,
                       temperature=temperature, out_tokens=[])
-        req.handle = self.scheduler.submit(req)
+        req.handle = self.scheduler.submit(req, deadline_ms=deadline_ms)
         req.uid = req.handle.uid
         return req
 
@@ -188,36 +261,60 @@ class Engine:
         drawn = jax.vmap(jax.random.categorical)(keys, lg / safe_t)
         return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
 
-    def _decode_step_impl(self, params, cache, pending, outbuf, counts,
-                          temps, live, key):
-        key, k_s = jax.random.split(key)
-        logits, cache = self.model.decode_step(self.cfg, params, cache,
-                                               pending[:, None])
-        tok = self._sample_tokens(logits[:, 0], k_s, temps)
-        tok = jnp.where(live, tok, pending)
-        b = jnp.arange(self.B)
-        outbuf = outbuf.at[b, jnp.minimum(counts, self.T - 1)].set(
-            jnp.where(live, tok, outbuf[b, jnp.minimum(counts, self.T - 1)]))
-        counts = counts + live.astype(jnp.int32)
-        if self._cache_shardings is not None:
-            # pin the cache's dist.sharding placement through the step so
-            # the sharded decode loop stays exactly on-spec
-            cache = jax.tree.map(jax.lax.with_sharding_constraint, cache,
-                                 self._cache_shardings)
-        return cache, tok, outbuf, counts, key
+    def _fallback_scope(self, fallback: bool):
+        """``fallback=True`` (STATIC) pins the whole step to the XLA path
+        for the FallbackGuard's retry trace — all three dispatch axes off,
+        beating any ambient scope/env/latch (dispatch resolves at trace
+        time, and this scope wraps the traced body)."""
+        return (_kops.dispatch(dense=False, conv=False, attn=False)
+                if fallback else contextlib.nullcontext())
 
-    def _prefill_sample_impl(self, params, slot_cache, tokens, temps, key):
-        logits, slot_cache = self.model.prefill(self.cfg, params, slot_cache,
-                                                tokens)
-        tok = self._sample_tokens(logits[:, -1], key, temps)
-        return tok, slot_cache
+    def _row_nonfinite(self, logits):
+        """(B, V_padded) last-position logits -> (B,) bool: row holds any
+        NaN/Inf inside the real vocab (in-graph; no host sync)."""
+        lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        return ~jnp.all(jnp.isfinite(lg), axis=-1)
+
+    def _decode_step_impl(self, params, cache, pending, outbuf, counts,
+                          temps, live, nonfinite, key, fallback=False):
+        with self._fallback_scope(fallback):
+            key, k_s = jax.random.split(key)
+            logits, cache = self.model.decode_step(self.cfg, params, cache,
+                                                   pending[:, None])
+            # sticky numerics flag: once a live slot's logits go non-finite
+            # the bit stays set until the slot retires (read only at
+            # completion — the d2h-per-completion invariant holds)
+            nonfinite = nonfinite | (self._row_nonfinite(logits[:, 0]) & live)
+            tok = self._sample_tokens(logits[:, 0], k_s, temps)
+            tok = jnp.where(live, tok, pending)
+            b = jnp.arange(self.B)
+            at = jnp.minimum(counts, self.T - 1)
+            outbuf = outbuf.at[b, at].set(
+                jnp.where(live, tok, outbuf[b, at]))
+            counts = counts + live.astype(jnp.int32)
+            if self._cache_shardings is not None:
+                # pin the cache's dist.sharding placement through the step
+                # so the sharded decode loop stays exactly on-spec
+                cache = jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                                     self._cache_shardings)
+            return cache, tok, outbuf, counts, nonfinite, key
+
+    def _prefill_sample_impl(self, params, slot_cache, tokens, temps, key,
+                             fallback=False):
+        with self._fallback_scope(fallback):
+            logits, slot_cache = self.model.prefill(self.cfg, params,
+                                                    slot_cache, tokens)
+            tok = self._sample_tokens(logits[:, -1], key, temps)
+            return tok, slot_cache, self._row_nonfinite(logits[:, -1])
 
     def _prefill_sample_ragged_impl(self, params, slot_cache, tokens,
-                                    lengths, temps, key):
-        logits, slot_cache = self.model.prefill(self.cfg, params, slot_cache,
-                                                tokens, lengths=lengths)
-        tok = self._sample_tokens(logits[:, -1], key, temps)
-        return tok, slot_cache
+                                    lengths, temps, key, fallback=False):
+        with self._fallback_scope(fallback):
+            logits, slot_cache = self.model.prefill(self.cfg, params,
+                                                    slot_cache, tokens,
+                                                    lengths=lengths)
+            tok = self._sample_tokens(logits[:, -1], key, temps)
+            return tok, slot_cache, self._row_nonfinite(logits[:, -1])
 
     # -- internals -----------------------------------------------------------
     def _write_slots(self, slots: List[int], group_cache):
@@ -258,8 +355,17 @@ class Engine:
                 for h in cands:
                     by_len.setdefault(len(h.payload.prompt), []).append(h)
                 group = next(iter(by_len.values()))
-            self.scheduler.pop(group, reason)
-            self._prefill_group(free[: len(group)], group)
+            group = self.scheduler.pop(group, reason)
+            if not group:
+                continue  # whole group cancelled/expired while queued
+            try:
+                self._prefill_group(free[: len(group)], group)
+            except Exception as e:  # noqa: BLE001 — per-batch containment
+                # a failing prefill (executor bug, injected fault, a raise
+                # surviving the guard's XLA retry) fails ONLY this group's
+                # handles; no slot was written, the engine keeps serving
+                for h in group:
+                    h.set_exception(e)
 
     def _prefill_group(self, gslots: List[int], handles: List[Handle]):
         greqs = [h.payload for h in handles]
@@ -278,20 +384,31 @@ class Engine:
                                    dtype=jnp.float32)
         temps = jnp.asarray([r.temperature for r in greqs], jnp.float32)
         self.key, k = jax.random.split(self.key)
+        act = (self.faults.on_call("prefill")
+               if self.faults is not None else None)
         with self._dispatch_scope():
+            if act is not None:
+                act.fire()  # raises/delays land BEFORE any state mutates
             if self._ragged:
-                first, sc = self._prefill_sample_ragged(
-                    self.params, sc, jnp.asarray(toks), jnp.asarray(lens),
-                    temps, k)
+                first, sc, bad = self.fallback_guard.run(
+                    self._prefill_sample_ragged, self.params, sc,
+                    jnp.asarray(toks), jnp.asarray(lens), temps, k)
             else:
-                first, sc = self._prefill_sample(self.params, sc,
-                                                 jnp.asarray(toks), temps, k)
+                first, sc, bad = self.fallback_guard.run(
+                    self._prefill_sample, self.params, sc,
+                    jnp.asarray(toks), temps, k)
+        if act is not None and act.poison:
+            # simulated silent corruption of the group's prefill logits:
+            # flag row 0 — ONE request fails with NumericalError at
+            # completion, its groupmates are untouched
+            bad = bad.at[0].set(True)
         self._write_slots(gslots, sc)
         idx = jnp.asarray(gslots, jnp.int32)
         self._pending = self._pending.at[idx].set(first)
         self._temps = self._temps.at[idx].set(temps)
         self._outbuf = self._outbuf.at[idx, 0].set(first)
         self._counts = self._counts.at[idx].set(1)
+        self._nonfinite = self._nonfinite.at[idx].set(bad)
         for s, r in zip(gslots, greqs):
             self.slots[s] = r
             self._emitted[s] = 1
@@ -304,39 +421,128 @@ class Engine:
                                 capacity=self.B * pmax)
         self._finish_done()  # max_new_tokens == 1 finishes at prefill
 
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot mid-flight or at retirement: drop the host request
+        and clear the slot's sticky numerics flag so the next occupant
+        starts clean (its cache rows are overwritten at prefill)."""
+        self.slots[slot] = None
+        self._emitted[slot] = 0
+        self._nonfinite = self._nonfinite.at[slot].set(False)
+
+    def _sweep_slots(self) -> None:
+        """Retire in-flight requests that went terminal without a result:
+        caller cancellation (``Handle.cancel()``), and per-request deadline
+        expiry — deadlines fire MID-DECODE too, not only while queued, so
+        a stuck/slow request cannot squat its slot past its budget."""
+        # queued expiry first: _admit only consults due() when a slot is
+        # free, so without this a full engine would leave expired queued
+        # requests PENDING until something retires
+        self.scheduler.expire()
+        now = self.scheduler.now()
+        for slot, req in enumerate(self.slots):
+            if req is None or req.handle is None:
+                continue
+            h = req.handle
+            if (not h.done() and h.deadline is not None
+                    and now >= h.deadline):
+                h.set_exception(
+                    RequestTimedOut(
+                        f"request {h.uid} timed out mid-decode after "
+                        f"{self._emitted[slot]} token(s); freeing its slot"),
+                    state=TIMED_OUT)
+            if h.done():
+                self._release_slot(slot)
+
     def _finish_done(self):
-        """Retire completed slots; the ONLY per-request device->host read."""
+        """Retire completed slots; the ONLY per-request device->host reads
+        (the slot's sticky numerics flag, then — when it is clean — the
+        finished token row)."""
         for slot, req in enumerate(self.slots):
             if req is None or self._emitted[slot] < req.max_new_tokens:
+                continue
+            h = req.handle
+            if self.check_numerics and bool(
+                    jax.device_get(self._nonfinite[slot])):
+                # the in-graph sticky flag caught NaN/Inf logits somewhere
+                # in this request's decode: fail it rather than deliver
+                # garbage tokens sampled from poisoned logits
+                req.done = True
+                if h is not None:
+                    h.set_exception(NumericalError(
+                        f"request {h.uid} produced non-finite logits "
+                        "during decode (NaN/Inf); its tokens are not "
+                        "trustworthy and were not delivered"))
+                self._release_slot(slot)
                 continue
             toks = np.asarray(
                 jax.device_get(self._outbuf[slot, : req.max_new_tokens]))
             req.out_tokens = [int(t) for t in toks]
             req.done = True
-            if req.handle is not None:
-                req.handle.set_result(req.out_tokens)
-            self.stats.finished += 1
-            self.slots[slot] = None
-            self._emitted[slot] = 0
+            delivered = True
+            if h is not None:
+                # a late result into a handle the caller already cancelled
+                # (or that timed out this very step) is dropped by the
+                # state machine — don't double-count it as finished
+                delivered = h.set_result(req.out_tokens)
+            if delivered:
+                self.stats.finished += 1
+            self._release_slot(slot)
 
     def step(self) -> int:
-        """Admit + one decode step for all live slots. Returns #live."""
+        """Admit + one decode step for all live slots. Returns #live.
+
+        Failure containment: a raising decode step (executor bug or
+        injected fault) fails ONLY the slots live in that step — their
+        handles get the exception, their slots free — and the engine keeps
+        serving the queue.  The step itself never raises.
+        """
+        self._sweep_slots()  # cancellations + mid-decode deadline expiry
         self._admit()
         live_mask = np.asarray([r is not None for r in self.slots], bool)
         live = [i for i in range(self.B) if live_mask[i]]
         if not live:
             return 0
-        with self._dispatch_scope():
-            self.cache, self._pending, self._outbuf, self._counts, self.key \
-                = self._decode_step(self.params, self.cache, self._pending,
-                                    self._outbuf, self._counts, self._temps,
-                                    jnp.asarray(live_mask), self.key)
+        act = (self.faults.on_call("decode")
+               if self.faults is not None else None)
+        try:
+            if act is not None:
+                act.fire()
+                if act.poison:
+                    self._poison_slot(live[0])
+            with self._dispatch_scope():
+                (self.cache, self._pending, self._outbuf, self._counts,
+                 self._nonfinite, self.key) = self.fallback_guard.run(
+                    self._decode_step, self.params, self.cache,
+                    self._pending, self._outbuf, self._counts, self._temps,
+                    jnp.asarray(live_mask), self._nonfinite, self.key)
+        except Exception as e:  # noqa: BLE001 — per-batch containment
+            for slot in live:
+                req = self.slots[slot]
+                if req is not None and req.handle is not None:
+                    req.handle.set_exception(e)
+                self._release_slot(slot)
+            return 0
         self.stats.steps += 1
         self.stats.decoded_tokens += len(live)
         for slot in live:
             self._emitted[slot] += 1
         self._finish_done()
         return len(live)
+
+    def _poison_slot(self, slot: int) -> None:
+        """NaN-poison ONE slot's KV-cache rows (the fault injector's
+        ``nan@decode`` site): that single request's logits go non-finite,
+        the sticky flag catches it, and it alone fails with
+        ``NumericalError`` — its batchmates decode on unharmed."""
+        def poison(leaf):
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                return leaf
+            if leaf.ndim == 1:  # per-slot lengths etc.
+                return leaf
+            # batch axis convention matches _write_slots: axis 1 for the
+            # (layers, B, ...) stacked cache leaves
+            return leaf.at[:, slot].set(jnp.nan)
+        self.cache = jax.tree.map(poison, self.cache)
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):

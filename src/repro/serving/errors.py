@@ -1,0 +1,57 @@
+"""Failure taxonomy for the serving stack.
+
+Every way a request can end other than DONE has one exception class, so
+callers can catch precisely what they can handle:
+
+* :class:`QueueFullError` — admission control: the bounded queue rejected
+  the submit (``OverloadPolicy(shed_oldest=False)``), or the request was
+  admitted and later shed to make room (``shed_oldest=True``; the shed
+  handle ends ``FAILED`` with this exception and counts in
+  ``ServeStats.shed``).
+* :class:`CancelledError` — the caller cancelled the handle
+  (``Handle.cancel()``); ``result()`` re-raises this.
+* :class:`RequestTimedOut` — the request's per-request deadline
+  (``deadline_ms=`` at submit) expired while it was queued or in flight;
+  a ``TimeoutError`` subclass so generic timeout handling applies.
+* :class:`NumericalError` — the computation produced non-finite outputs
+  (NaN-poisoned quantized forward, overflowing int accumulators); raised
+  by the decode-logits finite check and by
+  :class:`repro.kernels.ops.FallbackGuard` (defined there, re-exported
+  here, because the guard lives below the serving layer).
+* :class:`InjectedFault` — raised by the
+  :mod:`repro.serving.faults` harness on a provoked executor failure
+  (defined there, re-exported here).
+
+Executor/engine failures that are none of the above propagate the original
+exception through ``Handle.result()`` with the handle in state ``FAILED``.
+"""
+from __future__ import annotations
+
+from ..kernels.ops import NumericalError
+
+__all__ = ["QueueFullError", "CancelledError", "RequestTimedOut",
+           "NumericalError", "InjectedFault"]
+
+
+class QueueFullError(RuntimeError):
+    """Admission control: the bounded request queue is full."""
+
+
+class CancelledError(RuntimeError):
+    """The request's handle was cancelled before it produced a result."""
+
+
+class RequestTimedOut(TimeoutError):
+    """The request's per-request deadline expired (queued or in flight)."""
+
+
+def _injected_fault():
+    # late import: faults.py imports this module for the re-export chain
+    from .faults import InjectedFault
+    return InjectedFault
+
+
+def __getattr__(name):
+    if name == "InjectedFault":
+        return _injected_fault()
+    raise AttributeError(name)

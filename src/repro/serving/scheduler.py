@@ -13,7 +13,28 @@ executes when the pluggable :class:`FlushPolicy` says so:
 
 The clock is injectable (``clock=`` returns seconds, default
 ``time.monotonic``) so tests and ``benchmarks/serving_bench.py`` drive
-deadline behavior with virtual time instead of sleeping.
+deadline behavior with virtual time instead of sleeping.  All scheduler
+arithmetic runs on a MONOTONIC GUARD over that clock (:meth:`now`): a
+clock that stalls simply freezes ages, and one that steps backwards can
+neither make an age negative nor un-fire a deadline that already passed.
+
+Failure story (the fault-tolerance layer):
+
+* Handles are a terminal-state machine — ``PENDING`` then exactly one of
+  ``DONE`` / ``FAILED`` / ``CANCELLED`` / ``TIMED_OUT``.  Executor
+  exceptions in :meth:`poll`/:meth:`drain` fail ONLY the handles of the
+  batch that was executing (``set_exception``) and the loop keeps
+  serving; they never propagate out of the scheduler.
+* Admission control: an :class:`OverloadPolicy` bounds the queue —
+  reject new submits with :class:`~repro.serving.errors.QueueFullError`,
+  or shed the oldest waiting request to make room.
+* Per-request deadlines (``submit(..., deadline_ms=)``) expire queued
+  requests to ``TIMED_OUT`` (:meth:`expire`, folded into :meth:`due` /
+  :meth:`poll`); engines expire their *in-flight* requests the same way.
+* Every outcome lands in the shared
+  :class:`~repro.serving.batching.ServeStats` counters, so
+  ``submitted == completed + failed + cancelled + timed_out + shed``
+  always reconciles.
 
 Two usage modes share the same core:
 
@@ -35,11 +56,23 @@ import time
 from typing import Callable, List, Optional, Sequence
 
 from .batching import ServeStats
+from .errors import CancelledError, QueueFullError, RequestTimedOut
 
 # flush reasons (ServeStats.flush_reasons keys)
 FLUSH_FULL = "full"
 FLUSH_DEADLINE = "deadline"
 FLUSH_DRAIN = "drain"
+
+# Handle states: PENDING, then exactly one terminal state
+PENDING = "PENDING"
+DONE = "DONE"
+FAILED = "FAILED"
+CANCELLED = "CANCELLED"
+TIMED_OUT = "TIMED_OUT"
+
+# terminal state -> ServeStats outcome counter it increments
+_STATE_OUTCOME = {DONE: "completed", FAILED: "failed",
+                  CANCELLED: "cancelled", TIMED_OUT: "timed_out"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +83,9 @@ class FlushPolicy:
     explicit drains flush — the old explicit-flush batcher behavior);
     ``max_delay_ms=0.0`` flushes whenever anything is pending (the token
     engine's admit-on-free-slot behavior).
+
+    Raises ``ValueError`` for a non-positive ``max_batch`` or a negative
+    ``max_delay_ms``.
     """
 
     max_batch: int = 64
@@ -63,37 +99,140 @@ class FlushPolicy:
                 f"max_delay_ms must be >= 0 or None, got {self.max_delay_ms}")
 
 
-class Handle:
-    """A submitted request: resolved when its batch executes.
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Admission control: what happens when the queue is full.
 
-    ``result()`` raises until the scheduler has flushed the request —
-    drive the scheduler (``poll()`` until the deadline passes, or
-    ``drain()``) to force delivery.
+    ``max_queue=None`` (default) leaves the queue unbounded — exactly the
+    pre-admission-control behavior.  With a bound, a submit that finds
+    ``max_queue`` requests already waiting either raises
+    :class:`~repro.serving.errors.QueueFullError` (``shed_oldest=False``,
+    counted in ``ServeStats.rejected``) or sheds the OLDEST waiting
+    request to make room (``shed_oldest=True``: the shed handle ends
+    ``FAILED`` with a ``QueueFullError`` and counts in
+    ``ServeStats.shed`` — freshest-traffic-wins load shedding).
+
+    Raises ``ValueError`` for a non-positive ``max_queue``.
     """
 
-    __slots__ = ("uid", "payload", "submitted_at", "done", "_result")
+    max_queue: Optional[int] = None
+    shed_oldest: bool = False
 
-    def __init__(self, uid: int, payload, submitted_at: float):
+    def __post_init__(self):
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 or None, got {self.max_queue}")
+
+
+class Handle:
+    """A submitted request: a future with a terminal-state machine.
+
+    States: ``PENDING`` until the scheduler/engine delivers exactly one
+    terminal transition — ``DONE`` (``set_result``), ``FAILED``
+    (``set_exception``), ``CANCELLED`` (``cancel``), or ``TIMED_OUT``
+    (deadline expiry).  Terminal states are sticky: late transitions (an
+    executor delivering into a handle the caller already cancelled) are
+    dropped, and every transition is counted once in the scheduler's
+    ``ServeStats``.
+
+    ``result()`` raises ``RuntimeError`` while the request is still
+    PENDING (drive the scheduler — ``poll()`` until the deadline passes,
+    or ``drain()`` — or pass ``timeout=`` to block on the real clock);
+    for a failed/cancelled/timed-out request it re-raises the recorded
+    exception.
+    """
+
+    __slots__ = ("uid", "payload", "submitted_at", "deadline", "state",
+                 "_result", "_exception", "_stats")
+
+    def __init__(self, uid: int, payload, submitted_at: float,
+                 deadline: Optional[float] = None,
+                 stats: Optional[ServeStats] = None):
         self.uid = uid
         self.payload = payload
         self.submitted_at = submitted_at
-        self.done = False
+        self.deadline = deadline  # absolute clock seconds, or None
+        self.state = PENDING
         self._result = None
+        self._exception: Optional[BaseException] = None
+        self._stats = stats
 
-    def set_result(self, result) -> None:
+    # -- state machine -------------------------------------------------------
+    def _finish(self, state: str, result=None,
+                exc: Optional[BaseException] = None,
+                count_as: Optional[str] = None) -> bool:
+        """One-shot transition PENDING -> ``state``; False if already
+        terminal (the transition is dropped, nothing is overwritten)."""
+        if self.state != PENDING:
+            return False
+        self.state = state
         self._result = result
-        self.done = True
+        self._exception = exc
+        if self._stats is not None:
+            self._stats.record_outcome(count_as or _STATE_OUTCOME[state])
+        return True
 
-    def result(self):
-        if not self.done:
+    def set_result(self, result) -> bool:
+        """Deliver the result (-> DONE); dropped if already terminal."""
+        return self._finish(DONE, result=result)
+
+    def set_exception(self, exc: BaseException, state: str = FAILED,
+                      count_as: Optional[str] = None) -> bool:
+        """Fail the request (-> FAILED by default; pass ``state=TIMED_OUT``
+        for deadline expiry).  ``count_as`` overrides which ServeStats
+        outcome counter increments (load shedding counts as ``"shed"``
+        while still ending FAILED).  Dropped if already terminal."""
+        return self._finish(state, exc=exc, count_as=count_as)
+
+    def cancel(self) -> bool:
+        """Cancel a PENDING request (-> CANCELLED); returns False if it
+        already reached a terminal state (too late to cancel).  A queued
+        request never executes after this; an in-flight decode is swept at
+        the engine's next step (its slot is freed)."""
+        return self._finish(
+            CANCELLED, exc=CancelledError(f"request {self.uid} cancelled"))
+
+    # -- inspection ----------------------------------------------------------
+    def done(self) -> bool:
+        """True once the handle reached ANY terminal state."""
+        return self.state != PENDING
+
+    def cancelled(self) -> bool:
+        return self.state == CANCELLED
+
+    def exception(self) -> Optional[BaseException]:
+        """The recorded failure (None while PENDING or when DONE)."""
+        return self._exception
+
+    def result(self, timeout: Optional[float] = None):
+        """The delivered result.
+
+        Raises ``RuntimeError`` while the request is still PENDING and no
+        ``timeout`` is given (this scheduler is poll-driven: drive it, or
+        use ``timeout=`` seconds to block on the REAL clock — that only
+        makes sense when something else concurrently drives the engine,
+        e.g. the serving daemon; raises ``TimeoutError`` if the wait
+        expires).  For a FAILED / CANCELLED / TIMED_OUT request this
+        re-raises the recorded exception.
+        """
+        if self.state == PENDING and timeout is not None:
+            wait_until = time.monotonic() + timeout
+            while self.state == PENDING and time.monotonic() < wait_until:
+                time.sleep(0.0005)
+            if self.state == PENDING:
+                raise TimeoutError(
+                    f"request {self.uid} still PENDING after waiting "
+                    f"{timeout}s (is anything driving the engine?)")
+        if self.state == PENDING:
             raise RuntimeError(
                 f"request {self.uid} has no result yet: it is still queued "
                 "or executing; poll() until its deadline passes, or drain()")
-        return self._result
+        if self.state == DONE:
+            return self._result
+        raise self._exception
 
     def __repr__(self):
-        state = "done" if self.done else "pending"
-        return f"Handle(uid={self.uid}, {state})"
+        return f"Handle(uid={self.uid}, {self.state})"
 
 
 class Scheduler:
@@ -102,13 +241,28 @@ class Scheduler:
     def __init__(self, policy: FlushPolicy = FlushPolicy(),
                  executor: Optional[Callable] = None,
                  stats: Optional[ServeStats] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 overload: Optional[OverloadPolicy] = None,
+                 faults=None):
         self.policy = policy
         self.executor = executor
         self.stats = stats if stats is not None else ServeStats()
         self.clock = clock
+        self.overload = overload if overload is not None else OverloadPolicy()
+        self.faults = faults  # serving.faults.FaultInjector (site "executor")
         self._q: List[Handle] = []
         self._uids = itertools.count()  # monotonic: uids never collide
+        self._last_now = float("-inf")  # monotonic guard over the clock
+
+    # -- clock ---------------------------------------------------------------
+    def now(self, now: Optional[float] = None) -> float:
+        """Monotonic-guarded clock read: the max ever observed, so ages
+        never go negative and fired deadlines never un-fire when the
+        underlying clock stalls or steps backwards."""
+        t = self.clock() if now is None else now
+        if t > self._last_now:
+            self._last_now = t
+        return self._last_now
 
     # -- queue state ---------------------------------------------------------
     @property
@@ -122,65 +276,147 @@ class Scheduler:
     def oldest_age_ms(self, now: Optional[float] = None) -> float:
         if not self._q:
             return 0.0
-        now = self.clock() if now is None else now
-        return (now - self._q[0].submitted_at) * 1000.0
+        return max(0.0, (self.now(now) - self._q[0].submitted_at) * 1000.0)
 
     def next_deadline(self) -> Optional[float]:
-        """Absolute clock time the oldest request becomes due (None if the
-        queue is empty or the policy has no deadline) — serving loops sleep
-        until this instead of busy-polling."""
-        if not self._q or self.policy.max_delay_ms is None:
-            return None
-        return self._q[0].submitted_at + self.policy.max_delay_ms / 1000.0
+        """Absolute clock time of the next event — the oldest request
+        becoming due for admission, or the earliest per-request deadline
+        expiring (None if neither applies) — serving loops sleep until
+        this instead of busy-polling."""
+        cands = []
+        if self._q and self.policy.max_delay_ms is not None:
+            cands.append(self._q[0].submitted_at
+                         + self.policy.max_delay_ms / 1000.0)
+        cands.extend(h.deadline for h in self._q if h.deadline is not None)
+        return min(cands) if cands else None
+
+    def expire(self, now: Optional[float] = None) -> int:
+        """Sweep the queue: drop cancelled handles and transition queued
+        requests past their per-request deadline to TIMED_OUT (counted in
+        ``ServeStats.timed_out``).  Returns the number expired.  Folded
+        into :meth:`due`, so poll loops get it for free."""
+        now = self.now(now)
+        keep: List[Handle] = []
+        expired: List[Handle] = []
+        for h in self._q:
+            if h.state != PENDING:
+                continue  # cancelled (or externally finished): just drop
+            if h.deadline is not None and now >= h.deadline:
+                expired.append(h)
+            else:
+                keep.append(h)
+        self._q = keep
+        for h in expired:
+            h.set_exception(
+                RequestTimedOut(
+                    f"request {h.uid} expired in queue: deadline passed "
+                    f"{(now - h.deadline) * 1000.0:.1f}ms ago"),
+                state=TIMED_OUT)
+        return len(expired)
 
     def due(self, now: Optional[float] = None) -> Optional[str]:
-        """The flush reason if the policy wants a batch executed now."""
+        """The flush reason if the policy wants a batch executed now
+        (cancelled/expired requests are swept first)."""
+        now = self.now(now)
+        self.expire(now)
         if not self._q:
             return None
         if len(self._q) >= self.policy.max_batch:
             return FLUSH_FULL
-        deadline = self.next_deadline()
-        if deadline is not None:
-            # compare against next_deadline()'s own arithmetic so a caller
-            # that slept exactly until the returned deadline IS due (an
+        if self.policy.max_delay_ms is not None:
+            # compare against the admission deadline's own arithmetic so a
+            # caller that slept exactly until next_deadline() IS due (an
             # age-based >= check can miss it by one float ulp and spin)
-            now = self.clock() if now is None else now
+            deadline = (self._q[0].submitted_at
+                        + self.policy.max_delay_ms / 1000.0)
             if now >= deadline:
                 return FLUSH_DEADLINE
         return None
 
     # -- request API ---------------------------------------------------------
-    def submit(self, payload) -> Handle:
-        h = Handle(uid=next(self._uids), payload=payload,
-                   submitted_at=self.clock())
+    def submit(self, payload, deadline_ms: Optional[float] = None) -> Handle:
+        """Enqueue one request; returns its :class:`Handle` immediately.
+
+        ``deadline_ms``: optional per-request deadline (relative to now);
+        the request TIMES OUT — queued or in flight — once it passes.
+
+        Raises :class:`~repro.serving.errors.QueueFullError` when an
+        :class:`OverloadPolicy` bounds the queue, it is full, and the
+        policy rejects rather than sheds (with ``shed_oldest=True`` the
+        oldest waiting request is shed — failed with ``QueueFullError``,
+        counted in ``ServeStats.shed`` — and this submit succeeds).
+        Raises ``ValueError`` for a non-positive ``deadline_ms``.
+        """
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        now = self.now()
+        self.expire(now)
+        cap = self.overload.max_queue
+        if cap is not None:
+            while len(self._q) >= cap:
+                if not self.overload.shed_oldest:
+                    self.stats.record_outcome("rejected")
+                    raise QueueFullError(
+                        f"queue full: {len(self._q)} waiting >= max_queue="
+                        f"{cap} (OverloadPolicy rejects; use "
+                        "shed_oldest=True to shed instead)")
+                old = self._q.pop(0)
+                old.set_exception(
+                    QueueFullError(
+                        f"request {old.uid} shed: queue hit max_queue="
+                        f"{cap} and OverloadPolicy sheds oldest"),
+                    count_as="shed")
+        h = Handle(uid=next(self._uids), payload=payload, submitted_at=now,
+                   deadline=(None if deadline_ms is None
+                             else now + deadline_ms / 1000.0),
+                   stats=self.stats)
         self._q.append(h)
         self.stats.submitted += 1
         if self.executor is not None:
-            self.poll()  # a now-full batch executes inline
+            self.poll(now)  # a now-full batch executes inline
         return h
 
     # -- admission mode (the engine owns execution) --------------------------
     def peek(self, n: int) -> List[Handle]:
-        """Up to ``n`` oldest handles, not removed (the token engine groups
-        them by prompt length before committing to a prefill batch)."""
-        return self._q[: max(0, n)]
+        """Up to ``n`` oldest PENDING handles, not removed (the token
+        engine groups them by prompt length before committing to a
+        prefill batch)."""
+        return [h for h in self._q if h.state == PENDING][: max(0, n)]
 
     def pop(self, handles: Sequence[Handle], reason: str) -> List[Handle]:
         """Remove ``handles`` from the queue; stamps each one's queue
-        latency and the batch's flush reason into the shared stats."""
-        now = self.clock()
+        latency and the batch's flush reason into the shared stats.
+        Returns only the handles still PENDING (cancelled/expired ones
+        are dropped, never executed)."""
+        now = self.now()
         taken = {id(h) for h in handles}
         self._q = [h for h in self._q if id(h) not in taken]
-        for h in handles:
+        live = [h for h in handles if h.state == PENDING]
+        for h in live:
             self.stats.record_latency((now - h.submitted_at) * 1000.0)
-        if handles:
+        if live:
             self.stats.record_flush(reason)
-        return list(handles)
+        return live
 
     # -- executor mode (the scheduler owns execution) ------------------------
+    def _run_executor(self, handles: List[Handle], reason: str) -> None:
+        """One executor call with per-batch failure containment: an
+        exception (including an injected fault) fails ONLY this batch's
+        handles; it never propagates, so the serving loop keeps running."""
+        act = self.faults.on_call("executor") if self.faults else None
+        try:
+            if act is not None:
+                act.fire()
+            self.executor(handles, reason)
+        except Exception as e:  # noqa: BLE001 — containment is the point
+            for h in handles:
+                h.set_exception(e)
+
     def poll(self, now: Optional[float] = None) -> int:
         """Execute every batch the policy says is due.  Returns the number
-        of requests delivered.  No-op without an executor."""
+        of requests resolved (delivered OR failed — executor exceptions
+        fail the batch's handles and the loop keeps serving).  No-op
+        without an executor."""
         if self.executor is None:
             return 0
         delivered = 0
@@ -189,19 +425,25 @@ class Scheduler:
             if reason is None:
                 return delivered
             handles = self.pop(self._q[: self.policy.max_batch], reason)
-            self.executor(handles, reason)
+            if not handles:
+                continue  # batch was entirely cancelled/expired
+            self._run_executor(handles, reason)
             delivered += len(handles)
 
     def drain(self) -> List[Handle]:
         """Flush EVERYTHING pending regardless of policy (shutdown, or the
         legacy explicit-flush API).  Returns the flushed handles in submit
-        order.  Requires an executor."""
+        order (executor failures fail their batch's handles; the drain
+        continues).  Raises ``RuntimeError`` without an executor —
+        admission-mode callers pop() and execute themselves."""
         if self.executor is None:
             raise RuntimeError("drain() needs an executor; admission-mode "
                                "callers pop() and execute themselves")
         flushed: List[Handle] = []
         while self._q:
             handles = self.pop(self._q[: self.policy.max_batch], FLUSH_DRAIN)
-            self.executor(handles, FLUSH_DRAIN)
+            if not handles:
+                continue
+            self._run_executor(handles, FLUSH_DRAIN)
             flushed.extend(handles)
         return flushed

@@ -22,6 +22,18 @@ quantized conv/matmul hot path end to end: stride-1 1x1 PWConvs run the
 fused m2q/int8 matmul kernels, depthwise filters the packed-w4 conv kernel
 (kernels.ops.conv_dispatch_enabled), with the pure-XLA QTensor paths as
 fallback — no f32 dequantized-weight convolutions.
+
+Failure story (the fault-tolerance layer): executor exceptions fail ONLY
+the batch that was executing (the scheduler core contains them) and the
+engine keeps serving.  The jitted forward runs under a
+``kernels.ops.FallbackGuard``: a raising or NaN-producing kernel-dispatched
+forward is retried once on the XLA path (and the dispatch axes latch off
+process-wide).  Delivered logits are finite-checked PER ROW — a poisoned
+image fails alone with ``NumericalError`` while its batchmates get their
+results.  ``submit(..., deadline_ms=)`` expires queued requests,
+``OverloadPolicy`` bounds the queue, and a ``serving.faults.FaultInjector``
+(``faults=`` or ``REPRO_FAULT_SPEC``) provokes all of it deterministically
+at the ``vision`` / ``vision.kernel`` / ``executor`` sites.
 """
 from __future__ import annotations
 
@@ -37,8 +49,10 @@ import numpy as np
 from ..kernels import ops as _kops
 from ..models import get_model
 from ..models.config import ArchConfig
+from . import faults as _faults
 from .batching import ServeStats, pow2_bucket
-from .scheduler import FlushPolicy, Handle, Scheduler
+from .errors import NumericalError
+from .scheduler import DONE, FlushPolicy, Handle, OverloadPolicy, Scheduler
 
 
 @dataclasses.dataclass
@@ -63,7 +77,10 @@ class VisionEngine:
                  max_delay_ms: Optional[float] = None,
                  dispatch: Optional[_kops.DispatchConfig] = None,
                  mesh=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 overload: Optional[OverloadPolicy] = None,
+                 faults: Optional[_faults.FaultInjector] = None,
+                 check_numerics: bool = True):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.cfg = cfg
@@ -76,11 +93,23 @@ class VisionEngine:
         if mesh is not None:
             params = self._shard(params, mesh)
         self.params = params
+        # faults= (or REPRO_FAULT_SPEC) provokes failures at the vision /
+        # vision.kernel / executor sites; overload= bounds the queue
+        self.faults = faults if faults is not None else _faults.from_env()
+        self.check_numerics = check_numerics
         self.scheduler = Scheduler(
             policy=FlushPolicy(max_batch=max_batch,
                                max_delay_ms=max_delay_ms),
-            executor=self._execute, stats=self.stats, clock=clock)
-        self._fwd = jax.jit(self._fwd_impl)
+            executor=self._execute, stats=self.stats, clock=clock,
+            overload=overload, faults=self.faults)
+        # retry-once-on-XLA guard around the kernel-dispatched forward; the
+        # finite check here is cheap (the vision path syncs per batch
+        # anyway) so a NaN-producing kernel also degrades to XLA
+        self.fallback_guard = _kops.FallbackGuard(
+            check_finite=True, faults=self.faults, site="vision.kernel")
+        # ``fallback`` is STATIC: the guard's XLA retry needs its own
+        # trace, not the kernel-path trace replayed under another scope
+        self._fwd = jax.jit(self._fwd_impl, static_argnames=("fallback",))
         # pin kernel dispatch for every trace this engine owns (scoped
         # kernels.ops.DispatchConfig; None inherits env/backend defaults)
         self.dispatch = dispatch
@@ -111,8 +140,13 @@ class VisionEngine:
         return (_kops.dispatch(self.dispatch) if self.dispatch is not None
                 else contextlib.nullcontext())
 
-    def _fwd_impl(self, params, images):
-        return self.model.forward(self.cfg, params, images)
+    def _fwd_impl(self, params, images, fallback=False):
+        # fallback=True (static) pins the retry trace to the XLA path —
+        # all dispatch axes off, beating any ambient scope/env/latch
+        scope = (_kops.dispatch(dense=False, conv=False, attn=False)
+                 if fallback else contextlib.nullcontext())
+        with scope:
+            return self.model.forward(self.cfg, params, images)
 
     def bucket(self, n: int) -> int:
         """Smallest power-of-two >= n (floored at min_bucket, capped at
@@ -132,45 +166,96 @@ class VisionEngine:
         if self._batch_spec is not None:
             x = jax.device_put(x, self._batch_spec)
         with self._dispatch_scope():
-            logits = self._fwd(self.params, x)
+            logits = self.fallback_guard.run(self._fwd, self.params, x)
         self.stats.record_batch(items=n, padded=pad, capacity=self.B,
                                 bucket=bucket)
         return np.asarray(logits)[:n]
 
     def _execute(self, handles: List[Handle], reason: str) -> None:
-        """Scheduler executor: one flushed batch -> per-handle logits."""
+        """Scheduler executor: one flushed batch -> per-handle logits.
+
+        Per-ROW numerics containment: rows of the executed batch holding
+        NaN/Inf fail their handle alone with ``NumericalError``; the rest
+        of the batch delivers normally.  An exception out of here (an
+        injected ``vision``-site fault, an OOM, a raise surviving the
+        guard's XLA retry) is contained by the scheduler core: it fails
+        this batch's handles and the serving loop keeps running.
+        """
+        act = (self.faults.on_call("vision")
+               if self.faults is not None else None)
+        if act is not None:
+            act.fire()  # raises/delays before any work runs
         imgs = np.stack([h.payload for h in handles]).astype(np.float32)
         out = self._run_batch(imgs, self.bucket(len(handles)))
-        for h, row in zip(handles, out):
-            h.set_result(row)
+        if act is not None and act.poison:
+            # simulated silent corruption of the batch's outputs: poison
+            # ONE row — that request fails alone, batchmates deliver
+            out = out.copy()
+            out[0] = np.nan
+        for i, (h, row) in enumerate(zip(handles, out)):
+            if self.check_numerics and not np.all(np.isfinite(row)):
+                h.set_exception(NumericalError(
+                    f"request {h.uid}: non-finite logits from the vision "
+                    f"forward (row {i} of the executed batch); its result "
+                    "was not delivered"))
+            else:
+                h.set_result(row)
 
     # -- request API ---------------------------------------------------------
-    def submit(self, image: np.ndarray) -> Handle:
+    def submit(self, image: np.ndarray,
+               deadline_ms: Optional[float] = None) -> Handle:
         """Queue one (H, W, 3) image; returns a handle whose ``result()``
         (this image's (n_classes,) logits) is delivered at flush — when the
-        batch fills, the deadline fires, or ``flush()`` drains."""
+        batch fills, the deadline fires, or ``flush()`` drains.
+
+        ``deadline_ms``: optional per-request deadline — a queued request
+        that is not executed within that many ms ends ``TIMED_OUT``.
+
+        Raises ``ValueError`` on malformed payloads, validated UP FRONT so
+        bad inputs fail here with a clear message, not as a poisoned batch
+        later: wrong shape, non-numeric dtypes, or NaN/Inf pixels (which
+        would corrupt the whole executed batch's numerics, not just this
+        row's).  Raises ``QueueFullError`` when a bounded queue rejects
+        the submit (see ``OverloadPolicy``).
+        """
         img = np.asarray(image)
         if img.shape != (self.cfg.img_res, self.cfg.img_res, 3):
             raise ValueError(
                 f"expected ({self.cfg.img_res}, {self.cfg.img_res}, 3), "
                 f"got {img.shape}")
-        return self.scheduler.submit(img)
+        if not np.issubdtype(img.dtype, np.number) \
+                or np.issubdtype(img.dtype, np.complexfloating):
+            raise ValueError(
+                f"image dtype must be real-numeric pixels, got {img.dtype}")
+        if np.issubdtype(img.dtype, np.floating) \
+                and not np.all(np.isfinite(img)):
+            raise ValueError(
+                "image holds NaN/Inf pixels; refusing to enqueue a payload "
+                "that would poison its whole executed batch")
+        return self.scheduler.submit(img, deadline_ms=deadline_ms)
 
     def poll(self) -> int:
         """Execute whatever the flush policy says is due (a full batch, or
         pending requests older than ``max_delay_ms``).  Returns the number
-        of requests delivered.  Serving loops call this instead of
-        ``flush()``; ``scheduler.next_deadline()`` says how long they may
-        sleep first."""
+        of requests RESOLVED — delivered or failed: executor exceptions
+        fail only their batch's handles (each handle's ``result()``
+        re-raises), never this call, so serving loops keep polling.
+        ``scheduler.next_deadline()`` says how long they may sleep first."""
         return self.scheduler.poll()
 
     def flush(self) -> Optional[np.ndarray]:
-        """Drain ALL pending images regardless of policy; returns their
-        (n_pending, n_classes) logits in submit order (None if idle)."""
+        """Drain ALL pending images regardless of policy; returns the
+        delivered (n, n_classes) logits in submit order (None if idle).
+
+        Never raises on request failures: a failed batch or a non-finite
+        row fails its own handles (absent from the returned stack; their
+        ``result()`` re-raises the recorded exception) and the drain
+        continues through the rest of the queue."""
         flushed = self.scheduler.drain()
-        if not flushed:
+        ok = [h.result() for h in flushed if h.state == DONE]
+        if not ok:
             return None
-        return np.stack([h.result() for h in flushed])
+        return np.stack(ok)
 
     def classify(self, images) -> np.ndarray:
         """(N, H, W, 3) images -> (N, n_classes) logits, any N >= 1 — the

@@ -129,6 +129,18 @@ def test_serving_bench_smoke_rows():
     # the policy responds to load: higher arrival rate -> fuller batches
     occ = [r["batch_occupancy"] for r in rep["vision"]]
     assert occ[-1] >= occ[0]
+    # fault-rate scenarios: faults actually fired, goodput accounts for
+    # the failures, and the engines RECOVERED (every handle resolved)
+    assert rep["faults"]
+    for row in rep["faults"]:
+        assert row["faults_fired"] > 0
+        assert row["recovered"] is True
+        assert row["failed"] > 0                    # the faults cost requests
+        assert 0.0 <= row["goodput"] < 1.0
+        assert row["goodput"] == pytest.approx(
+            row["completed"] / row["submitted"], abs=1e-3)
+        assert (row["completed"] + row["failed"] + row["cancelled"]
+                + row["timed_out"] + row["shed"]) == row["submitted"]
 
 
 @pytest.mark.slow

@@ -81,7 +81,7 @@ def test_scheduler_flush_policy_reasons():
     h2 = sched.submit(2)
     assert sched.due() is None and not ran          # 2 < max_batch, young
     sched.poll()
-    assert not ran and not h1.done
+    assert not ran and not h1.done()
     with pytest.raises(RuntimeError, match="no result yet"):
         h1.result()
     clk.advance_ms(49)
@@ -108,7 +108,7 @@ def test_scheduler_drain_and_fifo_order():
     flushed = sched.drain()
     assert [h.payload for h in flushed] == [4, 5]   # submit order
     assert ran[-1] == (FLUSH_DRAIN, [4, 5])
-    assert all(h.done for h in handles)
+    assert all(h.done() for h in handles)
     assert sched.pending == 0
     assert sched.drain() == []                      # idle drain is a no-op
     # max_delay_ms=None never deadline-flushes
@@ -157,12 +157,12 @@ def test_vision_deadline_flush_executes_without_explicit_flush():
     imgs = rng.normal(0, 1, (3, cfg.img_res, cfg.img_res, 3)).astype(
         np.float32)
     handles = [eng.submit(im) for im in imgs]
-    assert eng.poll() == 0 and not any(h.done for h in handles)
+    assert eng.poll() == 0 and not any(h.done() for h in handles)
     clk.advance_ms(14)
     assert eng.poll() == 0                           # not due yet
     clk.advance_ms(2)                                # oldest age > 15 ms
     assert eng.poll() == 3
-    assert all(h.done for h in handles)
+    assert all(h.done() for h in handles)
     ref = np.asarray(model.forward(cfg, params, np.asarray(imgs)))
     got = np.stack([h.result() for h in handles])
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
@@ -179,9 +179,9 @@ def test_vision_full_batch_flushes_inline_on_submit():
     imgs = rng.normal(0, 1, (2, cfg.img_res, cfg.img_res, 3)).astype(
         np.float32)
     h1 = eng.submit(imgs[0])
-    assert not h1.done
+    assert not h1.done()
     h2 = eng.submit(imgs[1])                         # fills the batch
-    assert h1.done and h2.done                       # executed inline
+    assert h1.done() and h2.done()                   # executed inline
     assert eng.stats.flush_reasons == {"full": 1}
     ref = np.asarray(model.forward(cfg, params, np.asarray(imgs)))
     np.testing.assert_allclose(np.stack([h1.result(), h2.result()]), ref,
@@ -269,9 +269,9 @@ def test_engine_full_batch_admits_before_deadline():
 def test_engine_request_handle_resolves_on_completion():
     cfg, eng = _token_engine(max_batch=2)
     req = eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=3)
-    assert req.handle is not None and not req.handle.done
+    assert req.handle is not None and not req.handle.done()
     eng.run()
-    assert req.handle.done
+    assert req.handle.done()
     assert req.handle.result() == req.out_tokens
     assert len(req.out_tokens) == 3
     # unified stats: queue latency recorded, prefill occupancy tracked
