@@ -1,15 +1,30 @@
 #!/usr/bin/env bash
-# Pre-merge check: lint + the fast test suite in one command.
+# Pre-merge check: lint + qlint + the fast test suite in one command.
 #
-#   ./check.sh            lint src/ then run ./test.sh -m "not slow"
-#   ./check.sh --lint-only
+#   ./check.sh              lint src/, qlint HLO sweep, ./test.sh -m "not slow"
+#   ./check.sh --lint-only  lint stages only (compileall + pyflakes)
+#   ./check.sh --strict     CI mode: a missing pyflakes FAILS instead of
+#                           being skipped (the dev container may not ship
+#                           it; CI must)
 #
-# Lint = pyflakes over src/ (when installed — the container may not have
-# it; we do not install packages) plus a stdlib compileall pass, which
-# catches syntax errors in EVERY file including ones the fast suite never
-# imports.  The full tier-1 gate remains ./test.sh with no -m filter.
+# Lint = pyflakes over src/ (hard gate under --strict) plus a stdlib
+# compileall pass, which catches syntax errors in EVERY file including
+# ones the fast suite never imports.  qlint = the rule-based HLO verifier
+# (docs/qlint.md) diffed against the committed baseline ledger — it fails
+# on NEW violations only.  The full tier-1 gate remains ./test.sh with no
+# -m filter.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+STRICT=0
+LINT_ONLY=0
+for arg in "$@"; do
+    case "$arg" in
+        --strict) STRICT=1 ;;
+        --lint-only) LINT_ONLY=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
 
 echo "== compileall (syntax, all of src/ + tests/ + benchmarks/ + examples/)"
 python -m compileall -q src tests benchmarks examples
@@ -17,13 +32,19 @@ python -m compileall -q src tests benchmarks examples
 if python -c "import pyflakes" 2>/dev/null; then
     echo "== pyflakes src/"
     python -m pyflakes src
+elif [[ "$STRICT" == 1 ]]; then
+    echo "== pyflakes not installed — FAILING (--strict requires the lint gate)" >&2
+    exit 1
 else
-    echo "== pyflakes not installed; skipping (compileall still ran)"
+    echo "== pyflakes not installed; skipping (compileall still ran; --strict would fail here)"
 fi
 
-if [[ "${1:-}" == "--lint-only" ]]; then
+if [[ "$LINT_ONLY" == 1 ]]; then
     exit 0
 fi
+
+echo "== qlint (HLO invariant sweep vs results/qlint_baseline.json)"
+PYTHONPATH=src python -m repro.launch.qlint --baseline results/qlint_baseline.json
 
 echo "== fast suite (./test.sh -m 'not slow')"
 exec ./test.sh -m "not slow"

@@ -1,0 +1,23 @@
+"""Static analysis of compiled (post-SPMD) HLO: the qlint rule engine.
+
+Public surface:
+
+* :mod:`repro.analysis.rules` — ``Rule`` / ``Violation`` / ``Trace`` and
+  the default rule registry (pure text, no jax import);
+* :mod:`repro.analysis.traces` — registry-config -> compiled ``Trace``
+  builders (abstract lowering, kernel dispatch scoped on);
+* :mod:`repro.analysis.baseline` — the committed known-violation ledger
+  and its regression diff;
+* ``python -m repro.launch.qlint`` — the sweep CLI.
+
+``rules``/``baseline`` import lazily-cheap modules only, so seeded-
+violation tests can run without touching jax.
+"""
+from .rules import (DEFAULT_RULES, RULES_BY_NAME, Rule, Trace,
+                    Violation, lint, run_rules)
+from .baseline import diff, improvements, load, save, to_ledger
+
+__all__ = [
+    "DEFAULT_RULES", "RULES_BY_NAME", "Rule", "Trace", "Violation", "lint",
+    "run_rules", "diff", "improvements", "load", "save", "to_ledger",
+]

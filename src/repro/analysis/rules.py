@@ -1,0 +1,423 @@
+"""qlint rule engine: named invariants checked against optimized HLO.
+
+A :class:`Trace` is one compiled hot path (post-SPMD HLO text plus the
+metadata needed to judge it: which invariants apply, how entry parameters
+map back to pytree paths, what the sharding specs were).  A :class:`Rule`
+is one invariant — it declares its severity, whether it applies to a given
+trace (``applies(meta)``), and produces :class:`Violation`s.  Rules carry
+default per-path suppressions (regexes over the violation path) and
+callers can add more; suppressed violations are returned separately, never
+silently dropped.
+
+The rules formalize the invariants the paper's speedups rest on (and that
+used to live as ad-hoc ``op_histogram`` asserts in four test files):
+
+====================  ========  ==================================================
+rule                  severity  invariant
+====================  ========  ==================================================
+no-f32-dot            error     a quantized hot path runs zero f32/f64 dots
+no-gather-concat      error     no gather/concat epilogue on quantized weights
+conv-budget           error     exactly the declared unquantized convolutions
+no-dequant-matmul     error     no f32 dot/conv fed by a dequantized weight
+no-d2h-in-loop        error     no host transfers inside while bodies
+unguarded-act-quant   warn      float->int8 converts dominated by is-finite
+sharding-conformance  error     compiled input shardings match dist.sharding
+====================  ========  ==================================================
+
+This module works on HLO *text* only (no jax import) so seeded-violation
+tests can feed handcrafted graphs; the jax-side trace builders live in
+``analysis.traces``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..launch import hlo_analysis as H
+
+_QUANT_DTYPES = ("s4", "u4", "s8", "u8")
+
+
+@dataclasses.dataclass
+class Trace:
+    """One compiled hot path under analysis.
+
+    ``meta`` keys the rules understand:
+
+    * ``quantized`` (bool, default True) — quantized-weights rules apply
+    * ``expect_no_f32_dot`` (bool) — the trace promises zero f32 dots
+    * ``expect_dots`` (bool, default True) — guard against vacuity: a
+      trace with no dots at all fails ``no-f32-dot`` instead of passing
+    * ``conv_budget`` (int or None) — exact allowed convolution count
+    * ``param_paths`` (list[str]) — i-th flattened jit argument leaf path;
+      used to attribute violations to parameters
+    * ``sharding`` (list[dict]) — {path, expected, actual} spec strings
+      recorded by the sharded trace builder
+    """
+
+    name: str
+    text: str
+    meta: dict = dataclasses.field(default_factory=dict)
+    compiled: object = None  # the jax Compiled, when built by traces.py
+    _graph: Optional[H.Graph] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def graph(self) -> H.Graph:
+        if self._graph is None:
+            self._graph = H.Graph(self.text)
+        return self._graph
+
+    def param_path(self, idx: int) -> str:
+        """Pytree path of entry parameter ``idx``.  XLA drops unused
+        argument leaves and renumbers, so the flat leaf list is aligned
+        to the surviving parameters by (dtype, shape) order — both are
+        subsequences of the original flattening."""
+        aligned = self._aligned_paths()
+        if aligned is not None and idx < len(aligned):
+            return aligned[idx]
+        return f"param{idx}"
+
+    def _aligned_paths(self) -> Optional[List[str]]:
+        if "_aligned_paths" in self.meta:
+            return self.meta["_aligned_paths"]
+        leaves = self.meta.get("param_leaves")
+        if leaves is None:  # no shape info recorded: trust 1:1 if counts fit
+            paths = self.meta.get("param_paths") or []
+            eps = self.graph.entry_params()
+            out = paths if len(paths) == len(eps) else None
+            self.meta["_aligned_paths"] = out
+            return out
+        g = self.graph
+
+        def matches(leaf, dt, dims):
+            # post-SPMD parameter shapes are PER-PARTITION: each dim of
+            # the HLO param evenly divides the global leaf dim
+            ldt, ldims = leaf[1], list(leaf[2])
+            return (ldt == dt and len(ldims) == len(dims)
+                    and all(d > 0 and ld % d == 0
+                            for d, ld in zip(dims, ldims)))
+
+        out = []
+        j = 0
+        for pname in g.entry_params():
+            tok = g.shapes.get(pname, "") if pname else ""
+            dt, dims = H._tok_first_shape(tok)
+            while j < len(leaves) and not matches(leaves[j], dt, dims):
+                j += 1
+            if j >= len(leaves):
+                self.meta["_aligned_paths"] = None
+                return None
+            out.append(leaves[j][0])
+            j += 1
+        self.meta["_aligned_paths"] = out
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    severity: str  # "error" | "warn"
+    trace: str
+    path: str      # what the suppression regexes match against
+    message: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One named invariant over a :class:`Trace`."""
+
+    name: str
+    severity: str
+    doc: str
+    applies: Callable[[dict], bool]
+    check: Callable[["Rule", Trace], List[Violation]]
+    suppress: Tuple[str, ...] = ()  # default path-regex suppressions
+
+    def violation(self, trace: Trace, path: str, message: str) -> Violation:
+        return Violation(rule=self.name, severity=self.severity,
+                         trace=trace.name, path=path, message=message)
+
+
+def run_rules(trace: Trace, rules: Optional[Sequence[Rule]] = None,
+              suppressions: Optional[Dict[str, Sequence[str]]] = None,
+              ) -> Tuple[List[Violation], List[Violation]]:
+    """Run every applicable rule; returns (violations, suppressed)."""
+    out: List[Violation] = []
+    supp: List[Violation] = []
+    for rule in DEFAULT_RULES if rules is None else rules:
+        if not rule.applies(trace.meta):
+            continue
+        pats = tuple(rule.suppress) + tuple(
+            (suppressions or {}).get(rule.name, ()))
+        for v in rule.check(rule, trace):
+            if any(re.search(p, v.path) for p in pats):
+                supp.append(v)
+            else:
+                out.append(v)
+    return out, supp
+
+
+# ---------------------------------------------------------------------------
+# graph walks shared by the dtype-flow rules
+# ---------------------------------------------------------------------------
+
+
+def _quantized_param_seeds(trace: Trace) -> List[Tuple[int, str]]:
+    """(flat index, instr name) of low-bit integer entry parameters —
+    quantized payloads (weights, int8 KV cache planes)."""
+    g = trace.graph
+    seeds = []
+    for idx, pname in enumerate(g.entry_params()):
+        if pname is not None and g.dtype_of(pname) in _QUANT_DTYPES:
+            seeds.append((idx, pname))
+    return seeds
+
+
+def _check_no_gather_concat(rule: Rule, trace: Trace) -> List[Violation]:
+    g = trace.graph
+    out = []
+    # stop once the value is consumed by a contraction / opaque call: the
+    # epilogue invariant is about what happens to the weight BEFORE it is
+    # contracted, not about ops downstream of the product
+    stop = {"dot", "convolution", "reduce", "custom-call", "scatter", "sort"}
+    for idx, seed in _quantized_param_seeds(trace):
+        path = trace.param_path(idx)
+        seen = {seed}
+        frontier = [seed]
+        hits: Dict[str, int] = {}
+        while frontier:
+            n = frontier.pop()
+            for s in g.edges.get(n, ()):
+                if s in seen:
+                    continue
+                seen.add(s)
+                ins = g.producers.get(s)
+                if ins is None:
+                    continue
+                if ins.opcode in ("gather", "concatenate"):
+                    hits[ins.opcode] = hits.get(ins.opcode, 0) + 1
+                if ins.opcode not in stop:
+                    frontier.append(s)
+        for op, k in sorted(hits.items()):
+            out.append(rule.violation(
+                trace, path,
+                f"{k} {op} op(s) reachable from quantized param {path!r} "
+                f"before any contraction (the M2Q epilogue must be fused "
+                f"away)"))
+    return out
+
+
+def _check_no_dequant_matmul(rule: Rule, trace: Trace) -> List[Violation]:
+    g = trace.graph
+    out = []
+    for idx, seed in _quantized_param_seeds(trace):
+        path = trace.param_path(idx)
+        # state = (value name, passed-through-a-dequantize?)
+        seen = {(seed, False)}
+        frontier: List[Tuple[str, bool]] = [(seed, False)]
+        hits: List[str] = []
+        while frontier:
+            n, dq = frontier.pop()
+            n_dt = g.dtype_of(n)
+            for s in g.edges.get(n, ()):
+                ins = g.producers.get(s)
+                if ins is None:
+                    continue
+                s_dq = dq
+                if ins.opcode == "convert":
+                    s_dt = g.dtype_of(s)
+                    if H.is_float_dtype(s_dt) and H.is_int_dtype(n_dt):
+                        # int -> float BEFORE any contraction is a
+                        # dequantize.  The legitimate int->float convert on
+                        # the integer path is the s32 accumulator rescale
+                        # AFTER the dot — and this walk never crosses a
+                        # contraction.  (Source dtype is deliberately any
+                        # int: XLA widens s8->f32 into s8->s32->f32.)
+                        s_dq = True
+                    elif H.is_int_dtype(s_dt):
+                        s_dq = False  # re-quantized: no longer a float weight
+                if ins.opcode in ("dot", "convolution"):
+                    if dq and H.is_float_dtype(n_dt):
+                        hits.append(f"{ins.opcode} %{ins.name}")
+                    continue  # never walk past a contraction
+                if ins.opcode in ("reduce", "custom-call", "scatter", "sort"):
+                    continue
+                if (s, s_dq) not in seen:
+                    seen.add((s, s_dq))
+                    frontier.append((s, s_dq))
+        for h in sorted(set(hits)):
+            out.append(rule.violation(
+                trace, path,
+                f"float {h} consumes a dequantized value of quantized "
+                f"param {path!r} (the low-bit payload is decoded to float "
+                f"and contracted at full precision)"))
+    return out
+
+
+def _check_no_f32_dot(rule: Rule, trace: Trace) -> List[Violation]:
+    by_dtype = H.analyze(trace.text)["dot_flops_by_dtype"]
+    out = []
+    total = sum(v for k, v in by_dtype.items() if k != "conv")
+    if trace.meta.get("expect_dots", True) and total == 0:
+        out.append(rule.violation(
+            trace, "", "vacuous: the trace contains no dot ops at all "
+            "(expected a quantized contraction hot path)"))
+    for dt in ("f32", "f64"):
+        if by_dtype.get(dt, 0.0) > 0.0:
+            out.append(rule.violation(
+                trace, "",
+                f"{by_dtype[dt]:.3g} {dt} dot FLOPs on a path declared "
+                f"fully quantized (expect_no_f32_dot)"))
+    return out
+
+
+def _check_conv_budget(rule: Rule, trace: Trace) -> List[Violation]:
+    budget = trace.meta["conv_budget"]
+    n = H.op_histogram(trace.text, weighted=True,
+                       include_fused=True).get("convolution", 0)
+    if n == budget:
+        return []
+    why = ("a quantized conv fell back to a dequantized f32 convolution"
+           if n > budget else "fewer convs than declared: update the budget")
+    return [rule.violation(
+        trace, "",
+        f"{n} convolution(s) in the module, budget is exactly {budget} "
+        f"({why})")]
+
+
+_HOST_OPS = {"outfeed", "infeed", "send", "recv", "send-done", "recv-done"}
+
+
+def _check_no_d2h_in_loop(rule: Rule, trace: Trace) -> List[Violation]:
+    g = trace.graph
+    out = []
+    for cname in sorted(g.loop_comps()):
+        for ins in g.comps.get(cname, []):
+            is_host_call = ins.opcode == "custom-call" and re.search(
+                r"custom_call_target=\"[^\"]*[Hh]ost", ins.args)
+            if ins.opcode in _HOST_OPS or is_host_call:
+                out.append(rule.violation(
+                    trace, _comp_bucket(cname),
+                    f"host transfer {ins.opcode} %{ins.name} inside while "
+                    f"body {cname!r}: decode must stay device-resident "
+                    f"(one d2h per completion)"))
+    return out
+
+
+def _comp_bucket(comp: str) -> str:
+    """Computation name with uniquing digits stripped — a stable key for
+    baselines across recompiles."""
+    return re.sub(r"[.\d]+", "", comp) or comp
+
+
+def _check_unguarded_act_quant(rule: Rule, trace: Trace) -> List[Violation]:
+    g = trace.graph
+    buckets: Dict[str, int] = {}
+    for name, ins in g.producers.items():
+        if ins.opcode != "convert" or g.dtype_of(name) not in ("s8", "u8"):
+            continue
+        srcs = ins.operand_names()
+        if not srcs or not H.is_float_dtype(g.dtype_of(srcs[0])):
+            continue
+        # bounded backward walk: is the quantized value dominated by a
+        # finiteness check anywhere in its ancestry?
+        guarded = False
+        seen = {name}
+        frontier = [name]
+        depth = 0
+        while frontier and not guarded and depth < 16:
+            depth += 1
+            nxt = []
+            for n in frontier:
+                for p in g.redges.get(n, ()):
+                    if p in seen:
+                        continue
+                    seen.add(p)
+                    pi = g.producers.get(p)
+                    if pi is not None and pi.opcode == "is-finite":
+                        guarded = True
+                        break
+                    nxt.append(p)
+            frontier = nxt
+        if not guarded:
+            b = _comp_bucket(g.comp_of.get(name, ""))
+            buckets[b] = buckets.get(b, 0) + 1
+    return [rule.violation(
+        trace, b,
+        f"{k} float->int8 convert(s) in computation(s) {b!r} with no "
+        f"dominating is-finite: a NaN activation quantizes to finite "
+        f"garbage the logits check cannot flag")
+        for b, k in sorted(buckets.items())]
+
+
+def _check_sharding_conformance(rule: Rule, trace: Trace) -> List[Violation]:
+    out = []
+    for rec in trace.meta.get("sharding", ()):
+        if rec["expected"] != rec["actual"]:
+            out.append(rule.violation(
+                trace, rec["path"],
+                f"input sharding for {rec['path']!r} is {rec['actual']} "
+                f"but dist.sharding specs say {rec['expected']}"))
+    return out
+
+
+def lint(trace: Trace, *rule_names: str,
+         suppressions: Optional[Dict[str, Sequence[str]]] = None,
+         ) -> List[Violation]:
+    """Violations from the named rules (all of ``DEFAULT_RULES`` when no
+    names are given) — the shared assertion surface the test suite uses
+    in place of ad-hoc ``op_histogram`` checks.  A rule name is looked up
+    strictly (KeyError on typos: a misspelled rule must not pass
+    vacuously).  Suppressed violations are dropped here — tests assert on
+    what a CI run would actually report."""
+    rules = ([RULES_BY_NAME[n] for n in rule_names] if rule_names else None)
+    return run_rules(trace, rules=rules, suppressions=suppressions)[0]
+
+
+DEFAULT_RULES: Tuple[Rule, ...] = (
+    Rule(name="no-f32-dot", severity="error",
+         doc="A hot path declared fully quantized runs zero f32/f64 dot "
+             "FLOPs (and is non-vacuous: it runs SOME dots).",
+         applies=lambda m: bool(m.get("expect_no_f32_dot")),
+         check=_check_no_f32_dot),
+    Rule(name="no-gather-concat", severity="error",
+         doc="No gather/concatenate is reachable from a quantized "
+             "parameter before its contraction (the deleted M2Q "
+             "permutation epilogue must not creep back).",
+         applies=lambda m: bool(m.get("quantized", True)),
+         check=_check_no_gather_concat,
+         # embedding tables are looked up BY gather — that is the op's
+         # definition, not an epilogue regression
+         suppress=(r"(^|/)embed",)),
+    Rule(name="conv-budget", severity="error",
+         doc="The module contains exactly the declared number of "
+             "convolutions (the unquantized stem); any extra conv is a "
+             "quantized conv that fell back to f32.",
+         applies=lambda m: m.get("conv_budget") is not None,
+         check=_check_conv_budget),
+    Rule(name="no-dequant-matmul", severity="error",
+         doc="No f32 dot/convolution consumes a value reached from a "
+             "quantized parameter through a dequantizing convert "
+             "(fusion interiors included).",
+         applies=lambda m: bool(m.get("quantized", True)),
+         check=_check_no_dequant_matmul),
+    Rule(name="no-d2h-in-loop", severity="error",
+         doc="No host transfer (outfeed/infeed/send/recv, host custom "
+             "calls) inside a while body.",
+         applies=lambda m: True,
+         check=_check_no_d2h_in_loop),
+    Rule(name="unguarded-act-quant", severity="warn",
+         doc="Every float->int8 convert should be dominated by an "
+             "is-finite check; unguarded converts launder NaN into "
+             "finite int8 garbage (see docs/serving.md).",
+         applies=lambda m: bool(m.get("quantized", True)),
+         check=_check_unguarded_act_quant),
+    Rule(name="sharding-conformance", severity="error",
+         doc="Compiled input shardings match the dist.sharding specs the "
+             "trace was built with.",
+         applies=lambda m: bool(m.get("sharding")),
+         check=_check_sharding_conformance),
+)
+
+RULES_BY_NAME: Dict[str, Rule] = {r.name: r for r in DEFAULT_RULES}

@@ -1,0 +1,249 @@
+"""Trace builders: registry config -> compiled hot-path :class:`Trace`s.
+
+Everything here is ABSTRACT (``jax.ShapeDtypeStruct`` leaves via
+``recipe.abstract_quantize`` + ``launch.specs``): no weights are
+materialized, so sweeping the whole registry is a compile-only operation —
+the same AOT path the multi-pod dry-run uses.
+
+Kernel dispatch is scoped ON around lowering (``ops.dispatch``): dispatch
+resolves at trace time, and the qlint invariants are claims about the
+KERNEL hot path (the interpret-mode Pallas bodies trace into real HLO on
+CPU, so integer dots/converts are visible in the lowered text).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from ..configs.registry import REDUCED
+from ..kernels import ops
+from ..models import get_model
+from ..recipe import abstract_quantize, _resolve_cfg
+from ..launch.specs import decode_inputs, prefill_inputs
+from .rules import Trace
+
+
+def _path_str(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+_HLO_DT = {"float32": "f32", "float64": "f64", "float16": "f16",
+           "bfloat16": "bf16", "int8": "s8", "int16": "s16", "int32": "s32",
+           "int64": "s64", "uint8": "u8", "uint16": "u16", "uint32": "u32",
+           "uint64": "u64", "bool": "pred", "int4": "s4", "uint4": "u4"}
+
+
+def param_paths(args) -> List[str]:
+    leaves = jax.tree_util.tree_flatten_with_path(args)[0]
+    return [_path_str(kp) for kp, _ in leaves]
+
+
+def param_leaves(args) -> List[Tuple[str, str, List[int]]]:
+    """(path, hlo dtype, shape) per flattened argument leaf — what
+    Trace.param_path aligns against the surviving entry parameters."""
+    leaves = jax.tree_util.tree_flatten_with_path(args)[0]
+    return [(_path_str(kp), _HLO_DT.get(str(leaf.dtype), str(leaf.dtype)),
+             list(leaf.shape))
+            for kp, leaf in leaves]
+
+
+def trace_fn(fn, args, *, name: str, meta: Optional[dict] = None,
+             in_shardings=None, dispatch: Optional[bool] = True) -> Trace:
+    """Lower + compile ``fn(*args)`` (abstract args welcome) and wrap the
+    optimized HLO in a :class:`Trace`.  ``dispatch``: True/False scopes
+    all three kernel-dispatch axes on/off around lowering; None inherits
+    the ambient scope (inner ``ops.dispatch`` scopes inside ``fn`` always
+    win either way)."""
+    jit_kw = {}
+    if in_shardings is not None:
+        jit_kw["in_shardings"] = in_shardings
+    jf = jax.jit(fn, **jit_kw)
+    scope = (contextlib.nullcontext() if dispatch is None
+             else ops.dispatch(dense=dispatch, conv=dispatch, attn=dispatch))
+    with scope:
+        compiled = jf.lower(*args).compile()
+    m = dict(meta or {})
+    m.setdefault("param_paths", param_paths(args))
+    m.setdefault("param_leaves", param_leaves(args))
+    return Trace(name=name, text=compiled.as_text(), meta=m,
+                 compiled=compiled)
+
+
+def _resolve_reduced(arch: str):
+    if arch in REDUCED:
+        return REDUCED[arch]
+    return _resolve_cfg(arch)  # full-size / already-reduced names
+
+
+def _int8_kv_cfg(cfg):
+    """The int8-KV flavor of ``cfg`` when its cache honors it, else None."""
+    if cfg.family == "efficientvit":
+        return None
+    try:
+        cfg8 = cfg.replace(kv_cache_dtype="int8")
+        model = get_model(cfg8)
+        cache = jax.eval_shape(lambda: model.init_cache(cfg8, 2, 16))
+        if any(getattr(l, "dtype", None) == jax.numpy.int8
+               for l in jax.tree.leaves(cache)):
+            return cfg8
+    except (TypeError, ValueError):
+        pass
+    return None
+
+
+def registry_traces(arch: str, *, batch: int = 2, prefill_len: int = 32,
+                    decode_len: int = 64,
+                    recipes: Sequence[str] = ("m2q-w8a8", "uniform8"),
+                    ) -> List[Trace]:
+    """The qlint trace set for one registry config (reduced shapes).
+
+    Vision configs trace ``forward``; token configs trace prefill and
+    decode (with the int8-KV cache when the family supports it — the
+    fully-quantized serving posture is exactly where the laundering rules
+    matter).  Each recipe gets its own trace set; ``uniform8`` traces
+    additionally promise ``expect_no_f32_dot`` (the M2Q APoT half keeps a
+    by-design f32 SAT-engine dot, so only the uniform recipe can make
+    that promise).
+    """
+    cfg = _resolve_reduced(arch)
+    model = get_model(cfg)
+    traces: List[Trace] = []
+    for recipe in recipes:
+        rtag = {"m2q-w8a8": "m2q", "uniform8": "u8"}.get(recipe, recipe)
+        no_f32 = recipe == "uniform8"
+        if cfg.family == "efficientvit":
+            qp = abstract_quantize(cfg, recipe=recipe,
+                                   tokens_per_step=batch)
+            imgs = jax.ShapeDtypeStruct(
+                (batch, cfg.img_res, cfg.img_res, 3), jax.numpy.float32)
+
+            def fwd(p, x, _cfg=cfg, _model=model):
+                return _model.forward(_cfg, p, x)
+
+            # conv budget: only the unquantized stem convolves under m2q
+            # (PWConvs lower to quantized matmuls, DWConvs to the packed-w4
+            # kernel); uniform8 has no int8 DWConv kernel, so its DWConvs
+            # legitimately fall back to dequantized XLA convs — no budget
+            traces.append(trace_fn(
+                fwd, (qp, imgs), name=f"{arch}/{rtag}/forward",
+                meta={"quantized": True, "expect_no_f32_dot": no_f32,
+                      "conv_budget": 1 if recipe == "m2q-w8a8" else None}))
+            continue
+        cfg8 = _int8_kv_cfg(cfg)
+        cfg_t = cfg8 or cfg
+        model_t = get_model(cfg_t)
+        tps_prefill = batch * prefill_len
+        qp = abstract_quantize(cfg_t, recipe=recipe,
+                               tokens_per_step=tps_prefill)
+        inp, cache = prefill_inputs(cfg_t, batch, prefill_len)
+
+        def prefill(p, c, i, _cfg=cfg_t, _model=model_t):
+            return _model.prefill(_cfg, p, c, **i)
+
+        # LM prefill attention runs f32 score/value dots by design (the
+        # int8 attention kernels cover MSA + int8-KV decode), so only the
+        # decode trace can promise zero f32 dots — and only with the
+        # int8-KV cache + uniform weights
+        traces.append(trace_fn(
+            prefill, (qp, cache, inp), name=f"{arch}/{rtag}/prefill",
+            meta={"quantized": True}))
+
+        qp_d = abstract_quantize(cfg_t, recipe=recipe, tokens_per_step=batch)
+        dcache, dtok = decode_inputs(cfg_t, batch, decode_len)
+
+        def decode(p, c, t, _cfg=cfg_t, _model=model_t):
+            return _model.decode_step(_cfg, p, c, t)
+
+        traces.append(trace_fn(
+            decode, (qp_d, dcache, dtok), name=f"{arch}/{rtag}/decode",
+            meta={"quantized": True,
+                  "expect_no_f32_dot": no_f32 and cfg8 is not None}))
+    return traces
+
+
+def _norm_spec(spec, ndim: int) -> str:
+    """PartitionSpec -> canonical string (trailing Nones stripped)."""
+    parts = list(getattr(spec, "_partitions", None) or tuple(spec or ()))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return repr(tuple(parts))
+
+
+def sharded_decode_trace(arch: str, *, batch: int = 4, decode_len: int = 32,
+                         n_data: int = 2, n_model: int = 2,
+                         recipe: str = "m2q-w8a8") -> Trace:
+    """One mesh-sharded decode trace with sharding-conformance metadata:
+    expected specs from ``dist.sharding``, actual from the compiled
+    executable's input shardings.  Requires >= n_data*n_model devices
+    (the qlint CLI forces virtual host devices before importing jax)."""
+    from ..dist import sharding as shd
+    from ..launch.mesh import make_debug_mesh
+
+    cfg = _resolve_reduced(arch)
+    cfg = _int8_kv_cfg(cfg) or cfg
+    model = get_model(cfg)
+    mesh = make_debug_mesh(n_data, n_model)
+    qp = abstract_quantize(cfg, tokens_per_step=batch, recipe=recipe)
+    cache, tokens = decode_inputs(cfg, batch, decode_len)
+    in_specs = (shd.param_specs(qp, mesh, fsdp=False),
+                shd.cache_specs(cache, mesh, shard_model=True),
+                shd.batch_specs(tokens, mesh))
+    in_shardings = shd.shardings_from_specs(in_specs, mesh)
+
+    def decode(p, c, t, _cfg=cfg, _model=model):
+        return _model.decode_step(_cfg, p, c, t)
+
+    tr = trace_fn(decode, (qp, cache, tokens),
+                  name=f"{arch}/m2q/decode-sharded",
+                  meta={"quantized": True}, in_shardings=in_shardings)
+    # expected spec per pytree path (full flattening) ...
+    is_spec = lambda x: x is None or isinstance(x, jax.sharding.PartitionSpec)
+    exp_by_path = {
+        _path_str(kp): spec
+        for (kp, spec) in jax.tree_util.tree_flatten_with_path(
+            in_specs, is_leaf=is_spec)[0]}
+    # ... vs the executable's input shardings, which (like the HLO entry
+    # parameters) cover only the SURVIVING argument leaves — align both
+    # through the per-parameter path attribution
+    act_leaves = jax.tree.leaves(
+        tr.compiled.input_shardings[0],
+        is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    aligned = tr._aligned_paths()
+    records: List[Dict[str, str]] = []
+    if aligned is not None and len(aligned) == len(act_leaves):
+        for path, a in zip(aligned, act_leaves):
+            a_spec = getattr(a, "spec", None)
+            records.append({
+                "path": path,
+                "expected": _norm_spec(exp_by_path.get(path), 0),
+                "actual": _norm_spec(a_spec, 0) if a_spec is not None
+                else repr(a),
+            })
+    else:  # surface the drift instead of silently skipping the rule
+        records.append({"path": "<tree>",
+                        "expected": f"{len(exp_by_path)} spec leaves",
+                        "actual": f"{len(act_leaves)} sharding leaves"})
+    tr.meta["sharding"] = records
+    return tr
+
+
+DEFAULT_SWEEP: Tuple[str, ...] = (
+    "efficientvit-b1-r224",
+    "qwen1.5-0.5b",
+    "granite-3-8b",
+    "rwkv6-3b",
+    "whisper-large-v3",
+    "llama4-scout-17b-a16e",
+)

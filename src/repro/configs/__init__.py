@@ -1,1 +1,3 @@
 from .registry import ARCHS, REDUCED, get_config, get_reduced, list_archs
+
+__all__ = ["ARCHS", "REDUCED", "get_config", "get_reduced", "list_archs"]

@@ -42,3 +42,19 @@ from .policy import (
 from .qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform, is_qtensor, qmatmul, weight_bits
 from .calibrate import CalibTensor, run_calibration, wrap_for_calibration
 from .apply import LayerReport, fake_quant_model, quantize_model
+
+__all__ = [
+    "act_scale_from_stats", "apot_codebook", "apot_dequantize",
+    "apot_quantize", "fake_quant_act", "fake_quant_apot", "fake_quant_pot",
+    "fake_quant_uniform", "filterwise_mse", "pot_dequantize", "pot_quantize",
+    "quantize_act", "uniform_dequantize", "uniform_quantize",
+    "SchemeAssignment", "select_schemes",
+    "KIND_DENSE", "KIND_DWCONV", "KIND_EMBEDDING", "KIND_EXPERT",
+    "KIND_HEAD", "KIND_SKIP", "DECISION_LOWBIT", "DECISION_MIXED",
+    "DECISION_SKIP", "M2QPolicy", "PathOverride", "ShapeCtx", "decide",
+    "dense_intensity",
+    "QAPoT", "QExpertM2Q", "QM2Q", "QUniform", "is_qtensor", "qmatmul",
+    "weight_bits",
+    "CalibTensor", "run_calibration", "wrap_for_calibration",
+    "LayerReport", "fake_quant_model", "quantize_model",
+]

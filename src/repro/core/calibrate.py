@@ -12,7 +12,7 @@ applied tensor-wise as in FQ-ViT).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterable, List, Tuple
+from typing import Callable, Dict, Iterable, Tuple
 
 import jax
 import jax.numpy as jnp

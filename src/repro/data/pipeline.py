@@ -10,7 +10,7 @@ examples and the fault-tolerance tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -20,3 +20,9 @@ from .ops import (
     qtensor_matmul,
     relu_attn_op,
 )
+
+__all__ = [
+    "DispatchConfig", "apot_matmul_op", "decode_attn_int8_op", "dispatch",
+    "dwconv_w4_op", "int4_matmul_op", "int8_matmul_op", "m2q_matmul_op",
+    "qtensor_dwconv", "qtensor_matmul", "relu_attn_op",
+]

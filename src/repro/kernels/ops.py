@@ -55,7 +55,7 @@ import jax.numpy as jnp
 
 from ..core.qtensor import QAPoT, QExpertM2Q, QM2Q, QUniform
 from ..core.quant import act_scale_from_stats
-from . import autotune, ref
+from . import autotune
 from .apot_matmul import apot_matmul
 from .decode_attn_int8 import decode_attn_int8
 from .dwconv_w4 import dwconv_w4

@@ -23,7 +23,6 @@ from pathlib import Path
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.registry import ARCHS, ASSIGNED
 from ..dist import sharding as shd

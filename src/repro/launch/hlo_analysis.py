@@ -42,11 +42,14 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 _TYPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(
-    r"^\s+(?:ROOT\s+)?%?([\w.-]+)\s*=\s*"
+    r"^\s+(ROOT\s+)?%?([\w.-]+)\s*=\s*"
     r"(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+"
     r"([a-z][a-z0-9-]*)\((.*)$")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*(?:\(.*\))?\s*->.*{")
+_ENTRY_RE = re.compile(r"^ENTRY\s+%?([\w.-]+)", re.M)
 _NAME_REF_RE = re.compile(r"%([\w.-]+)")
+_CALLEE_ATTR_RE = re.compile(r"(?:calls|to_apply)=%?([\w.-]+)")
+_WHILE_COMP_RE = re.compile(r"(?:body|condition)=%?([\w.-]+)")
 
 
 def _shape_elems(dims: str) -> int:
@@ -78,6 +81,7 @@ class Instr:
     opcode: str
     result_tok: str
     args: str  # everything after the opening paren (operands + attrs)
+    is_root: bool = False
 
     def split_args(self) -> Tuple[str, str]:
         depth = 1
@@ -113,8 +117,9 @@ def parse_computations(text: str) -> Dict[str, List[Instr]]:
             continue
         m = _INSTR_RE.match(line)
         if m:
-            comps[cur].append(Instr(name=m.group(1), result_tok=m.group(2),
-                                    opcode=m.group(3), args=m.group(4)))
+            comps[cur].append(Instr(name=m.group(2), result_tok=m.group(3),
+                                    opcode=m.group(4), args=m.group(5),
+                                    is_root=bool(m.group(1))))
     return comps
 
 
@@ -447,3 +452,223 @@ def analyze(text: str) -> dict:
         "collective_total_bytes": float(sum(coll_bytes.values())),
         "n_computations": len(comps),
     }
+
+
+# ---------------------------------------------------------------------------
+# def-use graph (fusion-boundary-crossing) for the qlint rule engine
+# ---------------------------------------------------------------------------
+
+def is_float_dtype(dt: str) -> bool:
+    return dt.startswith(("f", "bf")) and dt != "false"
+
+
+def is_int_dtype(dt: str) -> bool:
+    return dt.startswith(("s", "u")) and dt != "u"  # s4/s8/.../u4/u8/...
+
+
+class Graph:
+    """Module-wide def-use graph over optimized HLO text.
+
+    ``op_histogram``/``analyze`` treat fusion interiors as opaque; the
+    qlint dtype-flow rules (no-dequant-matmul, no-gather-concat,
+    unguarded-act-quant) need to ATTRIBUTE interior instructions back to
+    the values that feed them, so this graph stitches call boundaries:
+
+    * caller operand i  ->  callee ``parameter(i)``  (fusions, calls,
+      applied computations, while init);
+    * callee ROOT       ->  the call instruction's result (so users of a
+      fusion see through to the producing interior instruction);
+    * while body ROOT   ->  body/condition parameters (loop carry).
+
+    Instruction names are unique module-wide in optimized HLO, so edges
+    are keyed by bare names.  ``edges`` maps a value name to the
+    instructions consuming it (crossing boundaries); ``redges`` is the
+    inverse.  The binding is positional and conservative: an over-
+    approximate reachability, which is the right polarity for "no X is
+    reachable from a quantized parameter" rules.
+    """
+
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        m = _ENTRY_RE.search(text)
+        self.entry: Optional[str] = m.group(1) if m else (
+            next(iter(self.comps)) if self.comps else None)
+        self.shapes: Dict[str, str] = {}
+        self.producers: Dict[str, Instr] = {}
+        self.comp_of: Dict[str, str] = {}
+        self.params: Dict[str, List[Optional[str]]] = {}
+        self.roots: Dict[str, Optional[str]] = {}
+        for cname, instrs in self.comps.items():
+            plist: List[Optional[str]] = []
+            root = None
+            for ins in instrs:
+                self.shapes[ins.name] = ins.result_tok
+                self.producers[ins.name] = ins
+                self.comp_of[ins.name] = cname
+                if ins.is_root:
+                    root = ins.name
+                if ins.opcode == "parameter":
+                    mp = re.match(r"\s*(\d+)", ins.args)
+                    idx = int(mp.group(1)) if mp else len(plist)
+                    while len(plist) <= idx:
+                        plist.append(None)
+                    plist[idx] = ins.name
+            if root is None and instrs:
+                root = instrs[-1].name  # ROOT is conventionally last
+            self.params[cname] = plist
+            self.roots[cname] = root
+        # callsites first: tuple_element() resolves parameters through them
+        self.callsites: Dict[str, List[str]] = {}  # comp -> caller instrs
+        for cname, instrs in self.comps.items():
+            for ins in instrs:
+                for k in self._callees(ins):
+                    if k in self.comps:
+                        self.callsites.setdefault(k, []).append(ins.name)
+        self.edges: Dict[str, List[str]] = {}
+        self.redges: Dict[str, List[str]] = {}
+        for cname, instrs in self.comps.items():
+            for ins in instrs:
+                operands = ins.operand_names()
+                if ins.opcode == "get-tuple-element":
+                    # element-precise edge: a gte consumes ONE tuple slot,
+                    # not the whole loop-carried state — without this every
+                    # value in a while body is "reachable" from every other
+                    mi = re.search(r"index=(\d+)", ins.args)
+                    srcs = (self.tuple_element(operands[0], int(mi.group(1)))
+                            if mi and operands else [])
+                    for s in srcs or operands:
+                        self._edge(s, ins.name)
+                    continue
+                for o in operands:
+                    self._edge(o, ins.name)
+                for k in self._callees(ins):
+                    if k not in self.comps:
+                        continue
+                    for i, p in enumerate(self.params.get(k, [])):
+                        if p is not None and i < len(operands):
+                            self._edge(operands[i], p)
+                    root = self.roots.get(k)
+                    if root:
+                        self._edge(root, ins.name)
+
+    @staticmethod
+    def _callees(ins: Instr) -> List[str]:
+        if ins.opcode == "while":
+            return _WHILE_COMP_RE.findall(ins.args)
+        out = _CALLEE_ATTR_RE.findall(ins.args)
+        mb = re.search(r"branch_computations=\{([^}]*)\}", ins.args)
+        if mb:
+            out += [b.strip().lstrip("%")
+                    for b in mb.group(1).split(",") if b.strip()]
+        return out
+
+    def tuple_element(self, name: str, k: int, _depth: int = 0,
+                      _seen=None) -> List[str]:
+        """Producing value name(s) of element ``k`` of tuple value
+        ``name``, looking through tuple/gte/while/fusion plumbing.  A
+        loop-carried tuple resolves to BOTH the init element and the
+        body-root element (the value of any iteration).  Empty when
+        unresolvable."""
+        if _depth > 24:
+            return []
+        if _seen is None:
+            _seen = set()
+        if (name, k) in _seen:
+            return []
+        _seen.add((name, k))
+        ins = self.producers.get(name)
+        if ins is None:
+            return []
+        operands = ins.operand_names()
+        if ins.opcode == "tuple":
+            return [operands[k]] if k < len(operands) else []
+        if ins.opcode == "while":
+            out = []
+            if operands:
+                out += self.tuple_element(operands[0], k, _depth + 1, _seen)
+            mb = re.search(r"body=%?([\w.-]+)", ins.args)
+            root = self.roots.get(mb.group(1)) if mb else None
+            if root:
+                out += self.tuple_element(root, k, _depth + 1, _seen)
+            return out
+        if ins.opcode == "parameter":
+            comp = self.comp_of.get(name, "")
+            try:
+                idx = self.params.get(comp, []).index(name)
+            except ValueError:
+                return []
+            out = []
+            for cs in self.callsites.get(comp, []):
+                ci = self.producers[cs]
+                cops = ci.operand_names()
+                if ci.opcode == "while":
+                    if cops:
+                        out += self.tuple_element(cops[0], k, _depth + 1,
+                                                  _seen)
+                    mb = re.search(r"body=%?([\w.-]+)", ci.args)
+                    root = self.roots.get(mb.group(1)) if mb else None
+                    if root:
+                        out += self.tuple_element(root, k, _depth + 1, _seen)
+                elif idx < len(cops):
+                    out += self.tuple_element(cops[idx], k, _depth + 1, _seen)
+            return out
+        if ins.opcode in ("fusion", "call", "conditional", "custom-call"):
+            out = []
+            for kk in self._callees(ins):
+                root = self.roots.get(kk)
+                if root:
+                    out += self.tuple_element(root, k, _depth + 1, _seen)
+            return out or [name]
+        if ins.opcode == "get-tuple-element":
+            mi = re.search(r"index=(\d+)", ins.args)
+            if operands and mi:
+                out = []
+                for nm in self.tuple_element(operands[0], int(mi.group(1)),
+                                             _depth + 1, _seen):
+                    out += self.tuple_element(nm, k, _depth + 1, _seen)
+                return out
+            return [name]
+        if ins.opcode in ("copy", "bitcast", "optimization-barrier",
+                          "opt-barrier", "copy-start", "copy-done"):
+            if operands:
+                return self.tuple_element(operands[0], k, _depth + 1, _seen)
+        return [name]  # opaque producer: the whole value stands in
+
+    def _edge(self, src: str, dst: str) -> None:
+        if src == dst:
+            return
+        lst = self.edges.setdefault(src, [])
+        if not lst or lst[-1] != dst:
+            lst.append(dst)
+        self.redges.setdefault(dst, []).append(src)
+
+    def dtype_of(self, name: str) -> str:
+        return _tok_first_shape(self.shapes.get(name, ""))[0]
+
+    def entry_params(self) -> List[Optional[str]]:
+        """Entry-computation parameter names ordered by parameter index
+        (index i lines up with the i-th flattened jit argument leaf)."""
+        return self.params.get(self.entry or "", [])
+
+    def loop_comps(self) -> set:
+        """Computations executing inside any ``while`` (bodies, conds, and
+        everything they transitively call — fusion interiors included)."""
+        stack: List[str] = []
+        for instrs in self.comps.values():
+            for ins in instrs:
+                if ins.opcode == "while":
+                    stack.extend(_WHILE_COMP_RE.findall(ins.args))
+        out: set = set()
+        while stack:
+            c = stack.pop()
+            if c in out or c not in self.comps:
+                continue
+            out.add(c)
+            for ins in self.comps[c]:
+                stack.extend(_CALLEE_ATTR_RE.findall(ins.args))
+                stack.extend(_WHILE_COMP_RE.findall(ins.args))
+                mb = re.search(r"branch_computations=\{([^}]*)\}", ins.args)
+                if mb:
+                    stack.extend(b.strip().lstrip("%")
+                                 for b in mb.group(1).split(",") if b.strip())
+        return out

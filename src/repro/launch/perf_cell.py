@@ -15,7 +15,6 @@ Knobs: any ArchConfig field via --set k=v (ints/bools/floats inferred),
 Records land in results/perf.jsonl with the tag.
 """
 import argparse
-import json
 
 from .dryrun import run_cell
 

@@ -1,0 +1,135 @@
+import os
+import sys
+
+if "jax" not in sys.modules:  # more virtual devices for the sharded trace
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""qlint: sweep the config registry and verify quantization / transfer /
+sharding invariants against the compiled (post-SPMD) HLO.
+
+For every config in the sweep this abstract-quantizes (no weights
+materialized), lowers + compiles the forward/prefill/decode hot paths with
+kernel dispatch ON, and runs the ``repro.analysis`` rule engine over the
+optimized HLO text.  Violations are diffed against the committed baseline
+ledger — by-design deviations (the M2Q APoT f32 SAT dot, the packed-w4
+DWConv dequant, today's unguarded activation quantizes) live THERE, once,
+reviewed; the exit code is nonzero only for violations the baseline does
+not know about.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.qlint \
+      --baseline results/qlint_baseline.json
+  PYTHONPATH=src python -m repro.launch.qlint --update-baseline
+  PYTHONPATH=src python -m repro.launch.qlint --configs qwen1.5-0.5b
+  PYTHONPATH=src python -m repro.launch.qlint --list-rules
+
+Exit codes: 0 clean / baseline-known only; 1 new violations; 2 usage or
+missing baseline.
+"""
+import argparse
+import time
+from pathlib import Path
+
+from ..analysis import (DEFAULT_RULES, baseline as bl, run_rules)
+
+DEFAULT_BASELINE = "results/qlint_baseline.json"
+
+
+def build_traces(configs, sharded=True, sharded_arch="qwen1.5-0.5b",
+                 progress=print):
+    from ..analysis.traces import registry_traces, sharded_decode_trace
+    traces = []
+    for arch in configs:
+        t0 = time.time()
+        got = registry_traces(arch)
+        traces += got
+        progress(f"  {arch}: {len(got)} traces ({time.time() - t0:.1f}s)")
+    if sharded:
+        t0 = time.time()
+        traces.append(sharded_decode_trace(sharded_arch, n_data=2,
+                                           n_model=4))
+        progress(f"  {sharded_arch} (sharded): 1 trace "
+                 f"({time.time() - t0:.1f}s)")
+    return traces
+
+
+def main(argv=None) -> int:
+    from ..analysis.traces import DEFAULT_SWEEP
+    ap = argparse.ArgumentParser(
+        prog="qlint", description="static HLO invariant linter")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"known-violation ledger (default "
+                         f"{DEFAULT_BASELINE})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the ledger from this run's violations")
+    ap.add_argument("--configs", default=",".join(DEFAULT_SWEEP),
+                    help="comma-joined registry config names (reduced "
+                         "shapes are used)")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the mesh-sharded conformance trace")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in DEFAULT_RULES:
+            print(f"{r.name:<22} [{r.severity}] {r.doc}")
+            if r.suppress:
+                print(f"{'':<22} default suppressions: "
+                      f"{', '.join(r.suppress)}")
+        return 0
+
+    configs = [c.strip() for c in args.configs.split(",") if c.strip()]
+    if not configs:
+        ap.error("--configs is empty")
+    print(f"qlint: tracing {len(configs)} registry config(s)...")
+    traces = build_traces(configs, sharded=not args.no_sharded)
+
+    violations, suppressed = [], []
+    for tr in traces:
+        vs, supp = run_rules(tr)
+        violations += vs
+        suppressed += supp
+        n_err = sum(v.severity == "error" for v in vs)
+        n_warn = len(vs) - n_err
+        print(f"  {tr.name:<44} {n_err} error(s), {n_warn} warn(s), "
+              f"{len(supp)} suppressed")
+    ledger = bl.to_ledger(violations)
+
+    if args.update_baseline:
+        bl.save(args.baseline, ledger)
+        print(f"qlint: wrote {sum(len(p) for t in ledger.values() for p in t.values())} "
+              f"ledger entries to {args.baseline}")
+        return 0
+
+    if not Path(args.baseline).exists():
+        print(f"qlint: baseline {args.baseline} not found — run with "
+              f"--update-baseline to create it", file=sys.stderr)
+        return 2
+    base = bl.load(args.baseline)
+    regressions = bl.diff(ledger, base)
+    gone = bl.improvements(ledger, base)
+    if gone:
+        print(f"qlint: {len(gone)} baseline entr(ies) no longer observed "
+              f"(ratchet with --update-baseline):")
+        for line in gone:
+            print(f"  {line}")
+    if regressions:
+        print(f"qlint: {len(regressions)} NEW violation(s) vs "
+              f"{args.baseline}:")
+        for line in regressions:
+            print(f"  {line}")
+        for v in violations:
+            key = f"{v.trace} :: {v.rule}"
+            if any(key in line for line in regressions):
+                print(f"    detail: [{v.severity}] {key} :: "
+                      f"{v.path or '<module>'}: {v.message}")
+        return 1
+    print(f"qlint: clean — {len(traces)} trace(s), "
+          f"{len(DEFAULT_RULES)} rules, {len(violations)} baseline-known "
+          f"violation(s), {len(suppressed)} suppressed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

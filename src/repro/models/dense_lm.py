@@ -12,9 +12,6 @@ is what PTQ calibration uses (CalibTensor observers are not traceable).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

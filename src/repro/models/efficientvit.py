@@ -13,9 +13,6 @@ we use SiLU (same family).  NHWC layout throughout.
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

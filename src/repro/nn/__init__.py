@@ -33,3 +33,16 @@ from .ssm import (
     rwkv6_timemix_inputs,
     temporal_conv1d,
 )
+
+__all__ = [
+    "conv2d", "dense", "dwconv2d", "embed", "gelu", "geglu", "layer_norm",
+    "lecun_normal", "rms_norm", "silu", "swiglu", "tied_head",
+    "trunc_normal",
+    "apply_rope", "decode_attention", "decode_attention_int8",
+    "flash_attention", "qk_rms_norm", "quantize_kv_rows",
+    "relu_linear_attention",
+    "MoEConfig", "aux_load_balance_loss", "capacity", "expert_ffn",
+    "moe_ffn",
+    "rg_lru", "rg_lru_step", "rwkv6_attend", "rwkv6_attend_step",
+    "rwkv6_channelmix", "rwkv6_timemix_inputs", "temporal_conv1d",
+]

@@ -10,7 +10,6 @@ so model code is identical in float, calibration, and quantized modes.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

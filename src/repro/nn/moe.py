@@ -13,13 +13,12 @@ Expert weights may be float arrays, CalibTensors, or QTensors
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core.calibrate import CalibTensor
-from ..core.qtensor import QExpertM2Q, QUniform, is_qtensor
+from ..core.qtensor import QExpertM2Q, is_qtensor
 from .layers import dense, silu
 
 

@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -107,7 +108,8 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  overload: Optional[OverloadPolicy] = None,
                  faults: Optional[_faults.FaultInjector] = None,
-                 check_numerics: bool = True):
+                 check_numerics: bool = True,
+                 debug_numerics: Optional[bool] = None):
         # scoped kernels.ops.DispatchConfig pinning kernel dispatch for the
         # engine's prefill/decode traces (None inherits env/backend
         # default); the attn axis steers the int8-KV decode-attention
@@ -134,6 +136,18 @@ class Engine:
         # REPRO_FAULT_SPEC) provokes failures at the prefill/decode sites
         self.faults = faults if faults is not None else _faults.from_env()
         self.check_numerics = check_numerics
+        # opt-in PRE-quantization numerics check (constructor arg, or the
+        # REPRO_DEBUG_NUMERICS env var when the arg is None): every decode
+        # step also scans the inexact cache leaves — on a quantized engine
+        # the logits-only check can miss a cache NaN laundered through
+        # activation quantization (NaN.astype(int8) is finite), but the
+        # dynamic per-row KV scales (max|x|/127) stay f32 and DO carry the
+        # NaN.  Costs a full cache read per step; debug posture only.
+        if debug_numerics is None:
+            debug_numerics = os.environ.get(
+                "REPRO_DEBUG_NUMERICS", "").strip().lower() in (
+                    "1", "true", "on", "yes")
+        self.debug_numerics = bool(debug_numerics)
         self.scheduler = Scheduler(
             policy=FlushPolicy(max_batch=max_batch,
                                max_delay_ms=max_delay_ms),
@@ -275,6 +289,20 @@ class Engine:
         lg = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
         return ~jnp.all(jnp.isfinite(lg), axis=-1)
 
+    def _cache_nonfinite(self, cache):
+        """(B,) bool: any NaN/Inf in a slot's inexact cache rows (in-graph;
+        batch axis 1 per the ``_write_slots`` convention).  Int payloads
+        are skipped — after quantization they are finite by construction;
+        it is the f32 leaves (float caches, per-row KV scales, recurrent
+        states) that still carry a pre-quantization NaN."""
+        bad = jnp.zeros((self.B,), bool)
+        for leaf in jax.tree.leaves(cache):
+            if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                continue
+            axes = tuple(a for a in range(leaf.ndim) if a != 1)
+            bad = bad | ~jnp.all(jnp.isfinite(leaf), axis=axes)
+        return bad
+
     def _decode_step_impl(self, params, cache, pending, outbuf, counts,
                           temps, live, nonfinite, key, fallback=False):
         with self._fallback_scope(fallback):
@@ -285,6 +313,11 @@ class Engine:
             # the bit stays set until the slot retires (read only at
             # completion — the d2h-per-completion invariant holds)
             nonfinite = nonfinite | (self._row_nonfinite(logits[:, 0]) & live)
+            if self.debug_numerics:
+                # opt-in pre-quantization check: a cache NaN that activation
+                # quantization would launder into finite logits still trips
+                # the sticky flag here (see REPRO_DEBUG_NUMERICS)
+                nonfinite = nonfinite | (self._cache_nonfinite(cache) & live)
             tok = self._sample_tokens(logits[:, 0], k_s, temps)
             tok = jnp.where(live, tok, pending)
             b = jnp.arange(self.B)

@@ -53,14 +53,16 @@ What each KIND means at engine level:
   At a ``*.kernel`` site the FallbackGuard sees the poison and retries
   the step on the XLA path.
 
-  Detection boundary: the numerics check watches the LOGITS.  On a
-  fully-quantized decode path, activation quantization can launder a
-  cache NaN into finite garbage before it reaches the logits
+  Detection boundary: the default numerics check watches the LOGITS.
+  On a fully-quantized decode path, activation quantization can launder
+  a cache NaN into finite garbage before it reaches the logits
   (``NaN.astype(int8)`` is a finite value), so ``nan@decode`` against a
-  quantized engine may deliver corrupt-but-finite tokens undetected.
-  Use ``raise@decode`` for guaranteed-failure demos on quantized
-  engines; ``nan`` detection is proven on the float decode path (the
-  suite and ``benchmarks/serving_bench.py`` fault rows).
+  quantized engine delivers corrupt-but-finite tokens undetected BY
+  DEFAULT.  Opting in to the pre-quantization check
+  (``debug_numerics=True`` or ``REPRO_DEBUG_NUMERICS=1``) closes the
+  gap: every decode step also scans the inexact cache leaves — the
+  per-row f32 KV scales carry the NaN even when the int8 payload does
+  not — at the cost of a full cache read per step.
 """
 from __future__ import annotations
 

@@ -14,7 +14,6 @@ import dataclasses
 import json
 import signal
 import time
-from pathlib import Path
 from typing import Optional
 
 import jax

@@ -9,8 +9,7 @@ error-feedback gradient compression for the cross-pod reduce, AdamW update.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,8 @@ import pytest
 from repro import nn
 from repro.core.quant import act_scale_from_stats
 from repro.kernels import ops, ref
-from repro.launch.hlo_analysis import analyze
+from repro.analysis import lint
+from repro.analysis.traces import trace_fn
 
 
 def _rng(seed=0):
@@ -234,12 +235,16 @@ def test_hlo_msa_contractions_have_no_f32_dot():
         with ops.dispatch(attn=False):
             return nn.relu_linear_attention(q, k, v)
 
-    txt = jax.jit(fused).lower(q, k, v).compile().as_text()
-    by_dtype = analyze(txt)["dot_flops_by_dtype"]
-    assert by_dtype.get("f32", 0.0) == 0.0, by_dtype
-    assert sum(by_dtype.values()) > 0  # the integer dots ARE there
-    txt0 = jax.jit(f32).lower(q, k, v).compile().as_text()
-    assert analyze(txt0)["dot_flops_by_dtype"].get("f32", 0.0) > 0
+    meta = {"expect_no_f32_dot": True, "quantized": False}
+    tr = trace_fn(fused, (q, k, v), name="msa/relu-linattn/fused",
+                  dispatch=False, meta=dict(meta))
+    assert lint(tr, "no-f32-dot") == []  # incl. the non-vacuity sub-check
+    # seeded violation: the f32 path it replaces must FIRE the rule
+    tr0 = trace_fn(f32, (q, k, v), name="msa/relu-linattn/f32",
+                   dispatch=False, meta=dict(meta))
+    vs = lint(tr0, "no-f32-dot")
+    assert [v.rule for v in vs] == ["no-f32-dot"] and "f32 dot" in \
+        vs[0].message
 
     # decode attention: integer dots only as well
     rng = _rng(10)
@@ -255,9 +260,10 @@ def test_hlo_msa_contractions_have_no_f32_dot():
         with ops.dispatch(attn=True):
             return nn.decode_attention_int8(qd, k8, v8, ks, vs, lengths)
 
-    txt = jax.jit(dec).lower(qd, k8, v8, ks, vs, lengths).compile().as_text()
-    by_dtype = analyze(txt)["dot_flops_by_dtype"]
-    assert by_dtype.get("f32", 0.0) == 0.0, by_dtype
+    tr = trace_fn(dec, (qd, k8, v8, ks, vs, lengths),
+                  name="decode-attn/int8kv/fused", dispatch=False,
+                  meta={"expect_no_f32_dot": True, "quantized": False})
+    assert lint(tr, "no-f32-dot") == []
 
 
 def test_quantized_msa_forward_hlo_no_f32_attention_dots(monkeypatch):
@@ -284,17 +290,19 @@ def test_quantized_msa_forward_hlo_no_f32_attention_dots(monkeypatch):
         with ops.dispatch(dense=True, conv=True, attn=True):
             return evit._msa(blk, x, cfg.dim_per_head)
 
-    txt = jax.jit(msa_fused).lower(blk, x).compile().as_text()
-    by_dtype = analyze(txt)["dot_flops_by_dtype"]
-    assert by_dtype.get("f32", 0.0) == 0.0, by_dtype
-    assert sum(by_dtype.values()) > 0
+    tr = trace_fn(msa_fused, (blk, x), name="evit/u8/msa-block",
+                  dispatch=False, meta={"expect_no_f32_dot": True})
+    assert lint(tr, "no-f32-dot") == []
 
     def msa_f32_attn(blk, x):
         with ops.dispatch(dense=True, conv=True, attn=False):
             return evit._msa(blk, x, cfg.dim_per_head)
 
-    txt0 = jax.jit(msa_f32_attn).lower(blk, x).compile().as_text()
-    assert analyze(txt0)["dot_flops_by_dtype"].get("f32", 0.0) > 0
+    # seeded violation: attention back on the f32 einsums fires the rule
+    tr0 = trace_fn(msa_f32_attn, (blk, x), name="evit/u8/msa-block-f32attn",
+                   dispatch=False, meta={"expect_no_f32_dot": True})
+    assert any(v.rule == "no-f32-dot" and "f32 dot" in v.message
+               for v in lint(tr0, "no-f32-dot"))
 
 
 # ---------------------------------------------------------------------------

@@ -257,28 +257,28 @@ def test_quantized_forward_routes_convs_through_kernels(monkeypatch):
     assert bool(jnp.all(jnp.isfinite(y_ker)))
 
 
-def test_hlo_quantized_forward_has_no_f32_weight_conv(monkeypatch):
-    """Acceptance: the compiled quantized forward emits NO dequantized-
-    weight convolution for quantized conv leaves.  Dispatch on: the only
-    convolution left is the (unquantized) stem.  Dispatch off: PWConvs
-    STILL lower to quantized matmuls (no f32 conv); only the stem and the
-    7 weights-only depthwise fallbacks convolve."""
-    from repro.launch.hlo_analysis import op_histogram
+def test_hlo_quantized_forward_has_no_f32_weight_conv():
+    """Acceptance (qlint conv-budget rule): the compiled quantized forward
+    emits NO dequantized-weight convolution for quantized conv leaves.
+    Dispatch on: the only convolution left is the (unquantized) stem.
+    Dispatch off: PWConvs STILL lower to quantized matmuls (no f32 conv);
+    only the stem and the 7 weights-only depthwise fallbacks convolve."""
+    from repro.analysis import lint
+    from repro.analysis.traces import trace_fn
     cfg, model, qp, imgs = _calibrated_quantized_reduced()
-    # NOTE: separate function objects per env setting — jax.jit would
-    # otherwise serve the first trace from cache after the env flip
-    monkeypatch.setenv("REPRO_PALLAS_DISPATCH", "1")
-    txt = jax.jit(
-        lambda p, x: model.forward(cfg, p, x)).lower(qp, imgs).compile(
-    ).as_text()
-    hist = op_histogram(txt, include_fused=True)
-    assert hist.get("convolution", 0) == 1, hist.get("convolution")
-    monkeypatch.setenv("REPRO_PALLAS_DISPATCH", "0")
-    txt0 = jax.jit(
-        lambda p, x: model.forward(cfg, p, x)).lower(qp, imgs).compile(
-    ).as_text()
-    hist0 = op_histogram(txt0, include_fused=True)
-    assert hist0.get("convolution", 0) == 1 + 7, hist0.get("convolution")
+    tr = trace_fn(lambda p, x: model.forward(cfg, p, x), (qp, imgs),
+                  name="evit/m2q/forward", dispatch=True,
+                  meta={"conv_budget": 1})
+    assert lint(tr, "conv-budget") == []
+    tr0 = trace_fn(lambda p, x: model.forward(cfg, p, x), (qp, imgs),
+                   name="evit/m2q/forward-xla", dispatch=False,
+                   meta={"conv_budget": 1 + 7})
+    assert lint(tr0, "conv-budget") == []
+    # seeded violation: a wrong budget must FIRE the rule (non-vacuous)
+    tr0.meta["conv_budget"] = 1
+    vs = lint(tr0, "conv-budget")
+    assert [v.rule for v in vs] == ["conv-budget"] and "8 conv" in \
+        vs[0].message
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +347,6 @@ def test_stem_opt_in_recipe_quantizes_and_removes_last_conv():
     evit.STEM_OVERRIDE quantizes it to uniform-8 W8A8, the forward stays
     close to the default artifact's, and the dispatch-on HLO drops to ZERO
     convolutions (the stem was the only one left)."""
-    from repro.launch.hlo_analysis import op_histogram
     from repro.recipe import PRESETS, quantize
     cfg = REDUCED["efficientvit-b1-r224"]
     model = get_model(cfg)
@@ -379,12 +378,16 @@ def test_stem_opt_in_recipe_quantizes_and_removes_last_conv():
     assert all(r.decision == qr.decision for r, qr in
                zip(qm_default.report, (by_path[r.path] for r in
                                        qm_default.report)))
-    # HLO: with conv dispatch on the stem's conv is gone -> zero convs
+    # HLO (qlint conv-budget rule): with conv dispatch on the stem's conv
+    # is gone -> zero convolutions in the whole module
     def fwd(p, x):
         with ops.dispatch(dense=True, conv=True, attn=False):
             return model.forward(cfg, p, x)
-    txt = jax.jit(fwd).lower(qm.params, imgs).compile().as_text()
-    assert op_histogram(txt, include_fused=True).get("convolution", 0) == 0
+    from repro.analysis import lint
+    from repro.analysis.traces import trace_fn
+    tr = trace_fn(fwd, (qm.params, imgs), name="evit/stem-q/forward",
+                  dispatch=False, meta={"conv_budget": 0})
+    assert lint(tr, "conv-budget") == []
 
 
 # ---------------------------------------------------------------------------

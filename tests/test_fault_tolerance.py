@@ -693,3 +693,59 @@ def test_public_serving_entry_points_document_raise_behavior(mod_name,
     assert "aise" in doc, (                      # Raises/raises/re-raises
         f"{mod_name}.{qualname} is a public serving entry point but its "
         "docstring does not document raise behavior")
+
+
+# ---------------------------------------------------------------------------
+# debug numerics: pre-quantization NaN detection on a quantized engine
+# ---------------------------------------------------------------------------
+
+
+def _quantized_int8kv_model():
+    """A calibrated (static act scales) int8-KV quantized artifact: the
+    exact posture where activation quantization launders a cache NaN into
+    finite logits (``NaN.astype(int8)`` is finite)."""
+    from repro.recipe import quantize
+    cfg = REDUCED["qwen1.5-0.5b"].replace(kv_cache_dtype="int8")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    return quantize(cfg, params, "m2q-w8a8")
+
+
+def test_debug_numerics_catches_laundered_cache_nan():
+    qm = _quantized_int8kv_model()
+    kw = dict(max_batch=2, max_len=64)
+    dbg = qm.serve(faults=FaultInjector.parse("nan@decode:1"),
+                   debug_numerics=True, **kw)
+    ref = qm.serve(faults=FaultInjector.parse("nan@decode:1"), **kw)
+    ps = _prompts(qm.cfg, 2, seed=5)
+
+    # default engine: the detection boundary — the logits-only check
+    # misses the laundered NaN and delivers corrupt-but-finite tokens
+    rref = [ref.submit(p, max_new_tokens=4) for p in ps]
+    ref.run()
+    assert rref[0].handle.state == DONE
+    assert all(np.isfinite(rref[0].out_tokens))
+
+    # debug engine: the per-step cache scan sees the NaN'd f32 scale rows
+    # and fails ONLY the poisoned slot; its batchmate decodes on
+    rdbg = [dbg.submit(p, max_new_tokens=4) for p in ps]
+    dbg.run()
+    assert rdbg[0].handle.state == FAILED
+    with pytest.raises(NumericalError, match="non-finite"):
+        rdbg[0].handle.result()
+    assert rdbg[1].handle.state == DONE
+    assert rdbg[1].out_tokens == rref[1].out_tokens
+
+
+def test_debug_numerics_defaults_off_and_reads_env(monkeypatch):
+    from repro.serving.engine import Engine
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    monkeypatch.delenv("REPRO_DEBUG_NUMERICS", raising=False)
+    assert not Engine(cfg, params, max_batch=1, max_len=32).debug_numerics
+    monkeypatch.setenv("REPRO_DEBUG_NUMERICS", "1")
+    assert Engine(cfg, params, max_batch=1, max_len=32).debug_numerics
+    # explicit constructor arg beats the env var
+    assert not Engine(cfg, params, max_batch=1, max_len=32,
+                      debug_numerics=False).debug_numerics

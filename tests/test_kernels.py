@@ -160,9 +160,13 @@ def test_m2q_permutation_free_parity_vs_legacy_and_float(M, K, N):
 
 
 def test_m2q_hlo_emits_no_gather_or_concat():
-    """Acceptance: zero standalone gather/concatenate per quantized layer on
+    """Acceptance (qlint no-gather-concat rule): zero gather/concatenate
+    reachable from the quantized payloads before their contraction, on
     BOTH serving paths (XLA QTensor matmul and the fused Pallas dispatch),
-    counting fusion interiors too."""
+    counting fusion interiors too.  The QTensor is passed as a jit
+    ARGUMENT so its payloads are entry parameters the rule can seed from."""
+    from repro.analysis import lint
+    from repro.analysis.traces import trace_fn
     from repro.launch.hlo_analysis import op_histogram
     rng = _rng(21)
     w = jnp.asarray(rng.normal(0, 0.05, (128, 96)).astype(np.float32))
@@ -170,18 +174,30 @@ def test_m2q_hlo_emits_no_gather_or_concat():
     qt = QM2Q.quantize(w, asn.apot_idx, asn.uniform_idx,
                        act_max_abs=jnp.float32(3.0))
     x = jnp.zeros((8, 128), jnp.float32)
-    for fn in (lambda v: qt.matmul(v),
-               lambda v: ops.qtensor_matmul(v, qt, interpret=True)):
-        txt = jax.jit(fn).lower(x).compile().as_text()
-        hist = op_histogram(txt, include_fused=True)
-        assert hist.get("gather", 0) == 0, hist
-        assert hist.get("concatenate", 0) == 0, hist
-    # the legacy epilogue DOES emit them (guards against a vacuous check)
+    for tag, fn in (("xla", lambda q, v: q.matmul(v)),
+                    ("fused", lambda q, v: ops.qtensor_matmul(
+                        v, q, interpret=True))):
+        tr = trace_fn(fn, (qt, x), name=f"m2q/matmul/{tag}",
+                      dispatch=False, meta={"quantized": True})
+        assert lint(tr, "no-gather-concat") == []
+    # the legacy epilogue DOES emit them (guards against a vacuous check;
+    # op_histogram, not the rule — the legacy path contracts a FLOAT
+    # weight, so there is no quantized entry param for the rule to seed
+    # from, which is exactly why the merged layout exists)
     txt = jax.jit(
         lambda v: _legacy_m2q(w, asn, v, jnp.float32(3.0) / 127.0)
     ).lower(x).compile().as_text()
     hist = op_histogram(txt, include_fused=True)
     assert hist.get("gather", 0) >= 1 and hist.get("concatenate", 0) >= 1
+    # seeded rule violation: a weight-side permutation gather BEFORE the
+    # contraction — the epilogue shape the rule exists to catch
+    def permuted(q, v):
+        return v @ q.dequant()[jnp.argsort(jnp.argsort(w[:, 0]))]
+
+    trv = trace_fn(permuted, (qt, x), name="m2q/matmul/permuted",
+                   dispatch=False, meta={"quantized": True})
+    vs = lint(trv, "no-gather-concat")
+    assert vs and all(v.rule == "no-gather-concat" for v in vs)
 
 
 @pytest.mark.parametrize("B,H,W,C", [(2, 8, 8, 32), (1, 14, 14, 64),

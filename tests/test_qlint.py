@@ -1,0 +1,357 @@
+"""qlint rule engine: seeded-violation tests proving every rule fires on
+a deliberately broken graph, plus the def-use Graph machinery and the
+baseline ledger.  The handcrafted-HLO tests exercise the text-only layer
+(no jax trace needed); the jax-traced tests seed real violations through
+deliberately wrong lowerings."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (RULES_BY_NAME, Trace, baseline, lint, run_rules)
+from repro.core import QUniform
+from repro.launch.hlo_analysis import Graph
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# handcrafted HLO: the text-only rules and the Graph machinery
+# ---------------------------------------------------------------------------
+
+
+_LOOP_HLO = """\
+HloModule m
+
+%body (p: (s32[])) -> (s32[]) {{
+  %p = (s32[]) parameter(0)
+  %g = s32[] get-tuple-element(%p), index=0
+  %c1 = s32[] constant(1)
+  %a = s32[] add(%g, %c1)
+{extra}  ROOT %t = (s32[]) tuple(%a)
+}}
+
+%cond (q: (s32[])) -> pred[] {{
+  %q = (s32[]) parameter(0)
+  %g.1 = s32[] get-tuple-element(%q), index=0
+  %c8 = s32[] constant(8)
+  ROOT %lt = pred[] compare(%g.1, %c8), direction=LT
+}}
+
+ENTRY %main (x: s32[]) -> s32[] {{
+  %x = s32[] parameter(0)
+  %t0 = (s32[]) tuple(%x)
+  %w = (s32[]) while(%t0), condition=%cond, body=%body
+  ROOT %out = s32[] get-tuple-element(%w), index=0
+}}
+"""
+
+_OUTFEED = ("  %tok = token[] after-all()\n"
+            "  %of = token[] outfeed(%a, %tok)\n")
+
+
+def test_no_d2h_in_loop_fires_on_outfeed_in_while_body():
+    tr = Trace(name="seeded/outfeed", text=_LOOP_HLO.format(extra=_OUTFEED))
+    vs = lint(tr, "no-d2h-in-loop")
+    assert [v.rule for v in vs] == ["no-d2h-in-loop"]
+    assert "outfeed" in vs[0].message and vs[0].path == "body"
+    # the same loop without the transfer is clean
+    clean = Trace(name="seeded/clean", text=_LOOP_HLO.format(extra=""))
+    assert lint(clean, "no-d2h-in-loop") == []
+
+
+def test_graph_resolves_loop_carry_tuple_elements():
+    g = Graph(_LOOP_HLO.format(extra=""))
+    assert g.entry == "main"
+    assert g.loop_comps() >= {"body", "cond"}
+    # a fresh tuple resolves to its operand ...
+    assert g.tuple_element("t0", 0) == ["x"]
+    # ... and the while's element 0 resolves BOTH to the init value and to
+    # the body root's element (the loop carry), element-precisely
+    assert set(g.tuple_element("w", 0)) == {"x", "a"}
+    # the entry gte consumes exactly those values (no blanket carry edges)
+    assert set(g.redges["out"]) == {"x", "a"}
+
+
+def test_graph_stitches_fusion_interiors():
+    text = """\
+HloModule f
+
+%fused (fp0: s8[4,8], fp1: f32[8,2]) -> f32[4,2] {
+  %fp0 = s8[4,8] parameter(0)
+  %fp1 = f32[8,2] parameter(1)
+  %cv = f32[4,8] convert(%fp0)
+  ROOT %d = f32[4,2] dot(%cv, %fp1), lhs_contracting_dims={1}
+}
+
+ENTRY %main (a: s8[4,8], b: f32[8,2]) -> f32[4,2] {
+  %a = s8[4,8] parameter(0)
+  %b = f32[8,2] parameter(1)
+  ROOT %fu = f32[4,2] fusion(%a, %b), kind=kLoop, calls=%fused
+}
+"""
+    g = Graph(text)
+    # caller operand -> callee parameter, callee root -> call result
+    assert "fp0" in g.edges["a"]
+    assert "fu" in g.edges["d"]
+    assert g.dtype_of("cv") == "f32" and g.dtype_of("a") == "s8"
+
+
+def test_no_dequant_matmul_sees_through_fusions_textually():
+    # the fusion interior above IS a dequantized matmul: s8 param ->
+    # convert f32 -> dot, inside a fusion
+    text = """\
+HloModule f
+
+%fused (fp0: s8[4,8], fp1: f32[8,2]) -> f32[4,2] {
+  %fp0 = s8[4,8] parameter(0)
+  %fp1 = f32[8,2] parameter(1)
+  %cv = f32[4,8] convert(%fp0)
+  ROOT %d = f32[4,2] dot(%cv, %fp1), lhs_contracting_dims={1}
+}
+
+ENTRY %main (a: s8[4,8], b: f32[8,2]) -> f32[4,2] {
+  %a = s8[4,8] parameter(0)
+  %b = f32[8,2] parameter(1)
+  ROOT %fu = f32[4,2] fusion(%a, %b), kind=kLoop, calls=%fused
+}
+"""
+    tr = Trace(name="seeded/fused-dequant", text=text,
+               meta={"quantized": True,
+                     "param_leaves": [("w/payload", "s8", [4, 8]),
+                                      ("x", "f32", [8, 2])]})
+    vs = lint(tr, "no-dequant-matmul")
+    assert [v.rule for v in vs] == ["no-dequant-matmul"]
+    assert "w/payload" in vs[0].message
+
+
+def test_no_f32_dot_vacuity_guard_fires_without_dots():
+    tr = Trace(name="seeded/no-dots", text=_LOOP_HLO.format(extra=""),
+               meta={"expect_no_f32_dot": True})
+    vs = lint(tr, "no-f32-dot")
+    assert len(vs) == 1 and "vacuous" in vs[0].message
+    # expect_dots=False waives the vacuity sub-check
+    tr.meta["expect_dots"] = False
+    assert lint(tr, "no-f32-dot") == []
+
+
+def test_sharding_conformance_fires_on_spec_drift():
+    recs = [{"path": "0/embed/0", "expected": "(None, 'model')",
+             "actual": "(None, 'model')"},
+            {"path": "0/layers/wq/0", "expected": "(None, 'model')",
+             "actual": "()"}]
+    tr = Trace(name="seeded/shard", text="HloModule s\n",
+               meta={"sharding": recs})
+    vs = lint(tr, "sharding-conformance")
+    assert [v.path for v in vs] == ["0/layers/wq/0"]
+    assert "dist.sharding" in vs[0].message
+    # the rule only applies when sharding metadata was recorded
+    assert not RULES_BY_NAME["sharding-conformance"].applies({})
+
+
+def test_suppressions_are_reported_not_dropped():
+    text = """\
+HloModule g
+
+ENTRY %main (e: s8[16,4], i: s32[2]) -> f32[2,4] {
+  %e = s8[16,4] parameter(0)
+  %i = s32[2] parameter(1)
+  %ga = s8[2,4] gather(%e, %i), offset_dims={1}
+  ROOT %cv = f32[2,4] convert(%ga)
+}
+"""
+    tr = Trace(name="seeded/embed-gather", text=text,
+               meta={"quantized": True,
+                     "param_leaves": [("0/embed/0", "s8", [16, 4]),
+                                      ("ids", "s32", [2])]})
+    # the default (^|/)embed suppression swallows the embedding gather —
+    # run_rules returns it on the suppressed channel, lint drops it
+    vs, supp = run_rules(tr, rules=[RULES_BY_NAME["no-gather-concat"]])
+    assert vs == [] and [v.path for v in supp] == ["0/embed/0"]
+    assert lint(tr, "no-gather-concat") == []
+    # a custom suppression channels any rule the same way
+    vs2, supp2 = run_rules(
+        tr, rules=[RULES_BY_NAME["no-gather-concat"]],
+        suppressions={"no-gather-concat": [r"^ids$"]})
+    assert vs2 == [] and len(supp2) == 1
+
+
+def test_lint_rejects_unknown_rule_names():
+    tr = Trace(name="x", text="HloModule x\n")
+    with pytest.raises(KeyError):
+        lint(tr, "no-such-rule")
+
+
+def test_trace_param_alignment_survives_dropped_and_sharded_leaves():
+    text = """\
+HloModule a
+
+ENTRY %main (p0: s8[2,8], p1: f32[8]) -> f32[8] {
+  %p0 = s8[2,8] parameter(0)
+  %p1 = f32[8] parameter(1)
+  %cv = f32[2,8] convert(%p0)
+  %rd = f32[8] reduce(%cv, %p1), dimensions={0}, to_apply=%main
+  ROOT %o = f32[8] add(%rd, %p1)
+}
+"""
+    # leaf 'dropped' was optimized out of the executable; param 0 is the
+    # PER-PARTITION shard [2,8] of the global [4,8] payload
+    tr = Trace(name="align", text=text,
+               meta={"param_leaves": [("dropped", "f32", [3]),
+                                      ("w/payload", "s8", [4, 8]),
+                                      ("bias", "f32", [8])]})
+    assert tr.param_path(0) == "w/payload"
+    assert tr.param_path(1) == "bias"
+
+
+# ---------------------------------------------------------------------------
+# jax-traced seeds: dequant matmul and (un)guarded activation quantization
+# ---------------------------------------------------------------------------
+
+
+def test_no_dequant_matmul_fires_on_traced_dequant_contraction():
+    from repro.analysis.traces import trace_fn
+    w = jnp.asarray(_rng(3).normal(0, 0.1, (32, 16)).astype(np.float32))
+    qt = QUniform.quantize(w, bits=8)
+    x = jnp.zeros((4, 32), jnp.float32)
+
+    def broken(q, v):  # decode the payload to f32 and contract at f32
+        return v @ q.dequant()
+
+    tr = trace_fn(broken, (qt, x), name="seeded/dequant-matmul",
+                  dispatch=False, meta={"quantized": True})
+    vs = lint(tr, "no-dequant-matmul")
+    assert vs and all(v.rule == "no-dequant-matmul" for v in vs)
+    # the CALIBRATED integer path is clean: int8 x int8 -> s32, with the
+    # accumulator rescaled to f32 only AFTER the dot.  (A weights-only
+    # QTensor dequantizes by design — that is what the rwkv baseline
+    # entry records — so the clean case needs an act_scale.)
+    qt_cal = QUniform.quantize(w, bits=8, act_max_abs=jnp.float32(3.0))
+    tr_ok = trace_fn(lambda q, v: q.matmul(v), (qt_cal, x),
+                     name="seeded/int-matmul", dispatch=False,
+                     meta={"quantized": True})
+    assert lint(tr_ok, "no-dequant-matmul") == []
+
+
+def test_unguarded_act_quant_distinguishes_guarded_converts():
+    from repro.analysis.traces import trace_fn
+    x = jnp.zeros((8, 16), jnp.float32)
+    s = jnp.float32(0.05)
+
+    def unguarded(v):
+        return jnp.clip(jnp.round(v / s), -127, 127).astype(jnp.int8)
+
+    def guarded(v):
+        v = jnp.where(jnp.isfinite(v), v, 0.0)
+        return jnp.clip(jnp.round(v / s), -127, 127).astype(jnp.int8)
+
+    tr = trace_fn(unguarded, (x,), name="seeded/unguarded",
+                  dispatch=False, meta={"quantized": True})
+    vs = lint(tr, "unguarded-act-quant")
+    assert vs and vs[0].severity == "warn"
+    # the is-finite select upstream of the convert silences the warning —
+    # proving the rule is non-vacuous in BOTH directions
+    tr_ok = trace_fn(guarded, (x,), name="seeded/guarded",
+                     dispatch=False, meta={"quantized": True})
+    assert lint(tr_ok, "unguarded-act-quant") == []
+
+
+# ---------------------------------------------------------------------------
+# baseline ledger: diff semantics and persistence
+# ---------------------------------------------------------------------------
+
+
+def _viol(trace, rule, path, n=1):
+    from repro.analysis import Violation
+    return [Violation(rule=rule, severity="error", trace=trace, path=path,
+                      message="m")] * n
+
+
+def test_baseline_diff_flags_new_and_grown_only():
+    old = _viol("t/a", "no-f32-dot", "", 1) + _viol("t/a", "conv-budget",
+                                                    "w", 2)
+    cur = (_viol("t/a", "no-f32-dot", "", 1)          # unchanged
+           + _viol("t/a", "conv-budget", "w", 3)      # grew 2 -> 3
+           + _viol("t/b", "no-d2h-in-loop", "body"))  # new
+    regress = baseline.diff(baseline.to_ledger(cur), baseline.to_ledger(old))
+    assert any("GREW" in r and "conv-budget" in r for r in regress)
+    assert any("NEW" in r and "t/b" in r for r in regress)
+    assert not any("no-f32-dot" in r for r in regress)
+    # shrinking / disappearing entries are improvements, not regressions:
+    # the current run is a superset of the baseline, so nothing is GONE
+    assert baseline.improvements(baseline.to_ledger(cur),
+                                 baseline.to_ledger(old)) == []
+    gone = baseline.improvements(baseline.to_ledger([]),
+                                 baseline.to_ledger(old))
+    assert len(gone) == 2 and all("GONE" in g for g in gone)
+
+
+def test_baseline_save_load_roundtrip_and_version_gate(tmp_path):
+    led = baseline.to_ledger(_viol("t/a", "no-f32-dot", "", 2))
+    p = tmp_path / "base.json"
+    baseline.save(p, led)
+    assert baseline.load(p) == led
+    blob = json.loads(p.read_text())
+    blob["version"] = 999
+    p.write_text(json.dumps(blob))
+    with pytest.raises(ValueError, match="version"):
+        baseline.load(p)
+
+
+def test_committed_baseline_is_loadable_and_canonical():
+    """The checked-in ledger parses, and re-saving it is byte-identical
+    (sorted keys, stable formatting) so diffs stay reviewable."""
+    from pathlib import Path
+    p = Path(__file__).resolve().parents[1] / "results/qlint_baseline.json"
+    led = baseline.load(p)
+    assert led, "committed baseline is empty — regenerate with " \
+                "--update-baseline"
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        q = Path(d) / "b.json"
+        baseline.save(q, led)
+        assert q.read_text() == p.read_text()
+
+
+def test_registry_trace_names_and_rule_expectations():
+    """One real registry sweep entry end-to-end (the cheapest vision
+    config): trace names are stable keys and the m2q forward carries the
+    documented by-design violations — exactly what the committed baseline
+    records, nothing more."""
+    from repro.analysis.traces import registry_traces
+    traces = registry_traces("efficientvit-b1-r224", recipes=("m2q-w8a8",))
+    assert [t.name for t in traces] == ["efficientvit-b1-r224/m2q/forward"]
+    vs = lint(traces[0])
+    by_rule = {}
+    for v in vs:
+        by_rule.setdefault(v.rule, []).append(v.path)
+    # packed-w4 DWConv: nibble-unpack concats + one in-kernel dequant conv
+    assert set(by_rule) == {"no-gather-concat", "no-dequant-matmul",
+                            "unguarded-act-quant"}
+    assert all("w_dw" in p for p in by_rule["no-gather-concat"])
+
+
+def test_forward_jax_roundtrip_matches_graph_dtypes():
+    """trace_fn records param_leaves that align against the compiled
+    entry: quantized payload leaves are found as s8 entry params."""
+    from repro.analysis.traces import trace_fn
+    w = jnp.asarray(_rng(11).normal(0, 0.1, (16, 8)).astype(np.float32))
+    qt = QUniform.quantize(w, bits=8)
+    x = jnp.zeros((2, 16), jnp.float32)
+    tr = trace_fn(lambda q, v: q.matmul(v), (qt, x), name="align/jax",
+                  dispatch=False)
+    g = tr.graph
+    pay = [i for i, p in enumerate(g.entry_params())
+           if p and g.dtype_of(p) == "s8"]
+    assert pay, "int8 payload did not survive as an entry parameter"
+    # QTensor children flatten positionally, so the payload attributes to
+    # the qtensor argument (tuple slot 0), the activation to slot 1
+    assert all(tr.param_path(i).startswith("0/") for i in pay)
+    f32_acts = [i for i, p in enumerate(g.entry_params())
+                if p and g.dtype_of(p) == "f32"
+                and tr.param_path(i) == "1"]
+    assert f32_acts, "activation arg did not attribute to tuple slot 1"

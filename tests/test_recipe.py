@@ -173,12 +173,18 @@ def test_override_rejects_mixed_embedding():
 # ---------------------------------------------------------------------------
 
 
-def _op_histogram(cfg, model, qp, imgs):
+def _forward_trace(cfg, model, qp, imgs, conv_budget):
+    """Compiled-forward qlint Trace (ambient dispatch scope applies: the
+    callers scope ops.dispatch around this)."""
+    from repro.analysis.traces import trace_fn
+    return trace_fn(lambda p, x: model.forward(cfg, p, x), (qp, imgs),
+                    name="evit/artifact/forward", dispatch=None,
+                    meta={"conv_budget": conv_budget})
+
+
+def _op_histogram(trace):
     from repro.launch.hlo_analysis import op_histogram
-    txt = jax.jit(
-        lambda p, x: model.forward(cfg, p, x)).lower(qp, imgs).compile(
-    ).as_text()
-    return op_histogram(txt, include_fused=True)
+    return op_histogram(trace.text, include_fused=True)
 
 
 def test_artifact_save_load_hlo_identical(tmp_path, monkeypatch):
@@ -199,19 +205,20 @@ def test_artifact_save_load_hlo_identical(tmp_path, monkeypatch):
     y1 = np.asarray(qm.forward(imgs))
     y2 = np.asarray(qm2.forward(imgs))
     np.testing.assert_array_equal(y1, y2)
-    # HLO: identical op histograms + conv/gather/concat invariants
+    # HLO: identical op histograms + the qlint conv-budget invariant
+    from repro.analysis import lint
     with ops.dispatch(dense=True, conv=True):
-        h1 = _op_histogram(cfg, model, qm.params, imgs)
-        h2 = _op_histogram(cfg, model, qm2.params, imgs)
-    assert h1 == h2
-    assert h1.get("convolution", 0) == 1  # only the unquantized stem
+        t1 = _forward_trace(cfg, model, qm.params, imgs, conv_budget=1)
+        t2 = _forward_trace(cfg, model, qm2.params, imgs, conv_budget=1)
+    assert _op_histogram(t1) == _op_histogram(t2)
+    assert lint(t1, "conv-budget") == []  # only the unquantized stem
     with ops.dispatch(dense=False, conv=False):
-        h1 = _op_histogram(cfg, model, qm.params, imgs)
-        h2 = _op_histogram(cfg, model, qm2.params, imgs)
-    assert h1 == h2
-    # PWConvs STILL lower to quantized matmuls with dispatch off; only the
-    # stem + the 7 weights-only depthwise fallbacks convolve
-    assert h1.get("convolution", 0) == 1 + 7
+        # PWConvs STILL lower to quantized matmuls with dispatch off; only
+        # the stem + the 7 weights-only depthwise fallbacks convolve
+        t1 = _forward_trace(cfg, model, qm.params, imgs, conv_budget=1 + 7)
+        t2 = _forward_trace(cfg, model, qm2.params, imgs, conv_budget=1 + 7)
+    assert _op_histogram(t1) == _op_histogram(t2)
+    assert lint(t1, "conv-budget") == [] and lint(t2, "conv-budget") == []
 
 
 def test_artifact_roundtrip_lm(tmp_path):
