@@ -76,6 +76,11 @@ class SimResult:
     edp_mj_ms: float
     energy_mj_total: float    # Table V scope (adds buffer+static overhead)
     per_layer: List[LayerEnergy]
+    # request-level latency behind the serving runtime (set only when
+    # simulate() was given a ServingCalibration): device latency derated
+    # by measured batch occupancy + measured queue wait
+    served_latency_ms: Optional[float] = None
+    served_p99_latency_ms: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -190,15 +195,78 @@ class KernelCalibration:
         return max(1.0, ideal_speedup / measured)
 
 
+# ---------------------------------------------------------------------------
+# measured serving-occupancy calibration (BENCH_serving.json)
+# ---------------------------------------------------------------------------
+
+DEFAULT_SERVING_BENCH = Path(__file__).resolve().parent / "BENCH_serving.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingCalibration:
+    """Measured serving-runtime occupancy + queue wait from serving_bench.
+
+    The cycle model prices ONE inference at full engine utilization.  A
+    deployed accelerator runs behind the serving runtime, whose measured
+    batch occupancy (padded slots still burn cycles) and admission-queue
+    wait are what a request actually experiences.  Feeding the committed
+    ``BENCH_serving.json`` back in turns the simulator's per-inference
+    latency into a SERVED latency:
+
+        served = latency / occupancy + queue_wait
+
+    Occupancy comes from the highest-arrival-rate row (steady state —
+    low-rate rows measure deadline flushing, not capacity); queue
+    percentiles from the same row.
+    """
+
+    occupancy: float      # steady-state batch occupancy in (0, 1]
+    queue_p50_ms: float   # measured queue wait at that rate
+    queue_p99_ms: float
+    backend: str = ""
+    source: str = ""
+
+    def __post_init__(self):
+        if not 0.0 < self.occupancy <= 1.0:
+            raise ValueError(
+                f"occupancy must be in (0, 1], got {self.occupancy}")
+
+    @classmethod
+    def from_bench_json(cls, path=None,
+                        engine: str = "vision") -> "ServingCalibration":
+        path = Path(DEFAULT_SERVING_BENCH if path is None else path)
+        data = json.loads(path.read_text())
+        rows = [r for r in data.get(engine) or []
+                if r.get("batch_occupancy")]
+        if not rows:
+            raise ValueError(
+                f"{path} has no '{engine}' rows with batch_occupancy "
+                "(re-run benchmarks.serving_bench)")
+        row = max(rows, key=lambda r: r.get("arrival_rate_per_s", 0.0))
+        return cls(occupancy=float(row["batch_occupancy"]),
+                   queue_p50_ms=float(row.get("p50_ms", 0.0)),
+                   queue_p99_ms=float(row.get("p99_ms", 0.0)),
+                   backend=str(data.get("backend", "")), source=str(path))
+
+    def served_ms(self, latency_ms: float) -> float:
+        return latency_ms / self.occupancy + self.queue_p50_ms
+
+
 def simulate(layers: List[Layer], method: str = "m2q",
              wbuf_per_bit: Optional[float] = None,
              method_for=None,
-             kernel_cal: Optional[KernelCalibration] = None) -> SimResult:
+             kernel_cal: Optional[KernelCalibration] = None,
+             serving_cal: Optional[ServingCalibration] = None) -> SimResult:
     """method_for: optional per-layer override (Table IV ablations).
     kernel_cal: optional measured-kernel latency calibration — quantized
     layers whose measured fused-kernel speedup trails the ideal engine
     mapping take proportionally more cycles (energy is unchanged; latency,
-    throughput, and EDP move)."""
+    throughput, and EDP move).
+    serving_cal: optional measured serving-runtime calibration — fills
+    ``SimResult.served_latency_ms`` with what a request sees behind the
+    serving loop (device latency derated by measured batch occupancy,
+    plus the measured admission-queue wait); the raw device columns are
+    untouched."""
     eb = E_WBUF_PER_BIT if wbuf_per_bit is None else wbuf_per_bit
     per_layer = []
     total_macs = 0
@@ -231,13 +299,21 @@ def simulate(layers: List[Layer], method: str = "m2q",
     # uses the paper-reported numbers — Trio's own accelerator geometry is
     # theirs, not ours, so we don't re-simulate it at the Table V scope)
     energy_total_j = energy_j + static_w * latency_s
+    latency_ms = latency_s * 1e3
+    served = served_p99 = None
+    if serving_cal is not None:
+        served = serving_cal.served_ms(latency_ms)
+        served_p99 = (latency_ms / serving_cal.occupancy
+                      + serving_cal.queue_p99_ms)
     return SimResult(
         energy_uj=energy_j * 1e6,
-        latency_ms=latency_s * 1e3,
+        latency_ms=latency_ms,
         throughput_gops=ops / latency_s / 1e9,
-        edp_mj_ms=(energy_total_j * 1e3) * (latency_s * 1e3),
+        edp_mj_ms=(energy_total_j * 1e3) * latency_ms,
         energy_mj_total=energy_total_j * 1e3,
         per_layer=per_layer,
+        served_latency_ms=served,
+        served_p99_latency_ms=served_p99,
     )
 
 

@@ -11,7 +11,10 @@
 # compileall pass, which catches syntax errors in EVERY file including
 # ones the fast suite never imports.  qlint = the rule-based HLO verifier
 # (docs/qlint.md) diffed against the committed baseline ledger — it fails
-# on NEW violations only.  The full tier-1 gate remains ./test.sh with no
+# on NEW violations AND (--fail-on-gone) on stale ledger rows, keeping
+# the ratchet tight in both directions.  The daemon smoke stage streams
+# one real wall-clock request through the background serve loop
+# (docs/serving.md).  The full tier-1 gate remains ./test.sh with no
 # -m filter.
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -44,7 +47,11 @@ if [[ "$LINT_ONLY" == 1 ]]; then
 fi
 
 echo "== qlint (HLO invariant sweep vs results/qlint_baseline.json)"
-PYTHONPATH=src python -m repro.launch.qlint --baseline results/qlint_baseline.json
+PYTHONPATH=src python -m repro.launch.qlint --baseline results/qlint_baseline.json --fail-on-gone
+
+echo "== serving daemon smoke (wall-clock streamed request, clean shutdown)"
+PYTHONPATH=src python -m repro.launch.daemon --arch qwen1.5-0.5b --reduced \
+    --smoke --no-quant --max-new 4 --max-batch 2 --timeout 60
 
 echo "== fast suite (./test.sh -m 'not slow')"
 exec ./test.sh -m "not slow"

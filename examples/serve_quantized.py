@@ -25,8 +25,17 @@ engine is fully quantized, and activation quantization can launder a
 cache NaN into finite garbage before the logits check sees it (see
 docs/serving.md, "Detection boundary").
 
+Daemon demo: ``--daemon`` serves the same quantized engine through the
+background wall-clock serve loop instead of the inline ``run()`` —
+batch-tier requests saturate the slots, interactive requests jump the
+queue (and may preempt batch decodes), and ``--stream`` prints the first
+interactive request's tokens as they decode through the streaming Handle
+API.  See docs/serving.md, "Running the daemon"; the full CLI (SLO
+mix, smoke mode, multi-host mesh launch) is ``repro.launch.daemon``.
+
   PYTHONPATH=src python examples/serve_quantized.py [--arch qwen1.5-0.5b]
   PYTHONPATH=src python examples/serve_quantized.py --fault-spec raise@decode:*/6
+  PYTHONPATH=src python examples/serve_quantized.py --daemon --stream
 """
 import argparse
 import time
@@ -40,6 +49,53 @@ from repro.models import get_model
 from repro.serving.faults import FaultInjector
 
 
+def serve_daemon(eng, args):
+    """--daemon: the same quantized engine behind the background
+    wall-clock serve loop — batch tier saturates the slots, interactive
+    tier jumps the queue (and may preempt), the first interactive
+    request streams token by token (docs/serving.md, 'Running the
+    daemon')."""
+    from repro.serving.daemon import ServingDaemon
+
+    rng = np.random.default_rng(7)
+    cfg = eng.cfg
+    n_batch = max(1, args.requests - args.requests // 3)
+    n_inter = args.requests - n_batch
+    reqs = []
+    t0 = time.time()
+    with ServingDaemon(eng) as daemon:
+        for _ in range(n_batch):
+            plen = int(rng.integers(4, 24))
+            reqs.append(daemon.submit(
+                rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
+                slo="batch", max_new_tokens=args.max_new))
+        streamed = []
+        first = daemon.submit(
+            rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+            slo="interactive", max_new_tokens=args.max_new, stream=True)
+        for _ in range(max(0, n_inter - 1)):
+            reqs.append(daemon.submit(
+                rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                slo="interactive", max_new_tokens=args.max_new))
+        for tok in first.handle.tokens(timeout=300.0):
+            streamed.append(tok)
+            if args.stream:
+                print(f"      stream tok={tok}", flush=True)
+        reqs.append(first)
+        for r in reqs:
+            r.handle.result(timeout=300.0)
+    dt = time.time() - t0
+    assert streamed == first.handle.result()
+    stats = eng.stats
+    assert stats.resolved == stats.submitted == len(reqs)
+    print(f"      daemon served {stats.completed} requests in {dt:.1f}s "
+          f"(streamed {len(streamed)} tokens wall-clock, "
+          f"preemptions={stats.preemptions})")
+    for name, row in sorted(daemon.stats_summary()["classes"].items()):
+        print(f"      class={name}: completed={row['completed']} "
+              f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -51,6 +107,13 @@ def main():
     ap.add_argument("--fault-spec", default=None,
                     help="inject deterministic faults (KIND@SITE:WHEN, "
                          "e.g. raise@decode:*/6) to demo containment")
+    ap.add_argument("--daemon", action="store_true",
+                    help="serve through the background wall-clock "
+                         "ServingDaemon (SLO classes, streaming) instead "
+                         "of the inline run() loop — docs/serving.md")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --daemon: print the first interactive "
+                         "request's tokens as they decode")
     args = ap.parse_args()
 
     cfg = REDUCED[args.arch]
@@ -73,6 +136,8 @@ def main():
               if args.fault_spec else None)
     eng = qm.serve(max_batch=4, max_len=96, max_delay_ms=args.max_delay_ms,
                    faults=faults)
+    if args.daemon:
+        return serve_daemon(eng, args)
     rng = np.random.default_rng(7)
     reqs = []
     for i in range(args.requests):

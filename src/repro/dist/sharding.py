@@ -139,3 +139,25 @@ def shardings_from_specs(specs, mesh):
     """PartitionSpec tree -> NamedSharding tree (same structure)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def put_global(tree, specs, mesh):
+    """Place a host-local tree as GLOBAL sharded ``jax.Array``s.
+
+    The multi-host counterpart of ``jax.device_put(tree, shardings)``:
+    on a mesh spanning several processes ``device_put`` rejects
+    shardings with non-addressable devices, while
+    ``jax.make_array_from_callback`` assembles a global array from the
+    shards each process CAN address — every process calls this with the
+    same (replicated) host values and keeps only its local shards.  On a
+    single-process mesh the result is identical to ``device_put``, so
+    callers need no host-count special case.
+    """
+    shardings = shardings_from_specs(specs, mesh)
+
+    def place(x, s):
+        x = np.asarray(x)
+        return jax.make_array_from_callback(
+            x.shape, s, lambda idx, _x=x: _x[idx])
+
+    return jax.tree.map(place, tree, shardings)

@@ -1,0 +1,261 @@
+"""Serving-daemon driver CLI: wall-clock serving with SLO classes,
+streaming, and (multi-)host mesh launch.
+
+Single host — quantize (unless ``--no-quant``) and serve mixed
+interactive + batch wall-clock traffic through the background
+:class:`~repro.serving.daemon.ServingDaemon`, streaming the first
+interactive request token by token:
+
+  PYTHONPATH=src python -m repro.launch.daemon --arch qwen1.5-0.5b \
+      --reduced --requests 8 --stream
+
+``--smoke`` is the CI fast path (check.sh): tiny reduced config, one
+streamed request with a tight timeout, clean drain, exact outcome
+reconciliation — exits non-zero on any of those failing.
+
+Multi-host — every process runs the same command with its own
+``--process-id``; ``jax.distributed.initialize`` joins them into one
+global device world, the ``--mesh`` spans it, and params/cache land via
+``dist.sharding.put_global`` (cross-process placement, where
+``jax.device_put`` cannot).  On backends without multiprocess execution
+(the CPU backend) this is a DRY-RUN: distributed init, global mesh,
+spec-conformant placement, and lowering of the prefill computation are
+all verified, then the process reports and exits — the serve loop
+itself runs only where the runtime can execute cross-process programs:
+
+  python -m repro.launch.daemon --arch qwen1.5-0.5b --reduced \
+      --mesh 2x4 --coordinator 127.0.0.1:9911 --num-processes 2 \
+      --process-id 0   # and the same with --process-id 1
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+
+# NOTE: repro imports are deliberately LAZY (inside functions) in this
+# module: multi-host launch must call jax.distributed.initialize()
+# before ANY jax computation executes, and several repro modules run
+# small computations at import time.  `import jax` alone is safe.
+import jax
+import numpy as np
+
+
+def build_engine(args, mesh=None):
+    from ..configs.registry import ARCHS, REDUCED
+    from ..models import get_model
+    from ..serving.engine import Engine
+    from .serve import quantize_for_serving
+    cfg = (REDUCED if args.reduced else ARCHS)[args.arch]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    engine_kw = dict(max_batch=args.max_batch, max_len=args.max_len,
+                     mesh=mesh)
+    if args.no_quant:
+        return Engine(cfg, params, **engine_kw)
+    qm = quantize_for_serving(cfg, params)
+    print(f"[daemon] quantized {len(qm.report)} layers")
+    return qm.serve(**engine_kw)
+
+
+def _prompts(cfg, n, rng):
+    return [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 13)),
+                         dtype=np.int32) for _ in range(n)]
+
+
+def serve_traffic(daemon, args) -> bool:
+    """Submit mixed interactive/batch wall-clock traffic from a foreign
+    thread, stream the first interactive request, report per-class
+    latency.  Returns True when every outcome reconciled."""
+    eng = daemon.engine
+    cfg = eng.cfg
+    rng = np.random.default_rng(0)
+    n_inter = max(1, args.requests // 2)
+    n_batch = args.requests - n_inter
+    results = []
+
+    def submitter():
+        for p in _prompts(cfg, n_batch, rng):
+            results.append(daemon.submit(p, slo="batch",
+                                         max_new_tokens=args.max_new))
+        for p in _prompts(cfg, n_inter - 1, rng):
+            results.append(daemon.submit(p, slo="interactive",
+                                         max_new_tokens=args.max_new))
+
+    th = threading.Thread(target=submitter)
+    th.start()
+    streamed = []
+    first = daemon.submit(_prompts(cfg, 1, rng)[0], slo="interactive",
+                          max_new_tokens=args.max_new, stream=True)
+    for tok in first.handle.tokens(timeout=args.timeout):
+        streamed.append(tok)
+        if args.stream:
+            print(f"[daemon] stream tok={tok}", flush=True)
+    th.join()
+    results.append(first)
+    for r in results:
+        r.handle.result(timeout=args.timeout)
+    daemon.shutdown(drain=True, timeout=args.timeout)
+    if streamed != first.handle.result():
+        print(f"[daemon] FAIL: streamed {streamed} != result "
+              f"{first.handle.result()}")
+        return False
+    s = eng.stats
+    if s.submitted != s.resolved:
+        print(f"[daemon] FAIL: submitted={s.submitted} != "
+              f"resolved={s.resolved}")
+        return False
+    cls = daemon.stats_summary()["classes"]
+    for name, row in cls.items():
+        print(f"[daemon] class={name} completed={row['completed']} "
+              f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
+    print(f"[daemon] reconciled {s.submitted} requests; "
+          f"streamed_tokens={s.streamed_tokens} "
+          f"preemptions={s.preemptions}")
+    return True
+
+
+def multihost_dryrun(args) -> int:
+    """Distributed init + global mesh + cross-process placement +
+    lowering; executes the serve loop only on backends that support
+    multiprocess computations (not CPU)."""
+    jax.distributed.initialize(coordinator_address=args.coordinator,
+                               num_processes=args.num_processes,
+                               process_id=args.process_id)
+    pid = jax.process_index()
+    n_global = len(jax.devices())
+    n_local = len(jax.local_devices())
+    print(f"[daemon:{pid}] distributed up: {args.num_processes} processes, "
+          f"{n_global} global / {n_local} local devices", flush=True)
+    from ..configs.registry import ARCHS, REDUCED
+    from ..dist import sharding as shd
+    from ..models import get_model
+    from ..serving.daemon import ServingDaemon
+    from .serve import parse_mesh
+    cfg = (REDUCED if args.reduced else ARCHS)[args.arch]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    mesh = parse_mesh(args.mesh)
+    pspecs = shd.param_specs(params, mesh)
+    gparams = shd.put_global(params, pspecs, mesh)
+    # placement check: every leaf's sharding is exactly its spec, and
+    # this process holds only shards on its own devices
+    n_leaves = n_sharded = 0
+    from jax.sharding import NamedSharding
+    for leaf, spec in zip(jax.tree.leaves(gparams), jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(
+                x, jax.sharding.PartitionSpec))):
+        n_leaves += 1
+        want = NamedSharding(mesh, spec)
+        if not leaf.sharding.is_equivalent_to(want, leaf.ndim):
+            print(f"[daemon:{pid}] FAIL: leaf sharding {leaf.sharding} "
+                  f"!= spec {want}")
+            return 1
+        if any(sh.data is None for sh in leaf.addressable_shards):
+            print(f"[daemon:{pid}] FAIL: unmaterialized local shard")
+            return 1
+        if len(leaf.addressable_shards) < leaf.sharding.num_devices:
+            n_sharded += 1
+    print(f"[daemon:{pid}] placement-ok: {n_leaves} leaves on-spec, "
+          f"{n_sharded} with non-addressable remote shards", flush=True)
+    cache = model.init_cache(cfg, args.max_batch, args.max_len)
+    gcache = shd.put_global(cache, shd.cache_specs(cache, mesh,
+                                                   shard_model=True), mesh)
+    toks = np.zeros((args.max_batch, 8), np.int32)
+    gtoks = shd.put_global(toks, shd.batch_specs(toks, mesh), mesh)
+
+    def prefill(p, c, t):
+        return model.prefill(cfg, p, c, t)
+
+    lowered = jax.jit(prefill).lower(gparams, gcache, gtoks)
+    print(f"[daemon:{pid}] lowering-ok: prefill lowered over "
+          f"mesh={dict(mesh.shape)}", flush=True)
+    if jax.default_backend() == "cpu" and args.num_processes > 1:
+        # the CPU runtime raises "Multiprocess computations aren't
+        # implemented on the CPU backend" at compile time — placement
+        # and lowering above are the verifiable dry-run surface
+        print(f"[daemon:{pid}] dry-run complete (CPU backend has no "
+              "multiprocess execution; serve loop skipped)", flush=True)
+        return 0
+    lowered.compile()
+    eng = build_engine(args, mesh=mesh)
+    with ServingDaemon(eng) as daemon:
+        ok = serve_traffic(daemon, args)
+    return 0 if ok else 1
+
+
+def smoke(args) -> int:
+    """check.sh fast path: one streamed request end to end, wall-clock,
+    with a tight timeout and a clean reconciled shutdown."""
+    from ..serving.daemon import ServingDaemon
+    t0 = time.monotonic()
+    eng = build_engine(args)
+    daemon = ServingDaemon(eng).start()
+    streamed = []
+    req = daemon.submit(np.arange(1, 9, dtype=np.int32),
+                        slo="interactive", max_new_tokens=args.max_new,
+                        stream=True)
+    try:
+        for tok in req.handle.tokens(timeout=args.timeout):
+            streamed.append(tok)
+    except TimeoutError as e:
+        print(f"[daemon] SMOKE FAIL: {e}")
+        return 1
+    daemon.shutdown(drain=True, timeout=args.timeout)
+    s = eng.stats
+    ok = (streamed == req.handle.result()
+          and len(streamed) == args.max_new
+          and s.submitted == s.resolved == 1
+          and not daemon.running)
+    if not ok:
+        print(f"[daemon] SMOKE FAIL: streamed={streamed} "
+              f"result={req.handle.result()} submitted={s.submitted} "
+              f"resolved={s.resolved} running={daemon.running}")
+        return 1
+    print(f"[daemon] smoke ok: {len(streamed)} tokens streamed "
+          f"wall-clock in {time.monotonic() - t0:.1f}s, clean shutdown")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="per-wait timeout (seconds) for streaming/"
+                         "results/drain")
+    ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each streamed token of the first "
+                         "interactive request")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: one streamed request, tight "
+                         "timeout, reconciled shutdown")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL over the GLOBAL device world")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0 (multi-host launch)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator is not None:
+        sys.exit(multihost_dryrun(args))
+    if args.smoke:
+        sys.exit(smoke(args))
+    from ..serving.daemon import ServingDaemon
+    from .serve import parse_mesh
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+    eng = build_engine(args, mesh=mesh)
+    with ServingDaemon(eng) as daemon:
+        ok = serve_traffic(daemon, args)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,11 @@ def main(argv=None) -> int:
                          "shapes are used)")
     ap.add_argument("--no-sharded", action="store_true",
                     help="skip the mesh-sharded conformance trace")
+    ap.add_argument("--fail-on-gone", action="store_true",
+                    help="exit nonzero when baseline entries are no "
+                         "longer observed (CI keeps the ledger tight: "
+                         "fixed violations must be ratcheted out with "
+                         "--update-baseline, not left as dead rows)")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
@@ -124,6 +129,13 @@ def main(argv=None) -> int:
             if any(key in line for line in regressions):
                 print(f"    detail: [{v.severity}] {key} :: "
                       f"{v.path or '<module>'}: {v.message}")
+        return 1
+    if gone and args.fail_on_gone:
+        # NOTE: only meaningful on the full sweep — a partial --configs
+        # run trivially "loses" every untraced config's entries
+        print(f"qlint: FAIL — {len(gone)} stale baseline entr(ies) "
+              f"(--fail-on-gone): re-tighten the ledger with "
+              f"--update-baseline", file=sys.stderr)
         return 1
     print(f"qlint: clean — {len(traces)} trace(s), "
           f"{len(DEFAULT_RULES)} rules, {len(violations)} baseline-known "

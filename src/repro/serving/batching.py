@@ -13,6 +13,7 @@ once, identically, for both modalities.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Set
 
 
@@ -59,6 +60,13 @@ class ServeStats:
       ``submitted == resolved`` reconciles once traffic drains.
       ``rejected`` counts submits the OverloadPolicy refused — those
       never created a handle and are NOT part of ``submitted``.
+
+    Thread-safety: the ``record_*`` mutators serialize on an internal
+    lock (not a dataclass field — ``reset()``/``fields()`` never touch
+    it), because under the serving daemon a foreign submitter thread and
+    the engine thread resolve outcomes concurrently and the read-add-set
+    increments would otherwise lose counts.  Reads (properties,
+    ``summary()``) stay lock-free snapshots.
     """
 
     submitted: int = 0
@@ -80,19 +88,26 @@ class ServeStats:
     _OUTCOMES = ("completed", "failed", "cancelled", "timed_out", "shed",
                  "rejected")
 
+    def __post_init__(self):
+        # plain attribute, not a dataclass field: reset() iterates
+        # fields() and must never swap the lock out from under a waiter
+        self._lock = threading.Lock()
+
     # -- recording -----------------------------------------------------------
     def record_batch(self, items: int, padded: int = 0,
                      capacity: Optional[int] = None,
                      bucket: Optional[int] = None) -> None:
-        self.items += items
-        self.batches += 1
-        self.padded_items += padded
-        self.capacity_items += capacity if capacity else items + padded
-        if bucket:
-            self.buckets_used.add(bucket)
+        with self._lock:
+            self.items += items
+            self.batches += 1
+            self.padded_items += padded
+            self.capacity_items += capacity if capacity else items + padded
+            if bucket:
+                self.buckets_used.add(bucket)
 
     def record_flush(self, reason: str) -> None:
-        self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
+        with self._lock:
+            self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
 
     def record_outcome(self, kind: str) -> None:
         """Count one terminal request outcome (called by the Handle state
@@ -101,24 +116,28 @@ class ServeStats:
         if kind not in self._OUTCOMES:
             raise ValueError(f"unknown outcome {kind!r}; one of "
                              f"{self._OUTCOMES}")
-        setattr(self, kind, getattr(self, kind) + 1)
+        with self._lock:
+            setattr(self, kind, getattr(self, kind) + 1)
 
     # long-lived engines must not leak: latency samples keep a sliding
     # window (percentiles reflect recent traffic, memory stays bounded)
     _MAX_LATENCY_SAMPLES = 16384
 
     def record_latency(self, ms: float) -> None:
-        self.queue_ms.append(ms)
-        if len(self.queue_ms) > self._MAX_LATENCY_SAMPLES:
-            del self.queue_ms[: self._MAX_LATENCY_SAMPLES // 2]
+        with self._lock:
+            self.queue_ms.append(ms)
+            if len(self.queue_ms) > self._MAX_LATENCY_SAMPLES:
+                del self.queue_ms[: self._MAX_LATENCY_SAMPLES // 2]
 
     def reset(self) -> None:
         """Zero every counter in place (benchmark warmup; the scheduler
         keeps its reference, so stats must reset without rebinding)."""
-        for f in dataclasses.fields(self):
-            setattr(self, f.name,
-                    f.default_factory() if f.default is dataclasses.MISSING
-                    else f.default)
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name,
+                        f.default_factory()
+                        if f.default is dataclasses.MISSING
+                        else f.default)
 
     # -- derived metrics -----------------------------------------------------
     def latency_ms(self, pct: float) -> float:

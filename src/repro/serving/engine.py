@@ -86,6 +86,13 @@ class Request:
     out_tokens: Optional[List[int]] = None
     done: bool = False
     handle: Optional[Handle] = None  # scheduler future (resolves at finish)
+    stream: bool = False             # push tokens through the handle
+    preemptible: bool = False        # slot may be evicted for higher prio
+    # preemption continuation state (restart-from-prefix): tokens decoded
+    # by earlier incarnations — the final result is out_prefix + the
+    # current incarnation's out_tokens
+    out_prefix: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
@@ -97,6 +104,8 @@ class EngineStats(ServeStats):
     prefills: int = 0
     prefill_batches: int = 0
     finished: int = 0
+    preemptions: int = 0       # slot evictions (restart-from-prefix)
+    streamed_tokens: int = 0   # tokens pushed through streaming handles
 
 
 class Engine:
@@ -207,13 +216,31 @@ class Engine:
 
     def submit(self, prompt, max_new_tokens: int = 16,
                temperature: float = 0.0,
-               deadline_ms: Optional[float] = None) -> Request:
+               deadline_ms: Optional[float] = None,
+               priority: int = 0,
+               stream: bool = False,
+               on_token: Optional[Callable[[int], None]] = None,
+               preemptible: bool = False) -> Request:
         """Enqueue one request; returns a :class:`Request` whose
         ``.handle`` resolves (or fails) at completion.
 
         ``deadline_ms``: optional per-request deadline — the request
         TIMES OUT (handle state ``TIMED_OUT``, slot freed) if it has not
         completed within that many ms of submission, queued or mid-decode.
+
+        ``priority``: higher admits first (the scheduler's priority
+        queue; FIFO within a class).  ``preemptible``: this request's
+        decode slot may be EVICTED when a strictly-higher-priority
+        request is due and no slot is free — it restarts from prefix
+        (prompt + tokens so far) at the back of its class, keeping every
+        already-decoded token.  ``stream=True`` (or passing ``on_token``,
+        which implies it) delivers each decoded token incrementally
+        through the handle — ``handle.tokens()`` / the callback — at the
+        cost of one extra device->host read per decode step shared by
+        ALL streaming slots (non-streaming requests keep the strict
+        one-transfer-per-completion invariant).  Streamed tokens are
+        pushed BEFORE the completion-time numerics check: the handle's
+        terminal state says whether the stream is trustworthy.
 
         Raises ``ValueError`` on malformed payloads — validated UP FRONT
         so bad inputs fail here with a clear message, not deep inside a
@@ -256,8 +283,12 @@ class Engine:
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
                 f" exceeds max_len ({self.T})")
         req = Request(uid=0, prompt=prompt, max_new_tokens=max_new_tokens,
-                      temperature=temperature, out_tokens=[])
-        req.handle = self.scheduler.submit(req, deadline_ms=deadline_ms)
+                      temperature=temperature, out_tokens=[],
+                      stream=bool(stream) or on_token is not None,
+                      preemptible=bool(preemptible))
+        req.handle = self.scheduler.submit(req, deadline_ms=deadline_ms,
+                                           priority=priority,
+                                           on_token=on_token)
         req.uid = req.handle.uid
         return req
 
@@ -375,7 +406,9 @@ class Engine:
         while True:
             free = [i for i, r in enumerate(self.slots) if r is None]
             if not free:
-                return
+                if not self._maybe_preempt():
+                    return
+                continue  # the evicted slot is free for the due head
             reason = self.scheduler.due()
             if reason is None:
                 return
@@ -399,6 +432,66 @@ class Engine:
                 # handles; no slot was written, the engine keeps serving
                 for h in group:
                     h.set_exception(e)
+
+    def _maybe_preempt(self) -> bool:
+        """With every slot occupied: evict ONE preemptible lower-priority
+        decode if a strictly-higher-priority request is due at the head
+        of the queue.  Victim = lowest priority first, then most tokens
+        emitted (the continuation with the least decoding left — it
+        rejoins and retires soonest once pressure passes).
+        Returns True if a slot was freed."""
+        if self.scheduler.due() is None:
+            return False
+        head = self.scheduler.peek(1)
+        if not head:
+            return False
+        want = head[0].priority
+        victims = []
+        for slot, req in enumerate(self.slots):
+            if (req is None or not req.preemptible or req.handle is None
+                    or req.handle.done()
+                    or req.handle.priority >= want):
+                continue
+            victims.append((req.handle.priority, -self._emitted[slot], slot))
+        if not victims:
+            return False
+        self._preempt_slot(min(victims)[2])
+        return True
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict one in-flight decode, restart-from-prefix: fold the
+        tokens decoded so far into the request's prompt (prompt grows,
+        ``max_new_tokens`` shrinks — their sum is invariant, so the
+        ``<= max_len`` admission check still holds) and requeue the SAME
+        handle at the back of its priority class.  One device->host read
+        of the victim's token row per eviction (preemption is rare and
+        off the per-step hot path).  A victim whose sticky numerics flag
+        already tripped is failed instead — releasing its slot would
+        clear the flag and the restart would launder poisoned tokens
+        into the continuation's prompt."""
+        req = self.slots[slot]
+        h = req.handle
+        emitted = self._emitted[slot]
+        if self.check_numerics and bool(
+                jax.device_get(self._nonfinite[slot])):
+            h.set_exception(NumericalError(
+                f"request {h.uid} produced non-finite logits during "
+                "decode (caught at preemption); its tokens are not "
+                "trustworthy and were not delivered"))
+            self._release_slot(slot)
+            return
+        toks = np.asarray(jax.device_get(self._outbuf[slot, :emitted]))
+        decoded = [int(t) for t in toks]
+        req.out_prefix.extend(decoded)
+        req.prompt = np.concatenate(
+            [req.prompt, toks.astype(np.int32)])
+        # emitted < max_new_tokens always holds here (a slot at its
+        # budget retired in _finish_done), so the remainder stays >= 1
+        req.max_new_tokens -= emitted
+        req.preemptions += 1
+        self.stats.preemptions += 1
+        self._release_slot(slot)
+        self.scheduler.requeue(h)
 
     def _prefill_group(self, gslots: List[int], handles: List[Handle]):
         greqs = [h.payload for h in handles]
@@ -447,6 +540,14 @@ class Engine:
             self._emitted[s] = 1
         self.stats.prefills += len(greqs)
         self.stats.prefill_batches += 1
+        if any(r.stream for r in greqs):
+            # streamers pay one extra d2h per prefill group for their
+            # prefill-sampled first token; non-streamers keep the strict
+            # one-transfer-per-completion invariant
+            fv = np.asarray(jax.device_get(first))
+            for i, (r, h) in enumerate(zip(greqs, handles)):
+                if r.stream and h.push_token(int(fv[i])):
+                    self.stats.streamed_tokens += 1
         # unified queue-level accounting: real prompt tokens vs the padded
         # (n, pmax) prefill actually executed
         self.stats.record_batch(items=int(lens.sum()),
@@ -509,7 +610,9 @@ class Engine:
                 continue
             toks = np.asarray(
                 jax.device_get(self._outbuf[slot, : req.max_new_tokens]))
-            req.out_tokens = [int(t) for t in toks]
+            # out_prefix carries tokens from pre-preemption incarnations;
+            # the delivered result is always the full decoded sequence
+            req.out_tokens = req.out_prefix + [int(t) for t in toks]
             req.done = True
             delivered = True
             if h is not None:
@@ -559,8 +662,26 @@ class Engine:
         self.stats.decoded_tokens += len(live)
         for slot in live:
             self._emitted[slot] += 1
+        self._stream_live(live)
         self._finish_done()
         return len(live)
+
+    def _stream_live(self, live: List[int]) -> None:
+        """Push this step's sampled token into every live STREAMING
+        slot's handle.  Costs one device->host read of the pending-token
+        vector per step, shared across all streaming slots, and nothing
+        at all when no live slot streams — the one-transfer-per-
+        completion invariant is intact for non-streaming traffic."""
+        streamers = [
+            s for s in live
+            if self.slots[s] is not None and self.slots[s].stream
+            and self.slots[s].handle is not None]
+        if not streamers:
+            return
+        pend = np.asarray(jax.device_get(self._pending))
+        for s in streamers:
+            if self.slots[s].handle.push_token(int(pend[s])):
+                self.stats.streamed_tokens += 1
 
     def _poison_slot(self, slot: int) -> None:
         """NaN-poison ONE slot's KV-cache rows (the fault injector's

@@ -129,6 +129,17 @@ def test_serving_bench_smoke_rows():
     # the policy responds to load: higher arrival rate -> fuller batches
     occ = [r["batch_occupancy"] for r in rep["vision"]]
     assert occ[-1] >= occ[0]
+    # ISSUE 8: wall-clock per-SLO-class daemon rows — one per class,
+    # outcomes reconciled, interactive tier measurably faster than batch
+    classes = {r["slo_class"]: r for r in rep["daemon"]}
+    assert set(classes) == {"interactive", "batch"}
+    for row in rep["daemon"]:
+        assert row["engine"] == "daemon" and row["wall_s"] > 0
+        assert row["completed"] == row["submitted"] > 0
+        assert 0.0 < row["p50_ms"] <= row["p99_ms"]
+        assert 0.0 < row["batch_occupancy"] <= 1.0
+    assert (classes["interactive"]["p99_ms"]
+            < classes["batch"]["p99_ms"])
     # fault-rate scenarios: faults actually fired, goodput accounts for
     # the failures, and the engines RECOVERED (every handle resolved)
     assert rep["faults"]
@@ -141,6 +152,38 @@ def test_serving_bench_smoke_rows():
             row["completed"] / row["submitted"], abs=1e-3)
         assert (row["completed"] + row["failed"] + row["cancelled"]
                 + row["timed_out"] + row["shed"]) == row["submitted"]
+
+
+def test_accel_sim_consumes_serving_bench_occupancy():
+    """ISSUE 8 satellite: the committed BENCH_serving.json feeds the
+    simulator a measured serving calibration — occupancy from the
+    highest-rate (steady-state) row derates device latency into a
+    served latency, queue percentiles add the measured wait — while
+    every device-level column stays put."""
+    cal = A.ServingCalibration.from_bench_json()
+    assert 0.0 < cal.occupancy <= 1.0
+    assert 0.0 <= cal.queue_p50_ms <= cal.queue_p99_ms
+    A.set_calibration()
+    layers = A.efficientvit_layers(**A.EFFICIENTVIT_CONFIGS["b1-r224"])
+    base = A.simulate(layers, "m2q")
+    assert base.served_latency_ms is None  # opt-in column
+    served = A.simulate(layers, "m2q", serving_cal=cal)
+    # device columns untouched; served latency >= device latency
+    assert served.latency_ms == base.latency_ms
+    assert served.energy_uj == pytest.approx(base.energy_uj)
+    assert served.served_latency_ms >= served.latency_ms
+    assert served.served_p99_latency_ms >= served.served_latency_ms
+    assert served.served_latency_ms == pytest.approx(
+        base.latency_ms / cal.occupancy + cal.queue_p50_ms)
+    # composes with the kernel calibration on the same call
+    kcal = A.KernelCalibration.from_bench_json()
+    both = A.simulate(layers, "m2q", kernel_cal=kcal, serving_cal=cal)
+    assert both.served_latency_ms == pytest.approx(
+        both.latency_ms / cal.occupancy + cal.queue_p50_ms)
+    # a malformed occupancy fails loudly, not as a silent div-by-zero
+    with pytest.raises(ValueError, match="occupancy"):
+        A.ServingCalibration(occupancy=0.0, queue_p50_ms=0.0,
+                             queue_p99_ms=0.0)
 
 
 @pytest.mark.slow

@@ -1,0 +1,539 @@
+"""Wall-clock serving daemon: streaming handles, SLO classes, preemption,
+thread-safe scheduler core, and the multi-host launch dry-run.
+
+Unit layers (FakeClock, no engine) cover the priority queue, the
+per-class flush policy, and the Handle condition-variable machinery;
+the wall-clock layers drive a real reduced token engine through
+:class:`repro.serving.daemon.ServingDaemon` from foreign threads.
+"""
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import REDUCED
+from repro.models import get_model
+from repro.serving.batching import ServeStats
+from repro.serving.daemon import ServingDaemon
+from repro.serving.errors import QueueFullError
+from repro.serving.scheduler import (FLUSH_DEADLINE, FlushPolicy, Handle,
+                                     OverloadPolicy, PENDING, Scheduler)
+from repro.serving.slo import (BATCH, INTERACTIVE, ClassFlushPolicy,
+                               SLOClass, classes_by_name)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1000.0
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = REDUCED["qwen1.5-0.5b"]
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(lm, **kw):
+    from repro.serving.engine import Engine
+    cfg, params = lm
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    return Engine(cfg, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Handle: event-based waits, streaming, done-callbacks
+# ---------------------------------------------------------------------------
+
+
+def test_handle_result_wakeup_is_event_based_not_sleep_polled():
+    """Satellite bugfix: ``result(timeout=)`` must wake on the resolver's
+    notify, not on a sleep-poll tick — no ``time.sleep`` in the wait path
+    and wakeup latency far below the old 0.5 ms poll interval x jitter."""
+    h = Handle(uid=0, payload=None, submitted_at=0.0)
+    resolved_at = []
+    go = threading.Event()
+
+    def resolver():
+        go.wait(5.0)
+        resolved_at.append(time.monotonic())
+        h.set_result([42])
+
+    slept = []
+    real_sleep = time.sleep
+    time.sleep = lambda s: (slept.append(s), real_sleep(s))
+    try:
+        t = threading.Thread(target=resolver)
+        t.start()
+        go.set()
+        out = h.result(timeout=5.0)
+        woke_at = time.monotonic()
+        t.join()
+    finally:
+        time.sleep = real_sleep
+    assert out == [42]
+    assert not slept, f"result() wait still sleep-polls: {slept}"
+    assert woke_at - resolved_at[0] < 0.2  # event wakeup, not a poll tick
+    # and the timeout path still raises
+    h2 = Handle(uid=1, payload=None, submitted_at=0.0)
+    with pytest.raises(TimeoutError):
+        h2.result(timeout=0.01)
+
+
+def test_handle_streaming_iterator_and_callbacks():
+    h = Handle(uid=7, payload=None, submitted_at=0.0)
+    via_cb = []
+    h._on_token = via_cb.append
+    assert h.push_token(1) and h.push_token(2)
+    assert h.streamed == 2
+
+    got = []
+
+    def consumer():
+        got.extend(h.tokens(timeout=5.0))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    h.push_token(3)
+    h.set_result([1, 2, 3])
+    t.join(5.0)
+    assert got == [1, 2, 3] and via_cb == [1, 2, 3]
+    assert not h.push_token(9)  # dropped after terminal
+    assert h.streamed == 3
+    # a fresh iterator over a DONE handle drains the buffer then ends
+    assert list(h.tokens(timeout=1.0)) == [1, 2, 3]
+
+
+def test_handle_streaming_failure_truncates_stream():
+    h = Handle(uid=8, payload=None, submitted_at=0.0)
+    h.push_token(5)
+    h.set_exception(RuntimeError("poisoned"))
+    it = h.tokens(timeout=1.0)
+    assert next(it) == 5  # already-delivered tokens stand
+    with pytest.raises(RuntimeError, match="poisoned"):
+        next(it)
+    # iterator timeout raises rather than hanging when nothing resolves
+    h2 = Handle(uid=9, payload=None, submitted_at=0.0)
+    with pytest.raises(TimeoutError):
+        next(h2.tokens(timeout=0.01))
+
+
+def test_handle_done_callbacks_fire_once_and_swallow_errors():
+    h = Handle(uid=3, payload=None, submitted_at=0.0)
+    calls = []
+    h.add_done_callback(lambda hh: calls.append(hh.state))
+    h.add_done_callback(lambda hh: 1 / 0)  # must not break the resolver
+    assert h.set_result([1])
+    assert not h.set_result([2])  # terminal is sticky, no second fire
+    assert calls == ["DONE"]
+    # late registration on a terminal handle fires immediately
+    h.add_done_callback(lambda hh: calls.append("late"))
+    assert calls == ["DONE", "late"]
+    # on_token exceptions are swallowed too
+    h2 = Handle(uid=4, payload=None, submitted_at=0.0)
+    h2._on_token = lambda tok: 1 / 0
+    assert h2.push_token(1)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: priorities, requeue, thread-safety
+# ---------------------------------------------------------------------------
+
+
+def test_priority_insertion_fifo_within_class():
+    clk = FakeClock()
+    s = Scheduler(policy=FlushPolicy(max_batch=16, max_delay_ms=0.0),
+                  clock=clk)
+    a = s.submit("a")                      # prio 0
+    b = s.submit("b", priority=5)
+    c = s.submit("c", priority=5)          # FIFO behind b within prio 5
+    d = s.submit("d", priority=1)
+    assert [h.payload for h in s.peek(10)] == ["b", "c", "d", "a"]
+    assert [h.priority for h in (a, b, c, d)] == [0, 5, 5, 1]
+
+
+def test_shed_oldest_picks_lowest_priority_class():
+    clk = FakeClock()
+    s = Scheduler(policy=FlushPolicy(max_batch=16, max_delay_ms=None),
+                  overload=OverloadPolicy(max_queue=3, shed_oldest=True),
+                  clock=clk)
+    low1 = s.submit("low1")
+    s.submit("hi", priority=9)
+    low2 = s.submit("low2")
+    s.submit("hi2", priority=9)  # queue full: sheds oldest LOW, not hi
+    assert low1.state == "FAILED" and isinstance(low1.exception(),
+                                                 QueueFullError)
+    assert low2.state == PENDING
+    assert s.stats.shed == 1 and s.stats.submitted == 4
+    assert [h.payload for h in s.peek(10)] == ["hi", "hi2", "low2"]
+
+
+def test_requeue_reenters_without_new_submit_count():
+    clk = FakeClock()
+    s = Scheduler(policy=FlushPolicy(max_batch=4, max_delay_ms=0.0),
+                  clock=clk)
+    h = s.submit("x", priority=2)
+    [live] = s.pop([h], "full")
+    assert s.pending == 0 and s.stats.submitted == 1
+    clk.advance_ms(30)
+    assert s.requeue(h)
+    assert s.pending == 1 and s.stats.submitted == 1  # no double-count
+    assert h.submitted_at == pytest.approx(0.030)     # wait clock reset
+    h.cancel()
+    assert not s.requeue(h)  # terminal handles never re-enter
+    assert s.stats.submitted == s.stats.resolved == 1
+
+
+def test_scheduler_thread_safety_stress():
+    """Satellite: N submitter threads + one consumer loop against one
+    Scheduler — uids stay unique, every handle goes terminal, and the
+    reconciliation invariant holds EXACTLY under shedding, cancellation,
+    deadline expiry, and concurrent pops."""
+    s = Scheduler(policy=FlushPolicy(max_batch=4, max_delay_ms=0.0),
+                  overload=OverloadPolicy(max_queue=64, shed_oldest=True))
+    N_THREADS, PER_THREAD = 8, 60
+    all_handles = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def submitter(seed):
+        rng = np.random.default_rng(seed)
+        mine = []
+        for i in range(PER_THREAD):
+            kw = {}
+            r = rng.random()
+            if r < 0.15:
+                kw["deadline_ms"] = 0.5  # most of these expire queued
+            h = s.submit(f"{seed}/{i}", priority=int(rng.integers(0, 3)),
+                         **kw)
+            mine.append(h)
+            if r > 0.9:
+                h.cancel()
+        with lock:
+            all_handles.extend(mine)
+
+    def consumer():
+        while True:
+            reason = s.due()
+            if reason is not None:
+                batch = s.pop(s.peek(4), reason)
+                for h in batch:
+                    h.set_result("ok")
+            elif stop.is_set() and s.pending == 0:
+                return
+
+    cons = threading.Thread(target=consumer)
+    cons.start()
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    stop.set()
+    cons.join(30.0)
+    assert not cons.is_alive()
+    assert len(all_handles) == N_THREADS * PER_THREAD
+    uids = [h.uid for h in all_handles]
+    assert len(set(uids)) == len(uids)
+    assert all(h.state != PENDING for h in all_handles)
+    st = s.stats
+    assert st.submitted == N_THREADS * PER_THREAD
+    assert (st.completed + st.failed + st.cancelled + st.timed_out
+            + st.shed) == st.submitted
+    # outcome counters match the handles' own terminal states
+    from collections import Counter
+    states = Counter(h.state for h in all_handles)
+    assert st.completed == states["DONE"]
+    assert st.timed_out == states["TIMED_OUT"]
+    assert st.cancelled == states["CANCELLED"]
+    assert st.failed + st.shed == states["FAILED"]
+
+
+def test_servestats_record_outcome_is_thread_safe():
+    st = ServeStats()
+    N, PER = 8, 2000
+
+    def bump():
+        for _ in range(PER):
+            st.record_outcome("completed")
+
+    ts = [threading.Thread(target=bump) for _ in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert st.completed == N * PER  # read-add-set would lose counts
+
+
+# ---------------------------------------------------------------------------
+# SLO classes and the per-class flush policy
+# ---------------------------------------------------------------------------
+
+
+def test_slo_class_validation_and_registry():
+    with pytest.raises(ValueError, match="max_delay_ms"):
+        SLOClass(name="x", max_delay_ms=-1.0)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        SLOClass(name="x", deadline_ms=0)
+    with pytest.raises(ValueError, match="max_queued"):
+        SLOClass(name="x", max_queued=0)
+    with pytest.raises(ValueError, match="duplicate"):
+        classes_by_name([INTERACTIVE, SLOClass(name="interactive")])
+    assert INTERACTIVE.priority > BATCH.priority
+    assert BATCH.preemptible and not INTERACTIVE.preemptible
+
+
+def test_class_flush_policy_per_priority_deadlines():
+    clk = FakeClock()
+    pol = ClassFlushPolicy.from_classes([INTERACTIVE, BATCH], max_batch=8)
+    s = Scheduler(policy=pol, clock=clk)
+    # batch alone: due only after ITS 25ms coalescing window
+    s.submit("b0", priority=BATCH.priority)
+    assert s.due() is None
+    nd = s.next_deadline()
+    assert nd == pytest.approx(0.025)
+    clk.t = nd  # sleeping EXACTLY until next_deadline() IS due
+    assert s.due() == FLUSH_DEADLINE
+    s.pop(s.peek(8), FLUSH_DEADLINE)
+    # an interactive arrival makes the queue due immediately
+    s.submit("b1", priority=BATCH.priority)
+    assert s.due() is None
+    s.submit("i0", priority=INTERACTIVE.priority)
+    assert s.due() == FLUSH_DEADLINE
+    # and peek admits the interactive request first
+    assert [h.payload for h in s.peek(8)] == ["i0", "b1"]
+
+
+def test_class_flush_policy_unknown_priority_admits_immediately():
+    clk = FakeClock()
+    pol = ClassFlushPolicy.from_classes([BATCH], max_batch=8)
+    s = Scheduler(policy=pol, clock=clk)
+    s.submit("stranger", priority=42)  # not a configured tier
+    assert s.due() == FLUSH_DEADLINE  # fail toward latency
+
+
+# ---------------------------------------------------------------------------
+# engine-level: streaming decode + preemption (manual drive, no daemon)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_streaming_tokens_match_result(lm):
+    eng = _engine(lm, max_batch=2)
+    via_cb = []
+    r = eng.submit(np.arange(1, 9), max_new_tokens=5, stream=True,
+                   on_token=via_cb.append)
+    eng.run()
+    assert r.handle.result() == via_cb
+    assert list(r.handle.tokens(timeout=1.0)) == via_cb
+    assert len(via_cb) == 5
+    assert eng.stats.streamed_tokens == 5
+    # non-streaming requests pay no streaming d2h and no stream buffer
+    r2 = eng.submit(np.arange(1, 5), max_new_tokens=3)
+    eng.run()
+    assert r2.handle.streamed == 0 and len(r2.handle.result()) == 3
+
+
+def test_engine_preemption_restart_from_prefix(lm):
+    eng = _engine(lm, max_batch=1)
+    low = eng.submit(np.arange(1, 7), max_new_tokens=8, stream=True,
+                     priority=BATCH.priority, preemptible=True)
+    eng.step()  # prefill + first decode
+    eng.step()
+    pre_preempt = list(low.handle._stream)
+    assert len(pre_preempt) >= 2
+    hi = eng.submit(np.arange(1, 5), max_new_tokens=3,
+                    priority=INTERACTIVE.priority)
+    eng.run()
+    assert eng.stats.preemptions >= 1
+    assert low.preemptions >= 1
+    # the high-priority request took the only slot and finished
+    assert len(hi.handle.result()) == 3
+    # the preempted request kept every pre-eviction token and completed
+    # its full budget: result = streamed tokens, prefix preserved
+    out = low.handle.result()
+    assert len(out) == 8
+    assert out[: len(pre_preempt)] == pre_preempt
+    assert out == list(low.handle.tokens(timeout=1.0))
+    s = eng.stats
+    assert s.submitted == s.resolved == 2  # requeue never double-counts
+
+
+def test_engine_nonpreemptible_is_never_evicted(lm):
+    eng = _engine(lm, max_batch=1)
+    low = eng.submit(np.arange(1, 7), max_new_tokens=4,
+                     priority=0, preemptible=False)
+    eng.step()
+    eng.submit(np.arange(1, 5), max_new_tokens=2,
+               priority=INTERACTIVE.priority)
+    eng.run()
+    assert eng.stats.preemptions == 0
+    assert len(low.handle.result()) == 4
+
+
+# ---------------------------------------------------------------------------
+# the daemon: wall-clock e2e
+# ---------------------------------------------------------------------------
+
+
+def test_daemon_rejects_virtual_clock(lm):
+    eng = _engine(lm, clock=FakeClock())
+    with pytest.raises(ValueError, match="real clock"):
+        ServingDaemon(eng)
+
+
+def test_daemon_e2e_slo_classes_streaming_and_reconciliation(lm):
+    """ISSUE 8 acceptance: daemon running, interactive + batch submitted
+    from a foreign thread under load, tokens stream incrementally
+    through the Handle API, interactive p99 < batch p99 (per-class
+    ServeStats), clean drain with every outcome reconciled."""
+    eng = _engine(lm, max_batch=2)
+    daemon = ServingDaemon(eng)
+    results = []
+
+    with daemon:
+        # saturate the 2 slots with slow preemptible batch work first
+        def submitter():
+            for _ in range(6):
+                results.append(daemon.submit(
+                    np.arange(1, 7), slo="batch", max_new_tokens=16))
+
+        th = threading.Thread(target=submitter)
+        th.start()
+        th.join()
+        # interactive traffic arrives while every slot is busy
+        incremental = []
+        stream_req = daemon.submit(
+            np.arange(1, 9), slo="interactive", max_new_tokens=4,
+            stream=True,
+            on_token=lambda tok: incremental.append(
+                (tok, stream_req.handle.done())))
+        for _ in range(2):
+            results.append(daemon.submit(
+                np.arange(1, 6), slo="interactive", max_new_tokens=4))
+        streamed = list(stream_req.handle.tokens(timeout=120.0))
+        results.append(stream_req)
+        for r in results:
+            r.handle.result(timeout=120.0)
+    # incremental delivery: every token was pushed while still PENDING
+    assert streamed == stream_req.handle.result()
+    assert len(incremental) == 4
+    assert all(not done for _, done in incremental)
+    # per-class SLO: interactive completion latency beats batch
+    inter = daemon.class_stats["interactive"]
+    batch = daemon.class_stats["batch"]
+    assert inter.submitted == 3 and batch.submitted == 6
+    assert inter.completed == 3 and batch.completed == 6
+    assert inter.p99_ms < batch.p99_ms
+    # clean shutdown: loop exited, every outcome reconciled exactly
+    assert not daemon.running
+    s = eng.stats
+    assert s.submitted == 9
+    assert s.resolved == s.submitted
+    assert s.completed == 9
+
+
+def test_daemon_class_budget_rejects_over_outstanding(lm):
+    eng = _engine(lm, max_batch=1)
+    tight = (SLOClass(name="interactive", priority=10, max_delay_ms=0.0),
+             SLOClass(name="batch", priority=0, max_delay_ms=5.0,
+                      max_queued=1, preemptible=True))
+    with ServingDaemon(eng, classes=tight) as daemon:
+        first = daemon.submit(np.arange(1, 9), slo="batch",
+                              max_new_tokens=12)
+        with pytest.raises(QueueFullError, match="budget exhausted"):
+            daemon.submit(np.arange(1, 9), slo="batch", max_new_tokens=4)
+        with pytest.raises(KeyError, match="unknown SLO class"):
+            daemon.submit(np.arange(1, 9), slo="nope")
+        first.handle.result(timeout=120.0)
+        # budget freed at completion: the class admits again
+        second = daemon.submit(np.arange(1, 9), slo="batch",
+                               max_new_tokens=2)
+        second.handle.result(timeout=120.0)
+    assert daemon.class_stats["batch"].rejected == 1
+    assert daemon.class_stats["batch"].completed == 2
+    s = eng.stats
+    assert s.submitted == s.resolved == 2  # rejected never submitted
+
+
+def test_daemon_shutdown_drain_false_cancels_outstanding(lm):
+    eng = _engine(lm, max_batch=1)
+    daemon = ServingDaemon(eng).start()
+    reqs = [daemon.submit(np.arange(1, 7), slo="batch", max_new_tokens=40)
+            for _ in range(3)]
+    daemon.shutdown(drain=False)
+    assert not daemon.running
+    s = eng.stats
+    assert all(r.handle.done() for r in reqs)
+    assert s.submitted == 3 and s.resolved == 3
+    assert s.cancelled >= 1  # at least the queued ones were cancelled
+    with pytest.raises(RuntimeError, match="daemon is stopped"):
+        daemon.submit(np.arange(1, 5))
+
+
+def test_daemon_idle_sleep_wakes_on_submit(lm):
+    """The serve loop sleeps (no work) and a foreign-thread submit must
+    wake it promptly — the whole point of the condition-variable loop."""
+    eng = _engine(lm, max_batch=2)
+    with ServingDaemon(eng) as daemon:
+        time.sleep(0.3)  # let the loop go idle (indefinite wait)
+        t0 = time.monotonic()
+        r = daemon.submit(np.arange(1, 5), slo="interactive",
+                          max_new_tokens=2)
+        r.handle.result(timeout=120.0)
+        # generous bound: includes one jitted-step execution, but NOT an
+        # unbounded poll interval — an unwoken loop would hang forever
+        assert time.monotonic() - t0 < 60.0
+    assert eng.stats.completed == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-host mesh launch (subprocess dry-run idiom)
+# ---------------------------------------------------------------------------
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.slow
+def test_multihost_daemon_launch_dryrun():
+    """Two processes x 4 virtual CPU devices join one jax.distributed
+    world; each verifies the global 2x4 mesh, spec-conformant
+    cross-process placement via dist.sharding.put_global, and lowering
+    of the prefill computation (execution is gated off on the CPU
+    backend, which cannot run multiprocess programs)."""
+    import os
+    port = _free_port()
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src")
+    cmd = [sys.executable, "-m", "repro.launch.daemon",
+           "--arch", "qwen1.5-0.5b", "--reduced", "--no-quant",
+           "--mesh", "2x4", "--coordinator", f"127.0.0.1:{port}",
+           "--num-processes", "2"]
+    procs = [subprocess.Popen(cmd + ["--process-id", str(i)],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.STDOUT, text=True, env=env)
+             for i in range(2)]
+    outs = [p.communicate(timeout=420)[0] for p in procs]
+    for i, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"process {i}:\n{out[-3000:]}"
+        assert f"[daemon:{i}] placement-ok" in out, out[-2000:]
+        assert f"[daemon:{i}] lowering-ok" in out, out[-2000:]
+        assert "8 global / 4 local devices" in out

@@ -317,6 +317,39 @@ def test_committed_baseline_is_loadable_and_canonical():
         assert q.read_text() == p.read_text()
 
 
+def test_qlint_cli_fail_on_gone(tmp_path, monkeypatch, capsys):
+    """ISSUE 8 satellite: ``--fail-on-gone`` turns stale ledger rows into
+    a CI failure (the ratchet must be re-tightened with
+    --update-baseline), while a ledger the run still reproduces stays
+    green with the flag on.  Traces/rules are monkeypatched — this tests
+    the CLI contract, not the (slow) HLO sweep."""
+    from repro.launch import qlint as Q
+
+    class FakeTrace:
+        name = "t/a"
+
+    monkeypatch.setattr(Q, "build_traces",
+                        lambda configs, sharded=True, **kw: [FakeTrace()])
+    p = tmp_path / "base.json"
+
+    # run with one real violation -> write the ledger via the CLI
+    monkeypatch.setattr(Q, "run_rules",
+                        lambda tr: (_viol("t/a", "no-f32-dot", ""), []))
+    assert Q.main(["--baseline", str(p), "--update-baseline"]) == 0
+    # the run still reproduces the ledger: clean either way
+    assert Q.main(["--baseline", str(p)]) == 0
+    assert Q.main(["--baseline", str(p), "--fail-on-gone"]) == 0
+    # the violation disappears: advisory by default, FAIL under the flag
+    monkeypatch.setattr(Q, "run_rules", lambda tr: ([], []))
+    assert Q.main(["--baseline", str(p)]) == 0
+    assert Q.main(["--baseline", str(p), "--fail-on-gone"]) == 1
+    assert "re-tighten" in capsys.readouterr().err
+    # a NEW violation still beats the gone-check (exit 1 either way)
+    monkeypatch.setattr(Q, "run_rules",
+                        lambda tr: (_viol("t/a", "conv-budget", "w"), []))
+    assert Q.main(["--baseline", str(p), "--fail-on-gone"]) == 1
+
+
 def test_registry_trace_names_and_rule_expectations():
     """One real registry sweep entry end-to-end (the cheapest vision
     config): trace names are stable keys and the m2q forward carries the
