@@ -151,10 +151,14 @@ class KernelCalibration:
     """
 
     pw_speedup: float    # geomean fused-vs-f32 wall-clock ratio, PWConv rows
-    dw_speedup: float    # same, DWConv rows
+    dw_speedup: float    # same, DWConv rows (7x7 late-stage AND the
+    #                      R256/R384 H-tiled high-resolution rows)
     attn_speedup: float  # same, MSA relu-attention rows (attn section)
     backend: str = ""
     source: str = ""
+    n_pw: int = 0        # rows behind each geomean — a calibration from a
+    n_dw: int = 0        # single pair is legal but worth seeing in reports
+    n_attn: int = 0
 
     @classmethod
     def from_bench_json(cls, path=None) -> "KernelCalibration":
@@ -163,7 +167,7 @@ class KernelCalibration:
         conv = data.get("conv") or {}
         attn = data.get("attn") or {}
 
-        def geomean_ratio(rows, prefix: str, baseline: str) -> float:
+        def geomean_ratio(rows, prefix: str, baseline: str):
             logs = []
             for name, row in rows.items():
                 base, _, variant = name.partition("/")
@@ -176,14 +180,14 @@ class KernelCalibration:
                 raise ValueError(
                     f"{path} has no '{prefix}*' fused/{baseline} "
                     "wall-clock pairs (re-run benchmarks.kernel_bench)")
-            return math.exp(sum(logs) / len(logs))
+            return math.exp(sum(logs) / len(logs)), len(logs)
 
-        return cls(pw_speedup=geomean_ratio(conv, "pwconv",
-                                            "f32_dequant_conv"),
-                   dw_speedup=geomean_ratio(conv, "dwconv",
-                                            "f32_dequant_conv"),
-                   attn_speedup=geomean_ratio(attn, "msa", "f32"),
-                   backend=str(data.get("backend", "")), source=str(path))
+        pw, n_pw = geomean_ratio(conv, "pwconv", "f32_dequant_conv")
+        dw, n_dw = geomean_ratio(conv, "dwconv", "f32_dequant_conv")
+        at, n_at = geomean_ratio(attn, "msa", "f32")
+        return cls(pw_speedup=pw, dw_speedup=dw, attn_speedup=at,
+                   backend=str(data.get("backend", "")), source=str(path),
+                   n_pw=n_pw, n_dw=n_dw, n_attn=n_at)
 
     def derate(self, kind: str, ideal_speedup: float) -> float:
         """Cycle multiplier for one layer: >1 when the measured kernel

@@ -230,20 +230,30 @@ def collect(shape=(128, 128, 128), iters: int = 3) -> dict:
                 xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC")), (xc4,), iters)
 
-    for name, k, ch in (("dwconv3x3_b1", 3, 256), ("dwconv5x5_b2", 5, 1152)):
+    # late-stage widths at a 7x7 map, plus high-resolution maps (R256
+    # stride-1, R384 stride-2 with in-kernel SAME padding) that the old
+    # whole-map VMEM guard used to bounce to the XLA fallback — these rows
+    # pin the H-tiled kernel's wall-clock and feed the accel-sim dw
+    # calibration across the resolution range
+    for name, k, ch, hw, s in (("dwconv3x3_b1", 3, 256, 7, 1),
+                               ("dwconv5x5_b2", 5, 1152, 7, 1),
+                               ("dwconv3x3_r256", 3, 32, 256, 1),
+                               ("dwconv3x3_r384", 3, 32, 384, 2)):
         wdw = rng.normal(0, 0.2, (k * k, ch)).astype(np.float32)
         udw = uniform_quantize(jnp.asarray(wdw), bits=4, axis=-1)
         qdw = QUniform(payload=pack_int4(udw.q), scale=udw.scale,
                        zero_point=udw.zero_point, act_scale=None, bits=4,
                        axis=1, shape=(k, k, 1, ch))
-        xdw = jnp.asarray(rng.normal(0, 1, (1, 7, 7, ch)).astype(np.float32))
+        xdw = jnp.asarray(
+            rng.normal(0, 1, (1, hw, hw, ch)).astype(np.float32))
         with ops.dispatch(conv=True):
             report["conv"][f"{name}/fused"] = _bench_one(
-                name, lambda xx, q=qdw: nn.dwconv2d(xx, q), (xdw,), iters)
+                name, lambda xx, q=qdw, st=s: nn.dwconv2d(xx, q, stride=st),
+                (xdw,), iters)
         report["conv"][f"{name}/f32_dequant_conv"] = _bench_one(
-            name, lambda xx, q=qdw: jax.lax.conv_general_dilated(
-                xx, q.dequant(jnp.float32).reshape(q.shape), (1, 1), "SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            name, lambda xx, q=qdw, st=s: jax.lax.conv_general_dilated(
+                xx, q.dequant(jnp.float32).reshape(q.shape), (st, st),
+                "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
                 feature_group_count=ch), (xdw,), iters)
 
     # --- attention: fused Pallas vs XLA-int8 vs f32 ------------------------

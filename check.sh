@@ -14,8 +14,10 @@
 # on NEW violations AND (--fail-on-gone) on stale ledger rows, keeping
 # the ratchet tight in both directions.  The daemon smoke stage streams
 # one real wall-clock request through the background serve loop
-# (docs/serving.md).  The full tier-1 gate remains ./test.sh with no
-# -m filter.
+# (docs/serving.md).  The autotune sweep smoke asserts the committed
+# CI-shape cache is complete — serving traces must be pure cache hits,
+# zero tuning probes (docs/kernels.md).  The full tier-1 gate remains
+# ./test.sh with no -m filter.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -48,6 +50,9 @@ fi
 
 echo "== qlint (HLO invariant sweep vs results/qlint_baseline.json)"
 PYTHONPATH=src python -m repro.launch.qlint --baseline results/qlint_baseline.json --fail-on-gone
+
+echo "== autotune sweep smoke (committed CI-shape cache complete, zero tuning probes)"
+PYTHONPATH=src python -m repro.launch.autotune_sweep --smoke --cache results/autotune/cpu.json
 
 echo "== serving daemon smoke (wall-clock streamed request, clean shutdown)"
 PYTHONPATH=src python -m repro.launch.daemon --arch qwen1.5-0.5b --reduced \

@@ -103,13 +103,25 @@ def _int8_kv_cfg(cfg):
     return None
 
 
-def registry_traces(arch: str, *, batch: int = 2, prefill_len: int = 32,
-                    decode_len: int = 64,
-                    recipes: Sequence[str] = ("m2q-w8a8", "uniform8"),
-                    ) -> List[Trace]:
-    """The qlint trace set for one registry config (reduced shapes).
+# extra input resolutions traced for vision configs under the m2q recipe
+# (batch 1 — the latency-bound serving shape).  The stem is stride-2, so
+# R384/R512 inputs put 192x192 and 256x256 maps through every depthwise
+# layer: both beyond the old whole-map VMEM guard, and the conv-budget
+# rule holds the H-tiled kernel to ZERO XLA fallback convolutions there.
+VISION_HIRES: Tuple[int, ...] = (384, 512)
 
-    Vision configs trace ``forward``; token configs trace prefill and
+
+def registry_trace_specs(arch: str, *, batch: int = 2, prefill_len: int = 32,
+                         decode_len: int = 64,
+                         recipes: Sequence[str] = ("m2q-w8a8", "uniform8"),
+                         hires: Sequence[int] = VISION_HIRES):
+    """Yield ``(name, fn, args, meta)`` for one registry config (reduced
+    shapes) — the shared hot-path enumeration behind :func:`registry_traces`
+    (lower+compile for qlint) and :func:`shape_requests` (lower-only
+    autotune shape discovery).
+
+    Vision configs trace ``forward`` at the config resolution plus each
+    ``hires`` resolution (m2q recipe only); token configs trace prefill and
     decode (with the int8-KV cache when the family supports it — the
     fully-quantized serving posture is exactly where the laundering rules
     matter).  Each recipe gets its own trace set; ``uniform8`` traces
@@ -119,27 +131,31 @@ def registry_traces(arch: str, *, batch: int = 2, prefill_len: int = 32,
     """
     cfg = _resolve_reduced(arch)
     model = get_model(cfg)
-    traces: List[Trace] = []
     for recipe in recipes:
         rtag = {"m2q-w8a8": "m2q", "uniform8": "u8"}.get(recipe, recipe)
         no_f32 = recipe == "uniform8"
         if cfg.family == "efficientvit":
-            qp = abstract_quantize(cfg, recipe=recipe,
-                                   tokens_per_step=batch)
-            imgs = jax.ShapeDtypeStruct(
-                (batch, cfg.img_res, cfg.img_res, 3), jax.numpy.float32)
-
-            def fwd(p, x, _cfg=cfg, _model=model):
-                return _model.forward(_cfg, p, x)
-
             # conv budget: only the unquantized stem convolves under m2q
             # (PWConvs lower to quantized matmuls, DWConvs to the packed-w4
             # kernel); uniform8 has no int8 DWConv kernel, so its DWConvs
             # legitimately fall back to dequantized XLA convs — no budget
-            traces.append(trace_fn(
-                fwd, (qp, imgs), name=f"{arch}/{rtag}/forward",
-                meta={"quantized": True, "expect_no_f32_dot": no_f32,
-                      "conv_budget": 1 if recipe == "m2q-w8a8" else None}))
+            variants = [(cfg.img_res, batch, f"{arch}/{rtag}/forward")]
+            if recipe == "m2q-w8a8":
+                variants += [(r, 1, f"{arch}/{rtag}/forward-r{r}")
+                             for r in hires]
+            for res, b, name in variants:
+                cfg_v = cfg if res == cfg.img_res else cfg.replace(img_res=res)
+                qp = abstract_quantize(cfg_v, recipe=recipe,
+                                       tokens_per_step=b)
+                imgs = jax.ShapeDtypeStruct(
+                    (b, res, res, 3), jax.numpy.float32)
+
+                def fwd(p, x, _cfg=cfg_v, _model=model):
+                    return _model.forward(_cfg, p, x)
+
+                yield (fwd, (qp, imgs), name,
+                       {"quantized": True, "expect_no_f32_dot": no_f32,
+                        "conv_budget": 1 if recipe == "m2q-w8a8" else None})
             continue
         cfg8 = _int8_kv_cfg(cfg)
         cfg_t = cfg8 or cfg
@@ -156,9 +172,8 @@ def registry_traces(arch: str, *, batch: int = 2, prefill_len: int = 32,
         # int8 attention kernels cover MSA + int8-KV decode), so only the
         # decode trace can promise zero f32 dots — and only with the
         # int8-KV cache + uniform weights
-        traces.append(trace_fn(
-            prefill, (qp, cache, inp), name=f"{arch}/{rtag}/prefill",
-            meta={"quantized": True}))
+        yield (prefill, (qp, cache, inp), f"{arch}/{rtag}/prefill",
+               {"quantized": True})
 
         qp_d = abstract_quantize(cfg_t, recipe=recipe, tokens_per_step=batch)
         dcache, dtok = decode_inputs(cfg_t, batch, decode_len)
@@ -166,11 +181,56 @@ def registry_traces(arch: str, *, batch: int = 2, prefill_len: int = 32,
         def decode(p, c, t, _cfg=cfg_t, _model=model_t):
             return _model.decode_step(_cfg, p, c, t)
 
-        traces.append(trace_fn(
-            decode, (qp_d, dcache, dtok), name=f"{arch}/{rtag}/decode",
-            meta={"quantized": True,
-                  "expect_no_f32_dot": no_f32 and cfg8 is not None}))
-    return traces
+        yield (decode, (qp_d, dcache, dtok), f"{arch}/{rtag}/decode",
+               {"quantized": True,
+                "expect_no_f32_dot": no_f32 and cfg8 is not None})
+
+
+def registry_traces(arch: str, *, batch: int = 2, prefill_len: int = 32,
+                    decode_len: int = 64,
+                    recipes: Sequence[str] = ("m2q-w8a8", "uniform8"),
+                    hires: Sequence[int] = VISION_HIRES) -> List[Trace]:
+    """The qlint trace set for one registry config — every spec from
+    :func:`registry_trace_specs` lowered AND compiled under kernel
+    dispatch."""
+    return [trace_fn(fn, args, name=name, meta=meta)
+            for fn, args, name, meta in registry_trace_specs(
+                arch, batch=batch, prefill_len=prefill_len,
+                decode_len=decode_len, recipes=recipes, hires=hires)]
+
+
+def shape_requests(configs: Sequence[str], *,
+                   recipes: Sequence[str] = ("m2q-w8a8", "uniform8"),
+                   batch: int = 2, prefill_len: int = 32,
+                   decode_len: int = 64,
+                   hires: Sequence[int] = VISION_HIRES):
+    """Enumerate every autotune shape a deployment's hot paths request.
+
+    Lowers (does NOT compile) each :func:`registry_trace_specs` entry under
+    kernel dispatch with ``autotune.record_requests`` listening: block
+    choices resolve at Python trace time, so lowering alone walks every
+    ``blocks_for``/``note_shape`` call site with the real launch shapes.
+    Returns ``(requests, per_trace)``: deduplicated ShapeRequests in first-
+    seen order, and {trace name: request count} for coverage reporting.
+    """
+    from ..kernels import autotune
+    reqs: List[autotune.ShapeRequest] = []
+    per_trace: Dict[str, int] = {}
+    for arch in configs:
+        for fn, args, name, _meta in registry_trace_specs(
+                arch, batch=batch, prefill_len=prefill_len,
+                decode_len=decode_len, recipes=recipes, hires=hires):
+            n0 = len(reqs)
+            with autotune.record_requests(reqs), \
+                    ops.dispatch(dense=True, conv=True, attn=True):
+                jax.jit(fn).lower(*args)
+            per_trace[name] = len(reqs) - n0
+    seen, out = set(), []
+    for r in reqs:
+        if r not in seen:
+            seen.add(r)
+            out.append(r)
+    return out, per_trace
 
 
 def _norm_spec(spec, ndim: int) -> str:

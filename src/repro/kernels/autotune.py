@@ -2,26 +2,48 @@
 
 Replaces the fixed power-of-two ``_block()`` heuristic in ops.py: each
 (kernel, M, N, K) shape gets its block triple from a persistent JSON cache,
-populated by timing candidate triples on the real accelerator backend.
+populated either lazily (timing candidate triples at first launch on a real
+accelerator backend) or — the serving posture — OFFLINE by
+``repro.launch.autotune_sweep``, which enumerates a deployment's shape set
+and warms the cache before the first request ever traces (first-request
+compile+tune latency is a real p99 tail at serving scale).
+
+Cache keys are salted with the KERNEL VERSION and the BACKEND:
+
+    <kernel>@v<version>:<M>x<N>x<K>:<backend>
+
+so a committed cache from one backend can never serve block choices on
+another, and a kernel rewrite (bump :data:`KERNEL_VERSIONS`) orphans every
+stale entry instead of silently reusing blocks tuned for the old grid.  The
+default cache file is per-backend too (``~/.cache/repro/autotune.<backend>
+.json``); ``REPRO_AUTOTUNE_CACHE`` overrides the path wholesale.  Lookup is
+CACHE-FIRST on every backend — a warmed cache serves its block choice even
+where tuning itself is disabled — and every candidate actually timed bumps
+:func:`tuning_probe_count`, so tests can assert a warmed trace performs
+ZERO probes.
 
 Interpret-safe fallback: on CPU / interpret mode (the container has no TPU)
-timing the Python interpreter is meaningless, so the heuristic triple is
-returned immediately and nothing is benchmarked or persisted.  The cache
-file location comes from ``REPRO_AUTOTUNE_CACHE`` (default
-``~/.cache/repro/autotune.json``); writes are atomic (tmp + rename) so
-concurrent processes never observe a torn file.
+timing the Python interpreter is meaningless, so on a cache miss the
+heuristic triple is returned immediately and nothing is benchmarked or
+persisted.  Writes are atomic (tmp + rename) so concurrent processes never
+observe a torn file.
 
 A corrupt cache file NEVER takes the process down: truncated JSON, a
-non-dict top level, or entries that are not three ints are dropped with a
+non-dict top level, entries that are not three ints, or keys that do not
+parse as salted cache keys (foreign/legacy formats) are dropped with a
 ``RuntimeWarning`` and the cache rebuilds from scratch — a bad cache is a
 performance bug, not a correctness one, so crashing over it is the wrong
 trade.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import dataclasses
 import fcntl
 import json
 import os
+import re
 import threading
 import time
 import warnings
@@ -34,13 +56,39 @@ Blocks = Tuple[int, int, int]
 _LOCK = threading.Lock()
 _CACHES: Dict[str, "AutotuneCache"] = {}
 
+# bump a kernel's version when its grid/blocking semantics change: stale
+# entries (tuned for the old grid) then miss instead of mis-steering the
+# rewritten kernel.  dwconv_w4 is v2: the H-tiled (B, H-tiles, C-blocks)
+# grid replaced the whole-map (B, C-blocks) grid in PR 9.
+KERNEL_VERSIONS: Dict[str, int] = {
+    "m2q_matmul": 1,
+    "int8_matmul": 1,
+    "int4_matmul": 1,
+    "apot_matmul": 1,
+    "dwconv_w4": 2,
+    "relu_attn": 1,
+    "decode_attn_int8": 1,
+}
 
-def default_cache_path() -> str:
+# <kernel>@v<version>:<M>x<N>x<K>:<backend>
+_KEY_RE = re.compile(r"^[A-Za-z0-9_.-]+@v\d+:\d+x\d+x\d+:[A-Za-z0-9_]+$")
+
+
+def cache_key(kernel: str, M: int, N: int, K: int,
+              backend: Optional[str] = None) -> str:
+    """The salted persistent-cache key for one kernel launch shape."""
+    v = KERNEL_VERSIONS.get(kernel, 1)
+    b = backend or jax.default_backend()
+    return f"{kernel}@v{v}:{M}x{N}x{K}:{b}"
+
+
+def default_cache_path(backend: Optional[str] = None) -> str:
     env = os.environ.get("REPRO_AUTOTUNE_CACHE")
     if env:
         return env
+    b = backend or jax.default_backend()
     return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                        "autotune.json")
+                        f"autotune.{b}.json")
 
 
 def heuristic_block(m: int, cap: int = 128) -> int:
@@ -72,6 +120,85 @@ def candidate_blocks(M: int, N: int, K: int) -> List[Blocks]:
     return sorted(cands)
 
 
+# ---------------------------------------------------------------------------
+# shape-request recording (the offline sweep's discovery hook) + probe count
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeRequest:
+    """One block-choice request seen by :func:`blocks_for` (or noted by a
+    kernel without block parameters, ``tunable=False``).  ``meta`` carries
+    enough operand geometry for the offline sweep to reconstruct a real
+    launch of the same shape (synthetic-operand tuning on an accelerator)."""
+
+    kernel: str
+    M: int
+    N: int
+    K: int
+    tunable: bool = True
+    meta: Tuple[Tuple[str, int], ...] = ()
+
+    def key(self, backend: Optional[str] = None) -> str:
+        return cache_key(self.kernel, self.M, self.N, self.K, backend)
+
+
+_RECORDERS: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_autotune_recorders", default=())
+
+
+@contextlib.contextmanager
+def record_requests(dest: Optional[List[ShapeRequest]] = None):
+    """Collect every ShapeRequest seen inside the scope (nestable; requests
+    also reach enclosing recorders).  Works under jit tracing — lowering a
+    model is exactly how the offline sweep discovers a deployment's shape
+    set without running it."""
+    sink: List[ShapeRequest] = [] if dest is None else dest
+    token = _RECORDERS.set(_RECORDERS.get() + (sink,))
+    try:
+        yield sink
+    finally:
+        _RECORDERS.reset(token)
+
+
+def _record(kernel: str, M: int, N: int, K: int, tunable: bool = True,
+            meta: Optional[dict] = None) -> None:
+    sinks = _RECORDERS.get()
+    if not sinks:
+        return
+    req = ShapeRequest(kernel, int(M), int(N), int(K), tunable,
+                       tuple(sorted((str(k), int(v))
+                                    for k, v in (meta or {}).items())))
+    for sink in sinks:
+        sink.append(req)
+
+
+def note_shape(kernel: str, M: int, N: int, K: int,
+               meta: Optional[dict] = None) -> None:
+    """Record a shape for a kernel WITHOUT block parameters (decode_attn):
+    the sweep lists it for coverage/bench rows but never caches blocks."""
+    _record(kernel, M, N, K, tunable=False, meta=meta)
+
+
+_PROBES = 0
+
+
+def tuning_probe_count() -> int:
+    """How many candidate timings have run in this process — the sweep's
+    zero-probes-at-serving-time assertion reads this."""
+    return _PROBES
+
+
+def reset_probe_count() -> None:
+    global _PROBES
+    _PROBES = 0
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+# ---------------------------------------------------------------------------
+
+
 def _valid_entry(v) -> bool:
     """A cache entry must be exactly three positive ints (a block triple);
     anything else — strings, floats, wrong arity — is corruption."""
@@ -82,9 +209,10 @@ def _valid_entry(v) -> bool:
 
 def _read_cache_file(path: str) -> Dict[str, list]:
     """Read + sanitize one cache file.  NEVER raises on corruption:
-    unreadable/truncated JSON, a non-dict top level, or invalid entries
-    produce a ``RuntimeWarning`` naming the file and the salvageable
-    subset (usually empty -> the cache rebuilds)."""
+    unreadable/truncated JSON, a non-dict top level, invalid entries, or
+    keys that do not parse as ``kernel@vN:MxNxK:backend`` (legacy unsalted
+    caches, foreign junk) produce a ``RuntimeWarning`` naming the file and
+    the salvageable subset (usually empty -> the cache rebuilds)."""
     try:
         with open(path) as f:
             raw = json.load(f)
@@ -101,11 +229,13 @@ def _read_cache_file(path: str) -> Dict[str, list]:
             "expected a JSON object; ignoring it and rebuilding from "
             "scratch", RuntimeWarning, stacklevel=3)
         return {}
-    data = {k: list(v) for k, v in raw.items() if _valid_entry(v)}
+    data = {k: list(v) for k, v in raw.items()
+            if isinstance(k, str) and _KEY_RE.match(k) and _valid_entry(v)}
     if len(data) != len(raw):
         warnings.warn(
             f"autotune cache {path!r}: dropped {len(raw) - len(data)} "
-            "corrupt entries (each must be three positive ints); keeping "
+            "corrupt entries (each key must be kernel@vN:MxNxK:backend and "
+            "each value three positive ints); keeping "
             f"the {len(data)} valid ones", RuntimeWarning, stacklevel=3)
     return data
 
@@ -138,6 +268,11 @@ class AutotuneCache:
         self._data[key] = [int(b) for b in blocks]
         if save:
             self.save()
+
+    def keys(self) -> List[str]:
+        if not self._loaded:
+            self.load()
+        return sorted(self._data)
 
     def save(self) -> None:
         d = os.path.dirname(self.path)
@@ -174,6 +309,13 @@ def _shared_cache(path: Optional[str]) -> AutotuneCache:
         return _CACHES[p]
 
 
+def shared_cache(path: Optional[str] = None) -> AutotuneCache:
+    """The process-wide cache object for ``path`` (the one kernel launches
+    consult) — the offline sweep warms THIS instance so a sweep and a serve
+    in the same process see one view."""
+    return _shared_cache(path)
+
+
 def measure(fn: Callable, *args, reps: int = 3) -> float:
     """Warmup + best-of-N wall-clock of ``fn(*args)``; the one timing
     harness shared by the tuner and benchmarks/kernel_bench."""
@@ -188,6 +330,8 @@ def measure(fn: Callable, *args, reps: int = 3) -> float:
 
 def _time_candidate(bench_fn: Callable[[Blocks], object], blocks: Blocks,
                     reps: int = 3) -> float:
+    global _PROBES
+    _PROBES += 1
     try:
         return measure(bench_fn, blocks, reps=reps)
     except Exception:
@@ -199,30 +343,36 @@ def blocks_for(kernel: str, M: int, N: int, K: int, *,
                bench_fn: Optional[Callable[[Blocks], object]] = None,
                cache_path: Optional[str] = None,
                candidates: Optional[Sequence[Blocks]] = None,
-               force_tune: bool = False) -> Blocks:
+               force_tune: bool = False,
+               meta: Optional[dict] = None) -> Blocks:
     """Resolve the block triple for one kernel launch.
 
-    Tuning only happens on a real accelerator backend (or when
-    ``force_tune`` is set, for tests) AND when a ``bench_fn`` is provided;
-    every other case falls back to the heuristic so the interpret path
-    stays cheap and deterministic.
+    Lookup order: persistent cache (warmed offline by the sweep, or by a
+    previous lazy tune on this backend) -> live tuning -> heuristic.  The
+    cache is consulted FIRST on every backend — a committed cache serves
+    its block choices even where tuning is disabled.  Tuning only happens
+    on a real accelerator backend (or when ``force_tune`` is set, for
+    tests) AND when a ``bench_fn`` is provided; every other case falls
+    back to the heuristic so the interpret path stays cheap and
+    deterministic.  Every call is visible to :func:`record_requests` (the
+    offline sweep's shape discovery), including calls made while tracing.
     """
+    _record(kernel, M, N, K, tunable=True, meta=meta)
     fallback = heuristic_blocks(M, N, K)
-    tunable = force_tune or (not interpret
-                             and jax.default_backend() != "cpu")
-    if not tunable or bench_fn is None:
-        return fallback
+    key = cache_key(kernel, M, N, K)
+    cache = _shared_cache(cache_path)
     if not jax.core.trace_state_clean():
         # inside a jit/vmap trace the bench closure holds tracers:
         # "timing" it measures Python tracing, not the kernel.  Use the
         # cache if warm, else the heuristic — and never persist from here.
-        return _shared_cache(cache_path).get(
-            f"{kernel}:{M}x{N}x{K}:{jax.default_backend()}") or fallback
-    cache = _shared_cache(cache_path)
-    key = f"{kernel}:{M}x{N}x{K}:{jax.default_backend()}"
+        return cache.get(key) or fallback
     hit = cache.get(key)
-    if hit is not None:
+    if hit is not None and not force_tune:
         return hit
+    tunable = force_tune or (not interpret
+                             and jax.default_backend() != "cpu")
+    if not tunable or bench_fn is None:
+        return fallback
     cands = list(candidates) if candidates else candidate_blocks(M, N, K)
     timed = [(_time_candidate(bench_fn, c), c) for c in cands]
     timed.sort(key=lambda t: (t[0], t[1]))

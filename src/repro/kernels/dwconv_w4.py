@@ -10,18 +10,36 @@ VMEM; the tap accumulation mirrors the paper's output-parallel dataflow
 The kernel is parameterized over the kernel window (kh, kw) and stride so it
 serves BOTH EfficientViT depthwise shapes: the MBConv 3x3 (stride 1 and the
 stride-2 stage-entry downsamplers) and the MSA 5x5 multi-scale aggregation.
-SAME padding is applied by the wrapper (XLA conventions: asymmetric for
-even-sized windows under stride), so the kernel body only sees the padded
-tile and accumulates kh*kw strided taps.
 
-Grid: (B, C/bc) — channels are the parallel dim (the paper's "blocks within
-a PE tile compute different channels").  H/W stay whole per block (edge
-models are 224x224; H-tiling is a recorded follow-up for larger maps).
+Grid: (B, H-tiles, C/bc) — channels are the parallel dim (the paper's
+"blocks within a PE tile compute different channels") and the output H axis
+is tiled in blocks of ``bh`` rows.  Each input block carries its halo: the
+``bh`` output rows of tile ``t`` consume input rows
+``[t*bh*stride, t*bh*stride + (bh-1)*stride + kh)``, so consecutive input
+blocks OVERLAP by ``kh - stride`` rows.  Overlap is expressed with
+``pl.Unblocked`` element-offset indexing (a blocked BlockSpec can only step
+by whole blocks); the per-block VMEM footprint is bounded by the tile, not
+the feature map, so arbitrary-resolution maps (R256/R384/R512, detection
+sizes) run the packed-w4 kernel — the old whole-map VMEM guard is gone.
+
+Two padding modes:
+
+* ``fuse_pad=False`` — the wrapper materializes XLA SAME padding once
+  (asymmetric for even windows under stride, matching
+  ``lax.conv_general_dilated``) and the kernel body only sees padded tiles.
+* ``fuse_pad=True`` — the *unpadded* map is handed to ``pallas_call`` and
+  SAME padding fuses into the kernel: ``pl.Unblocked(padding=...)`` extends
+  the logical index space (the DMA engine serves the halo; the pad region
+  is UNINITIALIZED, not zero) and the body masks every tap against the real
+  [0,H)x[0,W) bounds with iota predicates — selects, not multiplies, so
+  uninitialized pad bytes (even NaN) never reach the accumulator.  This is
+  the stride-2 MBConv stage-entry path: downsamplers no longer re-pad
+  (an HBM round-trip of the full map) outside the kernel.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,29 +56,64 @@ def same_padding(size: int, k: int, stride: int) -> Tuple[int, int]:
     return lo, total - lo
 
 
-def _kernel(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, KH: int, KW: int,
-            HO: int, WO: int, stride: int):
+def _decode_w4(wp_ref, scale_ref, zp_ref, KH: int, KW: int) -> jax.Array:
+    """Unpack the (kh*kw, bc/2) nibble tile to (kh*kw, bc) f32 weights —
+    once per grid step, in VMEM."""
     lo = (wp_ref[...] & 0x0F).astype(jnp.float32)
     hi = ((wp_ref[...] >> 4) & 0x0F).astype(jnp.float32)
-    q = jnp.stack([lo, hi], axis=-1).reshape(KH * KW, -1)  # (kh*kw, bc)
-    w = (q - zp_ref[...]) * scale_ref[...]  # decode once per channel tile
-    x = x_ref[0].astype(jnp.float32)  # (HI, WI, bc), SAME-padded
-    acc = jnp.zeros((HO, WO, x.shape[-1]), jnp.float32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(KH * KW, -1)
+    return (q - zp_ref[...]) * scale_ref[...]
+
+
+def _kernel(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, KH: int, KW: int,
+            BH: int, WO: int, stride: int):
+    """Pre-padded variant: the block is SAME-padded rows, taps are pure
+    strided slices."""
+    w = _decode_w4(wp_ref, scale_ref, zp_ref, KH, KW)
+    x = x_ref[0].astype(jnp.float32)  # (BH_in, WI, bc), SAME-padded
+    acc = jnp.zeros((BH, WO, x.shape[-1]), jnp.float32)
     s = stride
     for i in range(KH):
         for j in range(KW):
-            tap = x[i:i + (HO - 1) * s + 1:s, j:j + (WO - 1) * s + 1:s]
+            tap = x[i:i + (BH - 1) * s + 1:s, j:j + (WO - 1) * s + 1:s]
             acc = acc + tap * w[KW * i + j]
+    o_ref[0] = acc
+
+
+def _kernel_fused_pad(x_ref, wp_ref, scale_ref, zp_ref, o_ref, *, KH: int,
+                      KW: int, BH: int, WO: int, stride: int, H: int, W: int,
+                      ph_lo: int, pw_lo: int):
+    """Fused-pad variant: the block indexes the logically padded map (pad
+    region uninitialized) and every tap is masked against the real bounds.
+    Padded-coordinate input row of output row r, tap i:  r*stride + i;
+    the unpadded row is that minus ph_lo — valid iff in [0, H)."""
+    t = pl.program_id(1)
+    w = _decode_w4(wp_ref, scale_ref, zp_ref, KH, KW)
+    x = x_ref[0].astype(jnp.float32)  # (BH_in, WI, bc), halo'd + pad garbage
+    acc = jnp.zeros((BH, WO, x.shape[-1]), jnp.float32)
+    s = stride
+    row = jax.lax.broadcasted_iota(jnp.int32, (BH, WO), 0)  # out row in tile
+    col = jax.lax.broadcasted_iota(jnp.int32, (BH, WO), 1)  # out col
+    for i in range(KH):
+        for j in range(KW):
+            tap = x[i:i + (BH - 1) * s + 1:s, j:j + (WO - 1) * s + 1:s]
+            gr = (t * BH + row) * s + i - ph_lo  # unpadded input row
+            gc = col * s + j - pw_lo             # unpadded input col
+            ok = (gr >= 0) & (gr < H) & (gc >= 0) & (gc < W)
+            acc = acc + jnp.where(ok[..., None], tap, 0.0) * w[KW * i + j]
     o_ref[0] = acc
 
 
 def dwconv_w4(x: jax.Array, packed: jax.Array, scale: jax.Array,
               zero_point: jax.Array, *, kh: int = 3, kw: int = 3,
-              stride: int = 1, bc: int = 128,
-              interpret: bool = False) -> jax.Array:
+              stride: int = 1, bh: Optional[int] = None, bc: int = 128,
+              fuse_pad: bool = False, interpret: bool = False) -> jax.Array:
     """x (B,H,W,C) (unpadded); packed (kh*kw, C/2) uint8; scale/zp (C,) f32.
 
     Returns (B,HO,WO,C) f32 — depthwise kh x kw, SAME padding, stride >= 1.
+    ``bh``: output rows per H-tile (None = whole map in one tile); ``bc``:
+    channels per tile.  ``fuse_pad``: SAME-pad inside the kernel instead of
+    materializing a padded copy (see module docstring).
     """
     B, H, W, C = x.shape
     assert packed.shape[0] == kh * kw, (packed.shape, kh, kw)
@@ -70,21 +123,50 @@ def dwconv_w4(x: jax.Array, packed: jax.Array, scale: jax.Array,
     pw = same_padding(W, kw, stride)
     HO = -(-H // stride)
     WO = -(-W // stride)
-    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
-    HI, WI = xp.shape[1], xp.shape[2]
-    grid = (B, C // bc)
-    return pl.pallas_call(
-        functools.partial(_kernel, KH=kh, KW=kw, HO=HO, WO=WO, stride=stride),
+    bh = HO if bh is None else max(1, min(bh, HO))
+    T = -(-HO // bh)                      # H-tiles
+    step = bh * stride                    # input rows consumed per tile
+    bh_in = (bh - 1) * stride + kh        # input rows read per tile (halo'd)
+    WI = W + pw[0] + pw[1]
+    # rows the LAST tile reads, in padded coordinates; pad the bottom so
+    # every unblocked read stays in bounds (zero rows only ever feed output
+    # rows >= HO, which are sliced away)
+    hi_need = (T - 1) * step + bh_in
+    grid = (B, T, C // bc)
+    if fuse_pad:
+        pad_bot = max(hi_need - ph[0] - H, 0)
+        in_spec = pl.BlockSpec(
+            (1, bh_in, WI, bc), lambda b, t, c: (b, t * step, 0, c * bc),
+            indexing_mode=pl.Unblocked(
+                ((0, 0), (ph[0], pad_bot), pw, (0, 0))))
+        body = functools.partial(_kernel_fused_pad, KH=kh, KW=kw, BH=bh,
+                                 WO=WO, stride=stride, H=H, W=W,
+                                 ph_lo=ph[0], pw_lo=pw[0])
+        operand = x
+    else:
+        xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+        extra = hi_need - xp.shape[1]
+        if extra > 0:
+            xp = jnp.pad(xp, ((0, 0), (0, extra), (0, 0), (0, 0)))
+        in_spec = pl.BlockSpec(
+            (1, bh_in, WI, bc), lambda b, t, c: (b, t * step, 0, c * bc),
+            indexing_mode=pl.unblocked)
+        body = functools.partial(_kernel, KH=kh, KW=kw, BH=bh, WO=WO,
+                                 stride=stride)
+        operand = xp
+    y = pl.pallas_call(
+        body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, HI, WI, bc), lambda b, c: (b, 0, 0, c)),
-            pl.BlockSpec((kh * kw, bc // 2), lambda b, c: (0, c)),
-            pl.BlockSpec((1, bc), lambda b, c: (0, c)),
-            pl.BlockSpec((1, bc), lambda b, c: (0, c)),
+            in_spec,
+            pl.BlockSpec((kh * kw, bc // 2), lambda b, t, c: (0, c)),
+            pl.BlockSpec((1, bc), lambda b, t, c: (0, c)),
+            pl.BlockSpec((1, bc), lambda b, t, c: (0, c)),
         ],
-        out_specs=pl.BlockSpec((1, HO, WO, bc), lambda b, c: (b, 0, 0, c)),
-        out_shape=jax.ShapeDtypeStruct((B, HO, WO, C), jnp.float32),
+        out_specs=pl.BlockSpec((1, bh, WO, bc), lambda b, t, c: (b, t, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, T * bh, WO, C), jnp.float32),
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
-    )(xp, packed, scale.reshape(1, -1), zero_point.reshape(1, -1))
+    )(operand, packed, scale.reshape(1, -1), zero_point.reshape(1, -1))
+    return y[:, :HO]

@@ -5,9 +5,11 @@ CPU (the container has no TPU; interpret=True executes the kernel body in
 Python — correctness validation per the task spec), leading-batch-dim
 flattening, and QTensor-level entry points mirroring core.qtensor methods.
 
-Block sizes come from the shape-keyed autotuner (kernels.autotune): on a
-real accelerator each (kernel, shape) pair is timed once and persisted to a
-JSON cache; on CPU/interpret the power-of-two heuristic is used directly.
+Block sizes come from the shape-keyed autotuner (kernels.autotune): the
+persistent per-backend cache is consulted FIRST (warmed offline by
+``launch/autotune_sweep.py`` so serving traces are pure cache hits); on a
+cache miss a real accelerator times candidates once and persists the
+winner, while CPU/interpret falls back to the power-of-two heuristic.
 
 The M2Q path is permutation-free end to end: the merged byte payload is in
 original filter order, the fused kernel emits ONE output array, and the old
@@ -58,7 +60,7 @@ from ..core.quant import act_scale_from_stats
 from . import autotune
 from .apot_matmul import apot_matmul
 from .decode_attn_int8 import decode_attn_int8
-from .dwconv_w4 import dwconv_w4
+from .dwconv_w4 import dwconv_w4, same_padding
 from .int4_matmul import int4_matmul
 from .int8_matmul import int8_matmul
 from .m2q_matmul import m2q_matmul
@@ -511,8 +513,10 @@ def m2q_matmul_op(x, act_scale, payload, u_scale, u_zp, a_scale,
                      interpret)
 
 
-@partial(jax.jit, static_argnames=("kh", "kw", "stride", "bc", "interpret"))
-def _dwconv_core(x, packed, scale, zero_point, kh, kw, stride, bc, interpret):
+@partial(jax.jit, static_argnames=("kh", "kw", "stride", "bh", "bc",
+                                   "fuse_pad", "interpret"))
+def _dwconv_core(x, packed, scale, zero_point, kh, kw, stride, bh, bc,
+                 fuse_pad, interpret):
     C = x.shape[-1]
     pc = (-C) % bc
     if pc:
@@ -521,7 +525,7 @@ def _dwconv_core(x, packed, scale, zero_point, kh, kw, stride, bc, interpret):
         scale = jnp.pad(scale, (0, pc))
         zero_point = jnp.pad(zero_point, (0, pc))
     y = dwconv_w4(x, packed, scale, zero_point, kh=kh, kw=kw, stride=stride,
-                  bc=bc, interpret=interpret)
+                  bh=bh, bc=bc, fuse_pad=fuse_pad, interpret=interpret)
     return y[..., :C]
 
 
@@ -531,32 +535,92 @@ def _dwconv_bc(bn: int, C: int) -> int:
     return max(bc - (bc % 2), 2)
 
 
+# Per-grid-block VMEM budget for the H-tiled dwconv kernel.  With H-tiling
+# the footprint is bounded by the TILE, not the feature map: one halo'd
+# input slab (bh_in x WI x bc f32), one output slab (bh x WO x bc f32), and
+# the decoded weight tile.  8 MiB leaves headroom in a 16 MiB-class VMEM for
+# double-buffered pipelining of the next slab.
+_DWCONV_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def _dwconv_tile_bytes(W: int, kh: int, kw: int, stride: int,
+                       bh: int, bc: int) -> int:
+    """f32 VMEM bytes one (bh, bc) grid block touches at map width W."""
+    pw = same_padding(W, kw, stride)
+    wi = W + pw[0] + pw[1]
+    wo = -(-W // stride)
+    bh_in = (bh - 1) * stride + kh
+    # input slab + output slab + packed nibbles + decoded f32 weights
+    return (bh_in * wi + bh * wo) * bc * 4 + kh * kw * bc // 2 + kh * kw * bc * 4
+
+
+def dwconv_tile_plan(H: int, W: int, kh: int, kw: int, stride: int,
+                     bh: Optional[int] = None, bc: int = 128,
+                     budget: int = _DWCONV_VMEM_BYTES
+                     ) -> Optional[Tuple[int, int]]:
+    """Fit an H-tile plan (bh output rows, bc channels) under the VMEM
+    budget, shrinking the requested blocks (rows first — channel tiles keep
+    lane utilization) until one block fits.  Returns None only when even
+    the minimal (1, 2) tile exceeds the budget — i.e. the tiler genuinely
+    cannot block the map, not merely that the whole map is large."""
+    ho = -(-H // stride)
+    bh = ho if bh is None else max(1, min(int(bh), ho))
+    bc = max(2, bc - (bc % 2))
+    while bh > 1 and _dwconv_tile_bytes(W, kh, kw, stride, bh, bc) > budget:
+        bh = max(1, bh // 2)
+    while bc > 2 and _dwconv_tile_bytes(W, kh, kw, stride, bh, bc) > budget:
+        bc = max(2, (bc // 2) - ((bc // 2) % 2))
+    if _dwconv_tile_bytes(W, kh, kw, stride, bh, bc) > budget:
+        return None
+    return bh, bc
+
+
 def dwconv_w4_op(x, packed, scale, zero_point, kh: int = 3, kw: int = 3,
                  stride: int = 1, interpret: Optional[bool] = None,
-                 blocks: Optional[Tuple[int, int, int]] = None):
-    """x (B,H,W,C) float; packed (kh*kw, C/2) nibbles; SAME padding."""
+                 blocks: Optional[Tuple[int, int, int]] = None,
+                 fuse_pad: Optional[bool] = None):
+    """x (B,H,W,C) float; packed (kh*kw, C/2) nibbles; SAME padding.
+
+    The autotuner picks the (bh, bc) H-tile: candidate triples map bm -> bh
+    (output rows per tile) and bn -> bc (channels per tile), each fitted
+    under the VMEM budget by :func:`dwconv_tile_plan` before launch.
+    ``fuse_pad`` defaults to stride > 1 — the MBConv stage-entry
+    downsamplers pad inside the kernel instead of materializing a padded
+    copy of the full map.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     B, H, W, C = x.shape
+    HO, WO = -(-H // stride), -(-W // stride)
     taps = kh * kw
+    if fuse_pad is None:
+        fuse_pad = stride > 1
+
+    def _fit(b) -> Tuple[int, int]:
+        plan = dwconv_tile_plan(H, W, kh, kw, stride,
+                                bh=min(int(b[0]), HO),
+                                bc=_dwconv_bc(int(b[1]), C))
+        return plan or (1, 2)
+
     if blocks is None:
-        # candidates are benched with the SAME adjusted bc that executes;
-        # only bn matters here, so dedupe triples by their effective bc
+        # candidates are benched with the SAME fitted (bh, bc) that would
+        # execute, so dedupe triples by their effective plan
         seen, cands = set(), []
-        for c in autotune.candidate_blocks(B * H * W, C, taps):
-            bc = _dwconv_bc(c[1], C)
-            if bc not in seen:
-                seen.add(bc)
+        for c in autotune.candidate_blocks(HO, C, taps):
+            p = _fit(c)
+            if p not in seen:
+                seen.add(p)
                 cands.append(c)
-        _, bn, _ = autotune.blocks_for(
-            "dwconv_w4", B * H * W // (stride * stride), C, taps,
+        blocks = autotune.blocks_for(
+            "dwconv_w4", B * HO * WO, C, taps,
             interpret=interpret, candidates=cands,
+            meta={"B": B, "H": H, "W": W, "C": C, "kh": kh, "kw": kw,
+                  "stride": stride},
             bench_fn=lambda b: _dwconv_core(x, packed, scale, zero_point,
-                                            kh, kw, stride,
-                                            _dwconv_bc(b[1], C), interpret))
-    else:
-        bn = blocks[1]
-    return _dwconv_core(x, packed, scale, zero_point, kh, kw, stride,
-                        _dwconv_bc(bn, C), interpret)
+                                            kh, kw, stride, *_fit(b),
+                                            fuse_pad, interpret))
+    bh, bc = _fit(blocks)
+    return _dwconv_core(x, packed, scale, zero_point, kh, kw, stride, bh, bc,
+                        fuse_pad, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -614,6 +678,7 @@ def relu_attn_op(q, k, v, eps: float = 1e-6,
                 cands.append(c)
         blocks = autotune.blocks_for(
             "relu_attn", N, D, B * H, interpret=interpret, candidates=cands,
+            meta={"B": B, "N": N, "H": H, "D": D},
             bench_fn=lambda b: _relu_attn_core(q, k, v, b[0], eps, interpret))
     return _relu_attn_core(q, k, v, blocks[0], eps, interpret)
 
@@ -629,6 +694,11 @@ def decode_attn_int8_op(q, k_q, v_q, k_scale, v_scale, lengths,
     B, _, Hq, D = q.shape
     Hkv = k_q.shape[2]
     G = Hq // Hkv
+    # no block parameters to tune, but the offline sweep still wants the
+    # shape listed (coverage accounting + bench rows)
+    autotune.note_shape("decode_attn_int8", B, Hq, D,
+                        meta={"Hkv": Hkv, "T": k_q.shape[1],
+                              "window": window or 0})
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     qh = q.reshape(B, Hkv, G, D).astype(jnp.float32)
     out = decode_attn_int8(qh, k_q, v_q, k_scale, v_scale,
@@ -668,21 +738,17 @@ def qtensor_matmul(x: jax.Array, qt, interpret: Optional[bool] = None):
     return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
 
 
-# dwconv_w4 keeps H/W whole per grid block (no H-tiling yet), so the
-# per-block VMEM footprint scales with the padded input map.  Cap it at the
-# paper's largest edge resolution (224x224 input + a 5x5 SAME halo); bigger
-# maps fall back to the dequantized-weight XLA conv until H-tiling lands
-# (ROADMAP item, second half).
-_DWCONV_HW_BUDGET = (224 + 4) * (224 + 4)
-
-
 def dwconv_kernel_supported(qt, x, stride: int, groups: int,
                             padding: str) -> bool:
     """True when the packed-w4 depthwise kernel computes the same function
     as the dequantized-weight XLA conv for this leaf: a weights-only 4-bit
     QUniform whose HWIO shape is depthwise (cin-per-group == 1), flattened
-    to a (kh*kw, C/2) payload by core.apply, under SAME padding — and the
-    feature map fits the whole-H/W block budget (no H-tiling yet)."""
+    to a (kh*kw, C/2) payload by core.apply, under SAME padding — and
+    :func:`dwconv_tile_plan` can fit an H-tile under the VMEM budget.  With
+    the H-tiled grid the per-block footprint is bounded by the tile, not
+    the feature map, so the plan only fails for maps so wide that even a
+    single-row two-channel tile overflows VMEM — arbitrary-resolution maps
+    (R256/R384/R512, detection sizes) all stay on the kernel."""
     if not isinstance(qt, QUniform) or qt.bits != 4 or qt.act_scale is not None:
         return False
     # axis must be the flattened payload's column (channel) axis, else the
@@ -692,9 +758,8 @@ def dwconv_kernel_supported(qt, x, stride: int, groups: int,
     if len(qt.shape) != 4 or qt.shape[2] != 1:
         return False
     kh, kw, _, c = qt.shape
-    # SAME pads at most (k - 1) per spatial dim, so this bounds the padded
-    # block the kernel would actually compile
-    if (x.shape[1] + kh - 1) * (x.shape[2] + kw - 1) > _DWCONV_HW_BUDGET:
+    if dwconv_tile_plan(x.shape[1], x.shape[2], kh, kw, max(stride, 1)) \
+            is None:
         return False
     return (padding == "SAME" and stride >= 1 and groups == c
             and x.shape[-1] == c and qt.payload.shape[0] == kh * kw)

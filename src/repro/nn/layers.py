@@ -148,7 +148,9 @@ def _qconv2d(x: jax.Array, w, stride: int, groups: int, padding: str):
       QTensor matmul — either way the weight bytes stay quantized in HBM
       and no f32 dequantized-weight convolution is emitted.
     * 4-bit depthwise filters run the packed-w4 Pallas conv kernel when
-      dispatch is enabled.
+      dispatch is enabled — H-tiled, so any feature-map resolution stays
+      on the kernel (stride-2 stage entries pad inside the kernel; see
+      kernels.dwconv_w4), with only tiler-impossible widths falling back.
     * any other un-grouped KxK filter (the opt-in int8 stem — see
       efficientvit.STEM_RULE) lowers to im2col + the same quantized
       matmul path; the patch extraction materializes f32 activations but

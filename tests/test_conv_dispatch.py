@@ -282,33 +282,66 @@ def test_hlo_quantized_forward_has_no_f32_weight_conv():
 
 
 # ---------------------------------------------------------------------------
-# dwconv_w4 large-feature-map guard (H/W stay whole per grid block)
+# dwconv_w4 H-tiled high-resolution path (the old whole-map guard is gone)
 # ---------------------------------------------------------------------------
 
 
-def test_dwconv_large_map_guard_falls_back_to_xla():
-    """ISSUE 5 satellite: above the whole-H/W block budget (>224x224 + the
-    5x5 SAME halo) dwconv_kernel_supported must refuse — the kernel would
-    compile enormous VMEM blocks — and nn.dwconv2d silently falls back to
-    the dequantized-weight XLA conv, matching it exactly."""
+def test_dwconv_high_res_maps_stay_on_kernel():
+    """ISSUE 9 satellite: with the H-tiled grid the VMEM bound is the
+    TILE, so 256x256 and 384x384 maps take the kernel path — no more
+    whole-map budget fallback — and the guard derives its answer from
+    dwconv_tile_plan (rejecting only maps the tiler cannot block)."""
     rng = _rng(77)
     C = 4
     w4 = rng.normal(0, 0.2, (3, 3, 1, C)).astype(np.float32)
     qt = _qconv_u4(w4)
-    x224 = jnp.zeros((1, 224, 224, C), jnp.float32)
-    x256 = jnp.zeros((1, 256, 256, C), jnp.float32)
-    # the paper's edge resolutions (<= 224 + halo) stay on the kernel
-    assert ops.dwconv_kernel_supported(qt, x224, 1, C, "SAME")
-    assert not ops.dwconv_kernel_supported(qt, x256, 1, C, "SAME")
-    # 5x5 at 224 still fits the budget (224+4 halo is the cap)
+    for res in (224, 256, 384):
+        x = jnp.zeros((1, res, res, C), jnp.float32)
+        assert ops.dwconv_kernel_supported(qt, x, 1, C, "SAME"), res
+        assert ops.dwconv_kernel_supported(qt, x, 2, C, "SAME"), res
+    # 5x5 MSA window at high resolution too
     w5 = rng.normal(0, 0.2, (5, 5, 1, C)).astype(np.float32)
-    assert ops.dwconv_kernel_supported(_qconv_u4(w5), x224, 1, C, "SAME")
-    # 256x256 regression: dispatch-on forward == dequantized XLA conv
-    x = jnp.asarray(rng.normal(0, 1, (1, 256, 256, C)).astype(np.float32))
+    x384 = jnp.zeros((1, 384, 384, C), jnp.float32)
+    assert ops.dwconv_kernel_supported(_qconv_u4(w5), x384, 1, C, "SAME")
+    # the tile plan itself fits under the budget at these resolutions...
+    for res in (256, 384, 512):
+        plan = ops.dwconv_tile_plan(res, res, 3, 3, 1)
+        assert plan is not None and 1 <= plan[0] <= res
+        assert ops._dwconv_tile_bytes(res, 3, 3, 1, *plan) <= \
+            ops._DWCONV_VMEM_BYTES
+    # ...and only a genuinely untileable map (a row too wide for even the
+    # minimal 1-row 2-channel tile) is refused
+    assert ops.dwconv_tile_plan(2, 2 ** 21, 3, 3, 1) is None
+    assert not ops.dwconv_kernel_supported(
+        qt, jnp.zeros((1, 2, 2 ** 21, C), jnp.float32), 1, C, "SAME")
+
+
+@pytest.mark.parametrize("res,stride", [(256, 1), (256, 2),
+                                        (384, 1), (384, 2)])
+def test_dwconv_high_res_kernel_matches_xla_reference(res, stride,
+                                                      monkeypatch):
+    """ISSUE 9 acceptance: R256/R384 depthwise maps execute on the Pallas
+    w4 kernel (dispatch-on nn.dwconv2d routes there, the H-tiled grid) and
+    match the dequantized-weight XLA conv — triangulated over stride-1 and
+    the fused-pad stride-2 downsampler path."""
+    rng = _rng(res + stride)
+    C = 4
+    w4 = rng.normal(0, 0.2, (3, 3, 1, C)).astype(np.float32)
+    qt = _qconv_u4(w4)
+    x = jnp.asarray(rng.normal(0, 1, (1, res, res, C)).astype(np.float32))
+    calls = {"dw": 0}
+    orig = ops.qtensor_dwconv
+
+    def spy(*a, **k):
+        calls["dw"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(ops, "qtensor_dwconv", spy)
     with ops.dispatch(conv=True):
-        y = nn.dwconv2d(x, qt)
+        y = nn.dwconv2d(x, qt, stride=stride)
+    assert calls["dw"] == 1, "high-res map did not take the kernel path"
     y_ref = jax.lax.conv_general_dilated(
-        x, qt.dequant().reshape(qt.shape), (1, 1), "SAME",
+        x, qt.dequant().reshape(qt.shape), (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=C)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)

@@ -601,8 +601,10 @@ def test_vision_queued_deadline_times_out():
 
 
 def test_autotune_cache_tolerates_corruption(tmp_path):
-    from repro.kernels.autotune import AutotuneCache
+    from repro.kernels.autotune import AutotuneCache, cache_key
     path = tmp_path / "autotune.json"
+    key = cache_key("kern", 8, 8, 8, backend="cpu")
+    good = cache_key("kern", 16, 16, 16, backend="cpu")
     cases = [
         "{truncated",                            # invalid JSON
         json.dumps([1, 2, 3]),                   # non-dict top level
@@ -618,15 +620,15 @@ def test_autotune_cache_tolerates_corruption(tmp_path):
             assert any(issubclass(x.category, RuntimeWarning) for x in w)
         # save() merges through the same corrupt file without raising,
         # and the rewritten file is clean JSON
-        cache.put("kern:8x8x8:cpu", (8, 8, 8))
+        cache.put(key, (8, 8, 8))
         reread = AutotuneCache(str(path)).load()
-        assert reread.get("kern:8x8x8:cpu") == (8, 8, 8)
+        assert reread.get(key) == (8, 8, 8)
     # valid entries survive alongside dropped corrupt ones
-    path.write_text(json.dumps({"good": [16, 16, 16], "bad": [1, 2]}))
+    path.write_text(json.dumps({good: [16, 16, 16], "bad": [1, 2]}))
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         cache = AutotuneCache(str(path)).load()
-    assert cache.get("good") == (16, 16, 16) and cache.get("bad") is None
+    assert cache.get(good) == (16, 16, 16) and cache.get("bad") is None
     assert any("corrupt entries" in str(x.message) for x in w)
 
 

@@ -303,16 +303,49 @@ def test_autotune_interpret_falls_back_to_heuristic():
 
 def test_autotune_cache_roundtrip(tmp_path):
     path = str(tmp_path / "tune.json")
+    key = autotune.cache_key("k", 1, 2, 3)
     cache = autotune.AutotuneCache(path)
-    assert cache.get("k:1x2x3:cpu") is None
-    cache.put("k:1x2x3:cpu", (8, 16, 32))
+    assert cache.get(key) is None
+    cache.put(key, (8, 16, 32))
     reloaded = autotune.AutotuneCache(path).load()
-    assert reloaded.get("k:1x2x3:cpu") == (8, 16, 32)
+    assert reloaded.get(key) == (8, 16, 32)
     assert len(reloaded) == 1
     # corrupt file degrades to empty, not an exception
     with open(path, "w") as f:
         f.write("{not json")
-    assert autotune.AutotuneCache(path).load().get("k:1x2x3:cpu") is None
+    with pytest.warns(RuntimeWarning):
+        assert autotune.AutotuneCache(path).load().get(key) is None
+
+
+def test_autotune_cache_key_salts_backend_and_version():
+    """The committed-cache contract: a key names kernel version AND
+    backend, so caches can never leak block choices across either."""
+    k_cpu = autotune.cache_key("int8_matmul", 8, 16, 32, backend="cpu")
+    k_tpu = autotune.cache_key("int8_matmul", 8, 16, 32, backend="tpu")
+    assert k_cpu != k_tpu
+    assert k_cpu == "int8_matmul@v1:8x16x32:cpu"
+    # dwconv_w4 was re-gridded (H-tiling) — its salt must be bumped so
+    # whole-map-era caches orphan instead of mis-steering the new grid
+    assert autotune.KERNEL_VERSIONS["dwconv_w4"] >= 2
+    assert "@v2" in autotune.cache_key("dwconv_w4", 8, 16, 32)
+
+
+def test_autotune_cache_drops_foreign_and_legacy_keys(tmp_path):
+    """Old-format (unsalted) and foreign entries are dropped through the
+    RuntimeWarning salvage path; valid salted entries survive."""
+    import json
+
+    path = str(tmp_path / "tune.json")
+    good = autotune.cache_key("k", 1, 2, 3)
+    with open(path, "w") as f:
+        json.dump({good: [8, 16, 32],
+                   "k:1x2x3:cpu": [8, 8, 8],         # legacy unsalted
+                   "not a key at all": [8, 8, 8],    # foreign junk
+                   autotune.cache_key("k", 9, 9, 9): [8, "x", 8]}, f)
+    with pytest.warns(RuntimeWarning, match="3 corrupt"):
+        cache = autotune.AutotuneCache(path).load()
+    assert cache.get(good) == (8, 16, 32)
+    assert len(cache) == 1
 
 
 def test_autotune_never_benches_inside_a_trace(tmp_path):
@@ -336,7 +369,7 @@ def test_autotune_never_benches_inside_a_trace(tmp_path):
     jax.jit(traced)(jnp.zeros((2,)))
     assert calls == []
     assert autotune.AutotuneCache(path).load().get(
-        f"fake_traced:64x64x64:{jax.default_backend()}") is None
+        autotune.cache_key("fake_traced", 64, 64, 64)) is None
 
 
 def test_autotune_all_failures_do_not_poison_cache(tmp_path):
@@ -351,7 +384,7 @@ def test_autotune_all_failures_do_not_poison_cache(tmp_path):
     assert best == autotune.heuristic_blocks(64, 64, 64)
     # the untuned fallback must NOT be persisted under the tuned key
     assert autotune.AutotuneCache(path).load().get(
-        f"fake_broken:64x64x64:{jax.default_backend()}") is None
+        autotune.cache_key("fake_broken", 64, 64, 64)) is None
 
 
 def test_autotune_times_candidates_and_persists(tmp_path):
@@ -366,18 +399,22 @@ def test_autotune_times_candidates_and_persists(tmp_path):
         time.sleep(times[blocks] / 1000.0)
         return np.zeros(())
 
+    autotune.reset_probe_count()
     best = autotune.blocks_for("fake_kernel", 64, 64, 64, interpret=False,
                                bench_fn=bench, cache_path=path,
                                candidates=cands, force_tune=True)
     assert best == (16, 16, 16)
     assert set(calls) == set(cands)
-    # second call: served from the persisted cache, no re-benchmarking
+    assert autotune.tuning_probe_count() == len(cands)
+    # second call (no force): served from the persisted cache — no
+    # re-benchmarking, no new probes
     calls.clear()
     again = autotune.blocks_for("fake_kernel", 64, 64, 64, interpret=False,
                                 bench_fn=bench, cache_path=path,
-                                candidates=cands, force_tune=True)
+                                candidates=cands)
     assert again == (16, 16, 16) and calls == []
+    assert autotune.tuning_probe_count() == len(cands)
     # and it survives a fresh cache object reading the JSON file
     fresh = autotune.AutotuneCache(path).load()
-    assert fresh.get(f"fake_kernel:64x64x64:{jax.default_backend()}") == \
+    assert fresh.get(autotune.cache_key("fake_kernel", 64, 64, 64)) == \
         (16, 16, 16)

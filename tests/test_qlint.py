@@ -357,15 +357,21 @@ def test_registry_trace_names_and_rule_expectations():
     records, nothing more."""
     from repro.analysis.traces import registry_traces
     traces = registry_traces("efficientvit-b1-r224", recipes=("m2q-w8a8",))
-    assert [t.name for t in traces] == ["efficientvit-b1-r224/m2q/forward"]
+    assert [t.name for t in traces] == [
+        "efficientvit-b1-r224/m2q/forward",
+        "efficientvit-b1-r224/m2q/forward-r384",
+        "efficientvit-b1-r224/m2q/forward-r512",
+    ]
     vs = lint(traces[0])
     by_rule = {}
     for v in vs:
         by_rule.setdefault(v.rule, []).append(v.path)
-    # packed-w4 DWConv: nibble-unpack concats + one in-kernel dequant conv
+    # packed-w4 depthwise (3x3 w_dw + 5x5 w_agg): nibble-unpack concats
+    # + one in-kernel dequant conv
     assert set(by_rule) == {"no-gather-concat", "no-dequant-matmul",
                             "unguarded-act-quant"}
-    assert all("w_dw" in p for p in by_rule["no-gather-concat"])
+    assert all("w_dw" in p or "w_agg" in p
+               for p in by_rule["no-gather-concat"])
 
 
 def test_forward_jax_roundtrip_matches_graph_dtypes():
