@@ -309,6 +309,87 @@ def bench_daemon(cfg, params, n_interactive: int = 4, n_batch: int = 8,
             for name, st in daemon.class_stats.items()]
 
 
+def bench_recovery(cfg, params, n_requests: int = 4, max_new: int = 6,
+                   max_batch: int = 2, timeout: float = 300.0) -> list:
+    """Crash/hang recovery rows (ISSUE 10): wall-clock MTTR and goodput
+    ACROSS a daemon restart, under the journal-backed Supervisor.
+
+    Each scenario arms the FIRST engine build with an uncontained fault
+    (``crash@decode`` kills the serve thread, ``hang@decode`` wedges a
+    step past the watchdog threshold), submits the workload, and lets the
+    supervisor detect -> tear down -> back off -> rebuild -> replay.  The
+    row reports restarts, MTTR (detection to daemon-restored,
+    ``Supervisor.last_recovery_s``), goodput across the restart
+    (completed / submitted), lost handles (journal ``pending`` — must be
+    0), and whether every replayed result MATCHES the uninterrupted
+    fault-free greedy reference.  Engines are warmed fault-free before
+    arming so a cold first step cannot masquerade as a hang.
+    """
+    import tempfile
+    from pathlib import Path as _P
+
+    from repro.serving.engine import Engine
+    from repro.serving.faults import FaultInjector, FaultSpec
+    from repro.serving.journal import RequestJournal
+    from repro.serving.supervisor import RestartPolicy, Supervisor
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 13)),
+                            dtype=np.int32) for _ in range(n_requests)]
+
+    ref_eng = Engine(cfg, params, max_batch=max_batch, max_len=64)
+    refs = [ref_eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    ref_eng.run()
+    expected = [r.handle.result() for r in refs]
+
+    rows = []
+    for spec in (f"crash@decode:{max_new}", f"hang@decode:{max_new}:30000"):
+        builds = []
+
+        def factory(spec=spec, builds=builds):
+            eng = Engine(cfg, params, max_batch=max_batch, max_len=64)
+            for p in prompts:  # warm every shape fault-free, then arm
+                eng.submit(p, max_new_tokens=max_new)
+            eng.run()
+            if not builds:
+                eng.faults = FaultInjector([FaultSpec.parse(spec)])
+            builds.append(1)
+            return eng
+
+        jpath = _P(tempfile.mkdtemp(prefix="repro-bench-recovery-"),
+                   ) / "journal.jsonl"
+        sup = Supervisor(
+            factory, journal=RequestJournal(jpath),
+            policy=RestartPolicy(hang_threshold_s=2.0, backoff_base_s=0.02,
+                                 poll_interval_s=0.05))
+        t0 = time.perf_counter()
+        sup.start()
+        handles = [sup.submit(p, request_id=f"bench-{i}",
+                              max_new_tokens=max_new)
+                   for i, p in enumerate(prompts)]
+        outs = [h.result(timeout=timeout) for h in handles]
+        wall = time.perf_counter() - t0
+        rec = sup.journal.reconcile()
+        sup.shutdown(drain=True, timeout=timeout)
+        completed = sum(1 for h in handles if h.state == "DONE")
+        rows.append({
+            "engine": "recovery", "fault_spec": spec, "n": n_requests,
+            "max_new": max_new, "max_batch": max_batch,
+            "restarts": sup.restarts, "replayed": sup.replayed,
+            "mttr_s": round(sup.last_recovery_s or 0.0, 4),
+            "wall_s": round(wall, 4),
+            "goodput": round(completed / n_requests, 4),
+            "lost_handles": rec["pending"],
+            "journal_submitted": rec["submitted"],
+            "journal_terminal": rec["terminal"],
+            "journal_exact": rec["exact"],
+            "match_reference": all(
+                list(a) == list(b) for a, b in zip(outs, expected)),
+            "restart_log": sup.restart_log,
+        })
+    return rows
+
+
 def collect(smoke: bool = False) -> dict:
     """All rows.  ``smoke=True`` shrinks traffic to test-suite scale."""
     import jax
@@ -362,6 +443,11 @@ def collect(smoke: bool = False) -> dict:
         bench_vision_faults(vcfg, vparams, f"nan@vision:*/{k_vis}",
                             vision_rates[-1], n_img),
     ]
+    # crash-recovery scenarios (ISSUE 10): uncontained crash + hung step,
+    # supervisor restart, journal replay — MTTR and goodput-across-restart
+    report["recovery"] = bench_recovery(
+        tcfg, tparams, n_requests=3 if smoke else 4,
+        max_new=3 if smoke else 6)
     return report
 
 
@@ -387,6 +473,11 @@ def main(argv=None):
               f"fired={row['faults_fired']} "
               f"recovered={row['recovered']} "
               f"(completed={row['completed']} failed={row['failed']})")
+    for row in report["recovery"]:
+        print(f"  recovery fault={row['fault_spec']:<20} "
+              f"restarts={row['restarts']} mttr={row['mttr_s']:.2f}s "
+              f"goodput={row['goodput']:.2f} lost={row['lost_handles']} "
+              f"match_ref={row['match_reference']}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,10 @@
 # on NEW violations AND (--fail-on-gone) on stale ledger rows, keeping
 # the ratchet tight in both directions.  The daemon smoke stage streams
 # one real wall-clock request through the background serve loop
-# (docs/serving.md).  The autotune sweep smoke asserts the committed
+# (docs/serving.md); the crash-recovery smoke kills that loop with an
+# injected uncontained crash and proves the supervisor + journal replay
+# it back to exact reconciliation (docs/serving.md, "Supervision &
+# recovery").  The autotune sweep smoke asserts the committed
 # CI-shape cache is complete — serving traces must be pure cache hits,
 # zero tuning probes (docs/kernels.md).  The full tier-1 gate remains
 # ./test.sh with no -m filter.
@@ -57,6 +60,10 @@ PYTHONPATH=src python -m repro.launch.autotune_sweep --smoke --cache results/aut
 echo "== serving daemon smoke (wall-clock streamed request, clean shutdown)"
 PYTHONPATH=src python -m repro.launch.daemon --arch qwen1.5-0.5b --reduced \
     --smoke --no-quant --max-new 4 --max-batch 2 --timeout 60
+
+echo "== crash-recovery smoke (journaled daemon under crash@decode: supervised restart, replay, exact reconcile)"
+PYTHONPATH=src python -m repro.launch.daemon --arch qwen1.5-0.5b --reduced \
+    --recovery-smoke --no-quant --requests 3 --max-new 4 --max-batch 2 --timeout 120
 
 echo "== fast suite (./test.sh -m 'not slow')"
 exec ./test.sh -m "not slow"

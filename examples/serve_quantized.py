@@ -33,6 +33,12 @@ interactive request's tokens as they decode through the streaming Handle
 API.  See docs/serving.md, "Running the daemon"; the full CLI (SLO
 mix, smoke mode, multi-host mesh launch) is ``repro.launch.daemon``.
 
+Beyond the daemon: production serving wraps the daemon in a
+``serving.supervisor.Supervisor`` — request journal + replay-on-restart,
+hung-step watchdog, crash-loop backoff, health/readiness probes — see
+docs/serving.md, "Supervision & recovery", and the
+``repro.launch.daemon --health-file`` / ``--recovery-smoke`` paths.
+
   PYTHONPATH=src python examples/serve_quantized.py [--arch qwen1.5-0.5b]
   PYTHONPATH=src python examples/serve_quantized.py --fault-spec raise@decode:*/6
   PYTHONPATH=src python examples/serve_quantized.py --daemon --stream

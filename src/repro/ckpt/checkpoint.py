@@ -1,10 +1,19 @@
 """Fault-tolerant checkpointing.
 
-* Atomic publish: write to ``step_XXXXXXXX.tmp``, fsync, rename.  A crash
-  mid-save never corrupts the latest checkpoint.
-* Integrity: per-leaf SHA256 in the manifest, verified on restore.
+* Atomic publish: arrays land in ``step_XXXXXXXX.tmp`` first, the
+  manifest is the PUBLISH MARKER (written inside the tmp dir via its own
+  tmp file + ``os.replace``, after the arrays are fsync'd — a dir without
+  a manifest is invisible to :func:`list_steps`), and the dir itself
+  publishes by rename.  A crash at ANY point mid-save never publishes a
+  torn step: the reader either sees the previous checkpoint or the
+  complete new one, never a partial hybrid.
+* Integrity: per-leaf SHA256 in the manifest, verified on restore
+  (:class:`ChecksumMismatchError` names the corrupt leaf and both
+  digests).
 * Async: ``save_async`` snapshots to host memory synchronously (cheap) and
-  writes in a background thread so the train loop keeps stepping.
+  writes in a background thread so the train loop keeps stepping.  A
+  background write that FAILS is not silent: the worker's exception is
+  re-raised from the next ``wait()`` / ``save_async()``.
 * Elastic: leaves are saved *unsharded* (device_get gathers); restore takes
   any target sharding/mesh — a job restarted on a different device count
   just pjits the restored tree with its own specs.
@@ -29,6 +38,29 @@ import numpy as np
 _MANIFEST = "manifest.json"
 
 
+class ChecksumMismatchError(IOError):
+    """A restored leaf's bytes do not hash to the manifest's digest —
+    on-disk corruption (or a manifest from a different save).  Carries the
+    leaf key and both digests so the error names WHAT rotted."""
+
+    def __init__(self, key: str, expected: str, actual: str):
+        super().__init__(
+            f"checksum mismatch for leaf {key!r}: manifest sha256 "
+            f"{expected[:16]}..., file hashes to {actual[:16]}... — the "
+            "checkpoint is corrupt on disk")
+        self.key = key
+        self.expected = expected
+        self.actual = actual
+
+
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _leaf_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -44,13 +76,23 @@ def _sha256(arr: np.ndarray) -> str:
 
 
 def save(ckpt_dir, step: int, tree, extra: Optional[dict] = None) -> Path:
-    """Synchronous atomic save. Returns the published directory."""
+    """Synchronous atomic save. Returns the published directory.
+
+    Crash-safe at every point: arrays are written and fsync'd BEFORE the
+    manifest exists (a manifest-less dir is invisible to
+    :func:`list_steps`), the manifest itself lands via tmp +
+    ``os.replace``, and an existing published step is swapped aside —
+    never rmtree'd in place — so an overwriting save that dies midway
+    leaves the reader a COMPLETE checkpoint (old or new), not a torn one.
+    """
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     final = ckpt_dir / f"step_{step:08d}"
     tmp = ckpt_dir / f"step_{step:08d}.tmp"
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    aside = ckpt_dir / f"step_{step:08d}.old-tmp"
+    for stale in (tmp, aside):  # debris from a previous crashed save
+        if stale.exists():
+            shutil.rmtree(stale)
     tmp.mkdir()
     leaves = _leaf_paths(tree)
     manifest = {"step": step, "extra": extra or {}, "leaves": []}
@@ -63,13 +105,20 @@ def save(ckpt_dir, step: int, tree, extra: Optional[dict] = None) -> Path:
             "key": key, "name": name, "shape": list(arr.shape),
             "dtype": str(arr.dtype), "sha256": _sha256(arr)})
     np.savez(tmp / "arrays.npz", **arrays)
-    with open(tmp / _MANIFEST, "w") as f:
+    _fsync_file(tmp / "arrays.npz")
+    # the manifest is the publish marker: atomic even within the tmp dir
+    # so a torn manifest write can never be mistaken for a complete save
+    mtmp = tmp / (_MANIFEST + ".tmp")
+    with open(mtmp, "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    os.replace(mtmp, tmp / _MANIFEST)
     if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
+        os.rename(final, aside)  # swap aside, publish, then drop — a
+    os.rename(tmp, final)        # crash in between leaves old OR new,
+    if aside.exists():           # both complete (neither is ever torn)
+        shutil.rmtree(aside)
     return final
 
 
@@ -81,21 +130,32 @@ class AsyncCheckpointer:
         self.ckpt_dir = Path(ckpt_dir)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_saved: Optional[int] = None
 
     def wait(self):
+        """Block until the in-flight save lands.  A background write that
+        FAILED re-raises here (and keeps re-raising until acknowledged by
+        clearing it) — an async checkpointer must not turn a full disk
+        into silently-missing checkpoints."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def save_async(self, step: int, tree, extra: Optional[dict] = None):
-        self.wait()
+        self.wait()  # re-raises a previous failed background save
         host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
 
         def work():
-            save(self.ckpt_dir, step, host_tree, extra)
-            self.last_saved = step
-            self._gc()
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                self.last_saved = step
+                self._gc()
+            except BaseException as e:  # surfaced by the next wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -153,8 +213,10 @@ def restore(ckpt_dir, step: int, template, shardings=None, verify: bool = True):
             raise KeyError(f"checkpoint missing leaf {key!r}")
         rec = by_key[key]
         arr = data[rec["name"]]
-        if verify and _sha256(arr) != rec["sha256"]:
-            raise IOError(f"checksum mismatch for {key!r}")
+        if verify:
+            actual = _sha256(arr)
+            if actual != rec["sha256"]:
+                raise ChecksumMismatchError(key, rec["sha256"], actual)
         if tuple(arr.shape) != tuple(tpl.shape):
             raise ValueError(
                 f"shape mismatch for {key!r}: ckpt {arr.shape} vs template "

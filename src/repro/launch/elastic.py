@@ -15,41 +15,72 @@ verifies exact resume from the published checkpoint.
 from __future__ import annotations
 
 import argparse
-import json
 import signal
 import subprocess
 import sys
 import time
-from pathlib import Path
+from typing import Optional
+
+
+def _latest_ckpt_step(ckpt_dir) -> Optional[int]:
+    # lazy: the launcher itself should not pay the jax import unless it
+    # needs to inspect checkpoints
+    from ..ckpt import checkpoint as ckpt
+    return ckpt.latest_step(ckpt_dir)
 
 
 def run_supervised(arch: str, steps: int, ckpt_dir: str, metrics: str,
-                   kill_after_s: float = None, max_restarts: int = 3,
-                   batch: int = 4, seq: int = 32) -> int:
-    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", arch,
-           "--reduced", "--steps", str(steps), "--batch", str(batch),
-           "--seq", str(seq), "--ckpt-dir", ckpt_dir, "--ckpt-every", "5",
-           "--metrics", metrics]
+                   kill_after_s: Optional[float] = None,
+                   max_restarts: int = 3,
+                   batch: int = 4, seq: int = 32,
+                   ckpt_every: int = 5, log_every: int = 10,
+                   stop_at_step: Optional[int] = None,
+                   crash_at_step: Optional[int] = None) -> int:
+    """Run ``launch.train`` under restart supervision until the final
+    step's checkpoint is PUBLISHED; returns the restart count.
+
+    Completion is judged by the checkpoint, not the exit code: the train
+    loop's final sync save publishes ``steps - 1`` exactly when it ran to
+    the end, so a worker that exits rc==0 WITHOUT that checkpoint (a
+    ``--stop-at-step`` early exit, a preemption save) is a
+    clean-but-incomplete worker — counted and logged as a restart like
+    any crash.  Failure injection (first attempt only, so the job can
+    finish): ``kill_after_s`` SIGTERMs mid-run, ``stop_at_step`` /
+    ``crash_at_step`` forward to ``launch.train``.
+    """
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", arch,
+            "--reduced", "--steps", str(steps), "--batch", str(batch),
+            "--seq", str(seq), "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", str(ckpt_every),
+            "--log-every", str(log_every), "--metrics", metrics]
     restarts = 0
     while True:
+        cmd = list(base)
+        if restarts == 0:  # injected faults fire once, on the first run
+            if stop_at_step is not None:
+                cmd += ["--stop-at-step", str(stop_at_step)]
+            if crash_at_step is not None:
+                cmd += ["--crash-at-step", str(crash_at_step)]
         proc = subprocess.Popen(cmd)
         if kill_after_s is not None and restarts == 0:
             time.sleep(kill_after_s)
             proc.send_signal(signal.SIGTERM)  # simulated preemption
         rc = proc.wait()
-        if rc == 0:
-            # completed? check metrics for the final step
-            done = False
-            if Path(metrics).exists():
-                lines = Path(metrics).read_text().strip().splitlines()
-                if lines:
-                    done = json.loads(lines[-1])["step"] >= steps - 1
-            if done or kill_after_s is None or restarts > 0:
-                return restarts
+        latest = _latest_ckpt_step(ckpt_dir)
+        if rc == 0 and latest is not None and latest >= steps - 1:
+            return restarts
         restarts += 1
         if restarts > max_restarts:
-            raise RuntimeError("too many restarts")
-        print(f"[elastic] restart #{restarts} (resume from checkpoint)")
+            raise RuntimeError(
+                f"too many restarts ({restarts} > {max_restarts}); "
+                f"latest checkpoint step {latest}")
+        if rc == 0:
+            print(f"[elastic] worker exited cleanly (rc=0) without "
+                  f"reaching step {steps - 1} (latest checkpoint: "
+                  f"{latest}); counted restart #{restarts}")
+        else:
+            print(f"[elastic] worker died (rc={rc}); restart #{restarts} "
+                  "(resume from checkpoint)")
 
 
 def main():
@@ -60,9 +91,18 @@ def main():
     ap.add_argument("--metrics", default="/tmp/repro_elastic_metrics.jsonl")
     ap.add_argument("--kill-at", type=float, default=None,
                     help="seconds until simulated preemption")
+    ap.add_argument("--stop-at-step", type=int, default=None,
+                    help="first run exits cleanly after this step "
+                         "(clean-but-incomplete worker)")
+    ap.add_argument("--crash-at-step", type=int, default=None,
+                    help="first run hard-crashes after this step")
+    ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args()
     restarts = run_supervised(args.arch, args.steps, args.ckpt_dir,
-                              args.metrics, kill_after_s=args.kill_at)
+                              args.metrics, kill_after_s=args.kill_at,
+                              max_restarts=args.max_restarts,
+                              stop_at_step=args.stop_at_step,
+                              crash_at_step=args.crash_at_step)
     print(f"[elastic] finished with {restarts} restart(s)")
 
 

@@ -27,7 +27,15 @@ def main():
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics", default=None)
+    ap.add_argument("--stop-at-step", type=int, default=None,
+                    help="exit cleanly (rc 0) after this step without "
+                         "completing — elastic-launcher fault injection")
+    ap.add_argument("--crash-at-step", type=int, default=None,
+                    help="hard-kill (os._exit) after this step's async "
+                         "checkpoint lands — elastic-launcher fault "
+                         "injection")
     args = ap.parse_args()
 
     cfg = (REDUCED if args.reduced else ARCHS)[args.arch]
@@ -36,7 +44,10 @@ def main():
                      microbatches=args.microbatches,
                      grad_compression=args.grad_compression,
                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                     metrics_path=args.metrics)
+                     log_every=args.log_every,
+                     metrics_path=args.metrics,
+                     stop_at_step=args.stop_at_step,
+                     crash_at_step=args.crash_at_step)
     _, _, info = train(cfg, tc)
     if info["losses"]:
         print(f"[train] arch={cfg.name} steps={info['last_step'] + 1} "

@@ -52,6 +52,7 @@ from .slo import DEFAULT_CLASSES, ClassFlushPolicy, classes_by_name
 
 # daemon lifecycle states
 _NEW, _RUNNING, _STOPPING, _STOPPED = "new", "running", "stopping", "stopped"
+_CRASHED = "crashed"  # the serve thread died on an uncontained exception
 
 
 class ServingDaemon:
@@ -89,6 +90,16 @@ class ServingDaemon:
         self._state = _NEW
         self._drain = True
         self._thread: Optional[threading.Thread] = None
+        # supervision surface (serving.supervisor): ``crashed`` records an
+        # uncontained exception that killed the serve thread; ``heartbeat``
+        # is the real-clock time the loop last COMPLETED a pass; and
+        # ``step_started`` is non-None exactly while the loop is inside
+        # one engine advance — a hung step is step_started staying set
+        # while the clock runs on (an idle, sleeping loop never looks
+        # hung because step_started is None between passes)
+        self.crashed: Optional[BaseException] = None
+        self.heartbeat: Optional[float] = None
+        self.step_started: Optional[float] = None
         # outstanding (unresolved) handles, per class and as a set — the
         # per-class budget reads the count; non-drain shutdown cancels
         # the set.  Guarded by _wake's lock.
@@ -106,7 +117,7 @@ class ServingDaemon:
                     "one start/shutdown lifecycle")
             self._state = _RUNNING
         self._thread = threading.Thread(
-            target=self._loop, name="repro-serve", daemon=True)
+            target=self._run, name="repro-serve", daemon=True)
         self._thread.start()
         return self
 
@@ -119,6 +130,28 @@ class ServingDaemon:
     @property
     def running(self) -> bool:
         return self._state == _RUNNING
+
+    @property
+    def outstanding(self) -> int:
+        """Unresolved handles registered through :meth:`submit` (queued
+        plus in flight) — a health-probe input."""
+        with self._wake:
+            return len(self._handles)
+
+    def abort(self):
+        """Supervisor teardown of a crashed/hung daemon: mark it STOPPING
+        (non-drain) WITHOUT joining the serve thread — a hung thread
+        cannot be joined, and a crashed one is already gone.  Returns the
+        outstanding handles so the caller can fail them with the teardown
+        reason (``HungStepError`` / ``EngineCrashError``); if the stuck
+        thread ever wakes it sees STOPPING+non-drain and exits.  Regular
+        clients should use :meth:`shutdown`."""
+        with self._wake:
+            if self._state in (_RUNNING, _CRASHED):
+                self._state = _STOPPING
+            self._drain = False
+            self._wake.notify_all()
+            return list(self._handles.values())
 
     def shutdown(self, drain: bool = True,
                  timeout: Optional[float] = None) -> None:
@@ -251,10 +284,34 @@ class ServingDaemon:
             return False
         return True
 
+    def _run(self) -> None:
+        """Thread target: the serve loop under an UNCONTAINED-crash
+        recorder.  Per-request failures never reach here (the engines
+        contain them with ``except Exception``); what does — a
+        ``BaseException`` like ``faults.UncontainedCrash``, or a genuine
+        engine-loop bug escaping containment — kills the loop.  Record
+        it and flip to CRASHED so ``submit()`` fails fast and a
+        supervisor can detect, tear down, and restart.  Deliberately NOT
+        re-contained: outstanding handles stay PENDING for the
+        supervisor to fail/replay (plain ``shutdown()`` still cancels
+        them for unsupervised users)."""
+        try:
+            self._loop()
+        except BaseException as e:  # noqa: BLE001 — crash recorder
+            with self._wake:
+                self.crashed = e
+                self.step_started = None
+                if self._state == _RUNNING:
+                    self._state = _CRASHED
+                self._wake.notify_all()
+
     def _loop(self) -> None:
         sched = self.engine.scheduler
         while True:
+            self.step_started = time.monotonic()
             busy = self._tick() > 0
+            self.step_started = None
+            self.heartbeat = time.monotonic()
             with self._wake:
                 if self._state == _STOPPING:
                     if not self._drain or self._idle():

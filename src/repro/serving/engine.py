@@ -165,6 +165,10 @@ class Engine:
         # finite check here: that would force a device sync per decode
         # step — numerics ride the in-graph sticky flag instead)
         self.fallback_guard = _kops.FallbackGuard(check_finite=False)
+        # real-clock time step() last ENTERED, regardless of the injected
+        # scheduler clock: the supervision layer's liveness signal (a
+        # virtual-clock engine still beats wall-clock time while stepped)
+        self.heartbeat: Optional[float] = None
         self._ragged = bool(getattr(self.model, "RAGGED_PREFILL", False))
         self.cache = self.model.init_cache(cfg, max_batch, max_len,
                                            dtype=jnp.float32)
@@ -632,6 +636,7 @@ class Engine:
         handles get the exception, their slots free — and the engine keeps
         serving the queue.  The step itself never raises.
         """
+        self.heartbeat = time.monotonic()
         self._sweep_slots()  # cancellations + mid-decode deadline expiry
         self._admit()
         live_mask = np.asarray([r is not None for r in self.slots], bool)

@@ -22,6 +22,20 @@ callers can catch precisely what they can handle:
   :mod:`repro.serving.faults` harness on a provoked executor failure
   (defined there, re-exported here).
 
+Process-level failures (the supervision layer, ``serving.supervisor``):
+
+* :class:`HungStepError` — the engine's serve thread was inside one step
+  longer than the supervisor's watchdog threshold; the supervisor fails
+  the live engine-side handles with this, tears the daemon down, and
+  restarts.  Supervised client handles do NOT see it — their requests
+  are replayed on the fresh daemon.
+* :class:`EngineCrashError` — the serve thread died on an uncontained
+  exception (e.g. :class:`~repro.serving.faults.UncontainedCrash`, the
+  provoked repro of an engine-loop bug); same supervisor treatment.
+* :class:`CircuitOpenError` — the supervisor's circuit breaker tripped
+  (too many restarts inside the window): outstanding requests fail with
+  this and new submits are rejected until a fresh supervisor starts.
+
 Executor/engine failures that are none of the above propagate the original
 exception through ``Handle.result()`` with the handle in state ``FAILED``.
 """
@@ -30,7 +44,8 @@ from __future__ import annotations
 from ..kernels.ops import NumericalError
 
 __all__ = ["QueueFullError", "CancelledError", "RequestTimedOut",
-           "NumericalError", "InjectedFault"]
+           "NumericalError", "InjectedFault", "UncontainedCrash",
+           "HungStepError", "EngineCrashError", "CircuitOpenError"]
 
 
 class QueueFullError(RuntimeError):
@@ -45,13 +60,24 @@ class RequestTimedOut(TimeoutError):
     """The request's per-request deadline expired (queued or in flight)."""
 
 
-def _injected_fault():
-    # late import: faults.py imports this module for the re-export chain
-    from .faults import InjectedFault
-    return InjectedFault
+class HungStepError(RuntimeError):
+    """The serve thread sat inside one engine step past the watchdog
+    threshold (supervisor teardown; in-flight attempts fail with this)."""
+
+
+class EngineCrashError(RuntimeError):
+    """The serve thread died on an uncontained exception; the supervisor
+    restarts the daemon (in-flight attempts fail with this)."""
+
+
+class CircuitOpenError(RuntimeError):
+    """The supervisor's restart circuit breaker is open (NOT_READY):
+    too many restarts within the window — requests are rejected."""
 
 
 def __getattr__(name):
-    if name == "InjectedFault":
-        return _injected_fault()
+    # late imports: faults.py imports this module for the re-export chain
+    if name in ("InjectedFault", "UncontainedCrash"):
+        from . import faults
+        return getattr(faults, name)
     raise AttributeError(name)

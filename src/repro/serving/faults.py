@@ -10,7 +10,7 @@ Spec grammar (one spec; join several with commas)::
 
     KIND@SITE:WHEN[:DELAY_MS]
 
-    KIND   raise | delay | nan
+    KIND   raise | delay | nan | hang | crash
     SITE   an executor call site, or * for any.  The built-in sites:
              prefill        token Engine prefill batches
              decode         token Engine decode steps
@@ -21,7 +21,8 @@ Spec grammar (one spec; join several with commas)::
                             so the guard's XLA retry is what recovers
     WHEN   N      fire on the Nth call at that site (1-based), or
            */K    fire on every Kth call (a fault *rate*)
-    DELAY  milliseconds, for KIND=delay (default 25)
+    DELAY  milliseconds, for KIND=delay (default 25) and KIND=hang
+           (max stall; default 30000 — the watchdog should fire first)
 
 Examples::
 
@@ -53,6 +54,18 @@ What each KIND means at engine level:
   At a ``*.kernel`` site the FallbackGuard sees the poison and retries
   the step on the XLA path.
 
+* ``hang`` — the call BLOCKS (the engine thread stalls inside its step)
+  until the injector's :meth:`FaultInjector.release_hangs` fires or the
+  spec's DELAY_MS elapses, whichever is first.  Nothing raises: from the
+  outside the step is simply not finishing — exactly what the
+  supervisor's hung-step watchdog (``serving.supervisor``) must detect
+  by heartbeat age.
+* ``crash`` — the call raises :class:`UncontainedCrash`, a
+  ``BaseException`` subclass that sails THROUGH the engines'
+  per-batch ``except Exception`` containment and kills the serving
+  thread: the provoked analogue of an engine-loop bug or a dying
+  runtime.  Only the process-level supervisor can recover from it.
+
   Detection boundary: the default numerics check watches the LOGITS.
   On a fully-quantized decode path, activation quantization can launder
   a cache NaN into finite garbage before it reaches the logits
@@ -68,16 +81,32 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
 ENV_VAR = "REPRO_FAULT_SPEC"
 
-_KINDS = ("raise", "delay", "nan")
+_KINDS = ("raise", "delay", "nan", "hang", "crash")
+
+# a hang with no explicit DELAY_MS stalls this long before giving up on
+# its own — long enough that any sanely-configured watchdog fires first
+_HANG_DEFAULT_MS = 30_000.0
 
 
 class InjectedFault(RuntimeError):
     """A provoked executor failure (FaultSpec kind ``raise``)."""
+
+
+class UncontainedCrash(BaseException):
+    """A provoked UNCONTAINED failure (FaultSpec kind ``crash``).
+
+    Deliberately a ``BaseException`` subclass: the engines contain
+    per-batch failures with ``except Exception``, so this raises straight
+    through ``Engine.step()`` / ``VisionEngine.poll()`` and kills the
+    daemon's serve thread — the repro for an engine-loop bug, not a
+    per-request failure.  Recovery is the supervisor's job.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +143,8 @@ class FaultSpec:
             kw = {}
             if len(parts) > 2:
                 kw["delay_ms"] = float(parts[2])
+            elif kind.strip().lower() == "hang":
+                kw["delay_ms"] = _HANG_DEFAULT_MS
             if when.startswith("*/"):
                 kw["every_k"] = int(when[2:])
             else:
@@ -140,15 +171,29 @@ class FaultAction:
     site: str
     call_index: int
     do_raise: bool = False
+    do_crash: bool = False
     delay_ms: float = 0.0
+    hang_ms: float = 0.0
     poison: bool = False  # caller applies the NaN-poisoning (site-shaped)
+    # set by the injector: release_hangs() unblocks a hanging fire()
+    _hang_release: Optional[threading.Event] = None
 
     def fire(self) -> None:
-        """Apply the delay, then raise :class:`InjectedFault` if the call
-        is spec'd to fail.  Callers check ``.poison`` themselves (where
-        the NaN lands is site-specific)."""
+        """Hang (until released or ``hang_ms`` elapses), then delay, then
+        raise :class:`UncontainedCrash` / :class:`InjectedFault` if the
+        call is spec'd to fail.  Callers check ``.poison`` themselves
+        (where the NaN lands is site-specific)."""
+        if self.hang_ms > 0:
+            if self._hang_release is not None:
+                self._hang_release.wait(timeout=self.hang_ms / 1000.0)
+            else:
+                time.sleep(self.hang_ms / 1000.0)
         if self.delay_ms > 0:
             time.sleep(self.delay_ms / 1000.0)
+        if self.do_crash:
+            raise UncontainedCrash(
+                f"injected uncontained crash: call {self.call_index} at "
+                f"site {self.site!r}")
         if self.do_raise:
             raise InjectedFault(
                 f"injected fault: call {self.call_index} at site "
@@ -166,6 +211,17 @@ class FaultInjector:
         self.specs: List[FaultSpec] = list(specs)
         self.calls: Dict[str, int] = {}
         self.fired: List[tuple] = []  # (site, call_index, kind)
+        # one shared release latch for every hang this injector fires: a
+        # supervisor tearing down a hung engine sets it so the stuck
+        # thread unblocks promptly instead of sleeping out its DELAY_MS
+        self._hang_release = threading.Event()
+
+    def release_hangs(self) -> None:
+        """Unblock every in-flight (and future) ``hang`` fault from this
+        injector — called by the supervisor after it has torn the hung
+        daemon down, so the abandoned thread exits instead of squatting
+        a core until the hang's DELAY_MS elapses."""
+        self._hang_release.set()
 
     @classmethod
     def parse(cls, text: str) -> "FaultInjector":
@@ -189,6 +245,11 @@ class FaultInjector:
                 act.delay_ms = max(act.delay_ms, spec.delay_ms)
             elif spec.kind == "nan":
                 act.poison = True
+            elif spec.kind == "hang":
+                act.hang_ms = max(act.hang_ms, spec.delay_ms)
+                act._hang_release = self._hang_release
+            elif spec.kind == "crash":
+                act.do_crash = True
             self.fired.append((site, n, spec.kind))
         return act
 

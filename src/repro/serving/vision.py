@@ -107,6 +107,9 @@ class VisionEngine:
         # anyway) so a NaN-producing kernel also degrades to XLA
         self.fallback_guard = _kops.FallbackGuard(
             check_finite=True, faults=self.faults, site="vision.kernel")
+        # real-clock time poll() last entered (supervision liveness signal,
+        # independent of any injected virtual scheduler clock)
+        self.heartbeat: Optional[float] = None
         # ``fallback`` is STATIC: the guard's XLA retry needs its own
         # trace, not the kernel-path trace replayed under another scope
         self._fwd = jax.jit(self._fwd_impl, static_argnames=("fallback",))
@@ -241,6 +244,7 @@ class VisionEngine:
         fail only their batch's handles (each handle's ``result()``
         re-raises), never this call, so serving loops keep polling.
         ``scheduler.next_deadline()`` says how long they may sleep first."""
+        self.heartbeat = time.monotonic()
         return self.scheduler.poll()
 
     def flush(self) -> Optional[np.ndarray]:

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import signal
 import time
 from typing import Optional
@@ -43,6 +44,14 @@ class TrainConfig:
     grad_compression: bool = False
     seed: int = 0
     straggler_factor: float = 3.0
+    # deterministic failure injection for the elastic-launcher tests:
+    # ``stop_at_step`` exits CLEANLY (rc 0) after that step WITHOUT
+    # reaching tc.steps — the clean-but-incomplete worker the launcher
+    # must count as a restart; ``crash_at_step`` hard-kills the process
+    # (os._exit(3) — no final sync save, the finally block never runs)
+    # right after that step's async checkpoint lands
+    stop_at_step: Optional[int] = None
+    crash_at_step: Optional[int] = None
 
 
 def train(cfg: ArchConfig, tc: TrainConfig):
@@ -105,6 +114,16 @@ def train(cfg: ArchConfig, tc: TrainConfig):
                 metrics_f.flush()
             if saver and step and step % tc.ckpt_every == 0:
                 saver.save_async(step, (params, opt_state), {"step": step})
+            if tc.crash_at_step is not None and step == tc.crash_at_step:
+                if saver:
+                    saver.wait()  # the published ckpt survives the crash
+                print(f"[train] simulated hard crash at step {step} "
+                      "(no final save)", flush=True)
+                os._exit(3)
+            if tc.stop_at_step is not None and step == tc.stop_at_step:
+                print(f"[train] clean early exit at step {step} "
+                      f"(before step {tc.steps - 1})", flush=True)
+                break
             if stop["now"]:
                 print(f"[train] preempted at step {step}; saving")
                 break

@@ -152,6 +152,21 @@ def test_serving_bench_smoke_rows():
             row["completed"] / row["submitted"], abs=1e-3)
         assert (row["completed"] + row["failed"] + row["cancelled"]
                 + row["timed_out"] + row["shed"]) == row["submitted"]
+    # ISSUE 10: crash-recovery rows — an uncontained crash and a hung
+    # step each cost exactly one supervised restart, goodput across the
+    # restart is total (zero lost handles), the journal reconciles
+    # exactly, and replayed results match the uninterrupted reference
+    specs = {r["fault_spec"].split("@")[0] for r in rep["recovery"]}
+    assert specs == {"crash", "hang"}
+    for row in rep["recovery"]:
+        assert row["engine"] == "recovery"
+        assert row["restarts"] >= 1 and row["replayed"] >= 1
+        assert row["mttr_s"] > 0.0 and row["wall_s"] >= row["mttr_s"]
+        assert row["goodput"] > 0.0 and row["lost_handles"] == 0
+        assert row["journal_exact"] is True
+        assert row["journal_submitted"] == row["journal_terminal"] == row["n"]
+        assert row["match_reference"] is True
+        assert row["restart_log"]
 
 
 def test_accel_sim_consumes_serving_bench_occupancy():
